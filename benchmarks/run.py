@@ -1,0 +1,266 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Wall-clock rows are measured
+on this host (CPU; 8 forced host devices in subprocess benches); derived
+rows are analytic or HLO-derived quantities that reproduce the paper's
+comparisons where real multi-GPU wall time is unavailable.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,table5]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.schedule_sim import (balanced_schedule, coverage_ok,
+                                     expected_speedup, idle_fraction,
+                                     ring_schedule)
+
+ROWS = []
+
+
+def row(name, us, derived=""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us},{derived}", flush=True)
+
+
+def _timeit(fn, iters=5):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------- figure 4
+
+def bench_fig4_load_balance():
+    """Paper Fig. 1/4 + Eq. 2: idle fractions and expected speedups of ring
+    vs balanced scheduling, from the schedule simulator (coverage-proved)."""
+    for P in (4, 7, 8, 16, 32):
+        rp, rb = ring_schedule(P)
+        bp, bb = balanced_schedule(P)
+        assert coverage_ok(rp, P) and coverage_ok(bp, P), P
+        row(f"fig4/ring_idle_P{P}", 0, f"{idle_fraction(rb, P):.4f}")
+        row(f"fig4/balanced_idle_P{P}", 0, f"{idle_fraction(bb, P):.4f}")
+        row(f"fig4/ring_speedup_P{P}", 0, f"{expected_speedup(rb, P):.2f}")
+        row(f"fig4/balanced_speedup_P{P}", 0,
+            f"{expected_speedup(bb, P):.2f}")
+    # paper's Eq.2 closed forms (even P)
+    for P in (8, 16):
+        row(f"fig4/eq2_theory_P{P}", 0, f"{1 / (2 * P):.4f}")
+
+
+# ---------------------------------------------------------------- table 5
+
+def bench_table5_checkpointing():
+    """Remat-aware vs HF checkpointing: wall-clock per train step (tiny
+    LLaMA-family model on CPU) + backward-pass HLO FLOPs ratio."""
+    from repro.core.config import (TrainConfig, get_config, smoke_config,
+                                   ShapeSpec)
+    from repro.data.pipeline import SyntheticTokens
+    from repro.models.transformer import Runtime, build_model
+    from repro.optim import adamw
+    from repro.parallel.sharding import make_parallel_config
+    from repro.train.step import make_train_step
+
+    cfg = smoke_config(get_config("llama-7b")).replace(n_layers=4)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeSpec("b5", 512, 2, "train")
+    results = {}
+    for remat in ("none", "hf", "remat_aware"):
+        par = make_parallel_config(mesh, shape, remat=remat)
+        model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        batch = SyntheticTokens(cfg, shape, par, mesh).batch(0)
+        step = jax.jit(make_train_step(model, TrainConfig()))
+        flops = step.lower(params, opt, batch).compile() \
+            .cost_analysis().get("flops", 0)
+
+        def run(step=step, params=params, opt=opt, batch=batch):
+            jax.block_until_ready(step(params, opt, batch))
+
+        us = _timeit(run, iters=3)
+        results[remat] = (us, flops)
+        row(f"table5/train_step_{remat}", f"{us:.0f}", f"flops={flops:.3e}")
+    hf_us, hf_f = results["hf"]
+    ra_us, ra_f = results["remat_aware"]
+    row("table5/speedup_remat_aware_vs_hf", 0, f"{hf_us / ra_us:.3f}x")
+    row("table5/flops_ratio_hf_over_remat_aware", 0, f"{hf_f / ra_f:.3f}")
+
+
+# ---------------------------------------------------------------- table 3
+
+def bench_table3_rsa():
+    """RSA vs DISTFLASHATTN: peak attention memory (compiled temp bytes)
+    and wall time, 8 host devices, seq-parallel attention only."""
+    code = """
+import time, jax, jax.numpy as jnp
+from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
+mesh = jax.make_mesh((1,8), ("data","model"))
+B,N,H,D = 1,4096,8,64
+ks = jax.random.split(jax.random.PRNGKey(0),3)
+q,k,v = (jax.random.normal(kk,(B,N,H,D),jnp.float32) for kk in ks)
+for sched in ("rsa","balanced"):
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, causal=True)
+    f = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=None)[0])
+    co = f.lower(q,k,v).compile()
+    mem = co.memory_analysis().temp_size_in_bytes
+    jax.block_until_ready(f(q,k,v))
+    t0=time.perf_counter()
+    for _ in range(3): jax.block_until_ready(f(q,k,v))
+    us=(time.perf_counter()-t0)/3*1e6
+    print(f"RESULT {sched} {us:.0f} {mem}")
+"""
+    out = _subproc(code)
+    vals = {}
+    for line in out.splitlines():
+        if line.startswith("RESULT"):
+            _, sched, us, mem = line.split()
+            vals[sched] = (float(us), int(mem))
+            row(f"table3/attn_fwd_{sched}_seq4k_8dev", f"{float(us):.0f}",
+                f"temp_bytes={mem}")
+    if len(vals) == 2:
+        row("table3/rsa_temp_bytes_ratio", 0,
+            f"{vals['rsa'][1] / max(vals['balanced'][1], 1):.2f}x")
+        row("table3/rsa_time_ratio", 0,
+            f"{vals['rsa'][0] / max(vals['balanced'][0], 1):.2f}x")
+
+
+# ---------------------------------------------------------------- table 4
+
+def bench_table4_ulysses():
+    """DISTFLASHATTN vs DeepSpeed-Ulysses: collective bytes per attention
+    layer from compiled HLO (8 host devices) + head-divisibility failures."""
+    code = """
+import jax, jax.numpy as jnp
+from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
+from repro.analysis.roofline import collective_stats
+mesh = jax.make_mesh((1,8), ("data","model"))
+B,N,D = 1,4096,64
+for name, H, Hkv, sched in [("balanced_mha",8,8,"balanced"),
+                            ("ulysses_mha",8,8,"ulysses"),
+                            ("balanced_gqa",8,2,"balanced")]:
+    ks = jax.random.split(jax.random.PRNGKey(0),3)
+    q = jax.random.normal(ks[0],(B,N,H,D)); k = jax.random.normal(ks[1],(B,N,Hkv,D)); v = jax.random.normal(ks[2],(B,N,Hkv,D))
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, causal=True)
+    f = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=None)[0])
+    txt = f.lower(q,k,v).compile().as_text()
+    st = collective_stats(txt)
+    print(f"RESULT {name} coll_bytes={st.total_bytes:.0f}")
+# irregular heads: ulysses must fail, balanced must work (paper 4.2/4.6)
+q = jax.random.normal(jax.random.PRNGKey(0),(B,N,33,32))
+spec = DistAttnSpec(axis="model", axis_size=8, schedule="ulysses", causal=True)
+try:
+    dist_attn_fwd(q,q,q,mesh=mesh,spec=spec,batch_axes=None)
+    print("RESULT ulysses_33h ok")
+except ValueError:
+    print("RESULT ulysses_33h infeasible_head_padding_required")
+spec = DistAttnSpec(axis="model", axis_size=8, schedule="balanced", causal=True)
+o,_ = jax.jit(lambda q: dist_attn_fwd(q,q,q,mesh=mesh,spec=spec,batch_axes=None))(q)
+print("RESULT balanced_33h ok_no_padding")
+"""
+    for line in _subproc(code).splitlines():
+        if line.startswith("RESULT"):
+            parts = line.split()
+            row(f"table4/{parts[1]}", 0, " ".join(parts[2:]))
+
+
+# ------------------------------------------------------------- appendix D
+
+def bench_appendixD_comm_volume():
+    """Analytic communication volume (paper App. D): DISTFLASHATTN 3Nd vs
+    Megatron-LM 14Nd (with remat recompute)."""
+    d = 4096
+    row("appD/distflashattn_comm_per_token", 0, f"{3 * d * 2}B (3Nd bf16)")
+    row("appD/megatron_remat_comm_per_token", 0, f"{14 * d * 2}B (14Nd)")
+    row("appD/reduction", 0, f"{14 / 3:.2f}x")
+
+
+# ---------------------------------------------------------------- table 2
+
+def bench_table2_max_seqlen():
+    """Max per-device sequence model (paper Table 2): LLaMA-nH ladder on
+    16×A100-40G. Sequence parallelism scales to all 16 devices regardless
+    of head count; Megatron TP is capped at `heads` (+ DP which does not
+    reduce per-sequence memory)."""
+    HBM = 40e9
+    devs = 16
+    for name, d, L, heads in [("16H", 2048, 64, 16), ("8H", 2048, 64, 8),
+                              ("4H", 2048, 64, 4), ("2H", 2048, 64, 2)]:
+        act_per_tok_layer = 2 * 2 * d + 4        # saved (x, o, lse) bf16
+        peak_layer = 18 * d * 2                   # live working set, 1 layer
+        per_tok = act_per_tok_layer * L + peak_layer * 4
+        ours = devs * (HBM * 0.6) / per_tok
+        tp = min(heads, devs)
+        meg = tp * (HBM * 0.6) / per_tok
+        row(f"table2/ours_max_seq_{name}", 0, f"{int(ours // 1024)}K")
+        row(f"table2/megatron_tp_dp_max_seq_{name}", 0,
+            f"{int(meg // 1024)}K")
+        row(f"table2/ratio_{name}", 0, f"{ours / meg:.1f}x")
+
+
+# --------------------------------------------------------------- roofline
+
+def bench_roofline_table():
+    """§Roofline: dump the dry-run table (if results/dryrun exists)."""
+    files = sorted(glob.glob(os.path.join(
+        os.path.dirname(__file__), "..", "results", "dryrun",
+        "pod1_*.json")))
+    for f in files:
+        d = json.load(open(f))
+        r = d.get("roofline", {})
+        adj = d.get("adjusted", {})
+        ur = adj.get("useful_flops_ratio")
+        row(f"roofline/{d['arch']}/{d['shape']}", 0,
+            f"bound={r.get('bound')} "
+            f"step_lb={r.get('step_s_lower_bound', 0):.4f}s "
+            f"C={r.get('compute_s', 0):.4f} M={r.get('memory_s', 0):.4f} "
+            f"K={r.get('collective_s', 0):.4f} "
+            f"useful={ur:.3f}" if ur else "pending")
+
+
+def _subproc(code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        print(r.stderr[-2000:], file=sys.stderr)
+    return r.stdout
+
+
+BENCHES = {
+    "fig4": bench_fig4_load_balance,
+    "table5": bench_table5_checkpointing,
+    "table3": bench_table3_rsa,
+    "table4": bench_table4_ulysses,
+    "table2": bench_table2_max_seqlen,
+    "appD": bench_appendixD_comm_volume,
+    "roofline": bench_roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Schedule simulator: per-worker logical workload of the ring vs the
+load-balanced schedule (paper Figure 1 / Figure 4 / Eq. 2).
+
+A pure-python model of who computes which (q-chunk, kv-chunk) pair at which
+step. Used both as a benchmark (idle fractions, expected speedups) and as a
+coverage proof (every causal pair computed exactly once — the property the
+SPMD masks in core/dist_attention implement).
+"""
+from __future__ import annotations
+
+
+def ring_schedule(P):
+    """steps -> list per step of set of busy workers; returns (work, steps).
+    Worker p (0-indexed) computes (p, p−t) at step t if p ≥ t."""
+    pairs = {}
+    busy = []
+    for t in range(0, P):
+        b = set()
+        for p in range(P):
+            if p >= t:
+                pairs.setdefault((p, p - t), []).append((t, p))
+                b.add(p)
+        busy.append(b)
+    return pairs, busy
+
+
+def balanced_schedule(P):
+    """Paper Alg. 2 (0-indexed). Returns (pairs, busy-sets per step)."""
+    pairs = {}
+    busy = []
+    # step 0: local causal chunk
+    pairs0 = {(p, p): [(0, p)] for p in range(P)}
+    pairs.update(pairs0)
+    busy.append(set(range(P)))
+    T = P // 2
+    for t in range(1, T + 1):
+        helpers_active = (t != T) or (P % 2 == 1)
+        b = set()
+        for p in range(P):
+            if p >= t:                      # worker path
+                pairs.setdefault((p, p - t), []).append((t, p))
+                b.add(p)
+            elif helpers_active:            # helper computes for w=(p−t)%P
+                w = (p - t) % P
+                pairs.setdefault((w, p), []).append((t, p))
+                b.add(p)
+        busy.append(b)
+    return pairs, busy
+
+
+def coverage_ok(pairs, P):
+    """Every causal (q, kv) pair computed exactly once."""
+    want = {(p, r) for p in range(P) for r in range(p + 1)}
+    got = set(pairs)
+    dup = [k for k, v in pairs.items() if len(v) != 1]
+    return got == want and not dup
+
+
+def idle_fraction(busy, P):
+    steps = len(busy)
+    total = steps * P
+    active = sum(len(b) for b in busy)
+    return (total - active) / total
+
+
+def expected_speedup(busy, P):
+    """Speedup over 1 worker doing all causal work, where each step costs
+    one chunk-attention unit (paper Fig. 4 analysis: total work P(P+1)/2
+    units; parallel time = #steps)."""
+    total_work = P * (P + 1) / 2
+    return total_work / len(busy)

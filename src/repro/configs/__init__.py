@@ -1,0 +1,2 @@
+"""Architecture registry: one module per assigned architecture (plus the
+paper's own LLaMA-7B evaluation variants). Select with ``--arch <id>``."""

@@ -1,0 +1,100 @@
+"""Chunk-attention API used by the distributed schedules.
+
+A *partial* attention op returns ``(o, lse)`` for one (q-chunk, kv-chunk)
+pair; partials merge exactly with :func:`merge` (the paper's ``rescale``).
+
+Key property exploited by the schedules (DESIGN.md §2): in the ring /
+balanced schedules, the mask of every step depends only on the **relative**
+offset between the q and kv chunks (0 for the local step, ``t·Tc`` for step
+``t``), which is static per step — so the Pallas kernels never need dynamic
+position scalars.
+
+``impl`` selects the backend:
+  * ``ref``               — pure-jnp oracle (CPU tests, dry-run lowering)
+  * ``pallas``            — TPU Pallas kernel (compiled)
+  * ``pallas_interpret``  — Pallas kernel body interpreted on CPU (tests)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import (NEG_INF, chunk_attn_ref, chunk_attn_bwd_ref,
+                               merge_ref)
+
+_IMPL = "ref"  # process-wide default; configs override per call
+
+
+def set_default_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("ref", "pallas", "pallas_interpret", "null"), impl
+    _IMPL = impl
+
+
+def chunk_attn(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
+               impl=None):
+    """Partial attention. ``rel_offset`` = absolute(q0) − absolute(kv0),
+    static per schedule step. Returns (o, lse)."""
+    impl = impl or _IMPL
+    if impl == "ref":
+        return chunk_attn_ref(q, k, v, causal=causal, q_offset=rel_offset,
+                              kv_offset=0, window=window, scale=scale)
+    if impl == "null":
+        # dry-run cost-isolation stub: shape-correct, data-dependent (so XLA
+        # cannot fold it away), but O(T) instead of O(T²). Used to isolate
+        # the attention kernel's contribution from the rest of the model;
+        # the kernel's ideal FLOPs/bytes are then added analytically
+        # (analysis/roofline.attention_sites).
+        B, Tq, Hq, _ = q.shape
+        vm = jnp.mean(v.astype(jnp.float32), axis=(1, 2), keepdims=True)
+        o = jnp.broadcast_to(vm, (B, Tq, Hq, v.shape[-1])).astype(q.dtype)
+        o = o + 0.0 * q[..., :1] * jnp.mean(k)
+        lse = jnp.mean(q.astype(jnp.float32), axis=-1)
+        return o, lse
+    from repro.kernels import ops
+    return ops.flash_fwd(q, k, v, causal=causal, rel_offset=rel_offset,
+                         window=window, scale=scale,
+                         interpret=(impl == "pallas_interpret"))
+
+
+def chunk_attn_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0,
+                   window=0, scale=None, impl=None, delta=None):
+    """FA2 backward for one chunk using the saved (o, lse) — no forward
+    recompute. ``delta = rowsum(o⊙do)`` may be precomputed (the distributed
+    helper path ships delta instead of o). Returns (dq, dk, dv)."""
+    impl = impl or _IMPL
+    if impl == "ref":
+        return chunk_attn_bwd_ref(q, k, v, o, lse, do, causal=causal,
+                                  q_offset=rel_offset, kv_offset=0,
+                                  window=window, scale=scale, delta=delta)
+    if impl == "null":
+        s_do = jnp.mean(do.astype(jnp.float32))
+        dq = (q.astype(jnp.float32) * 0.0 + s_do).astype(q.dtype)
+        dk = (k.astype(jnp.float32) * 0.0 + s_do).astype(k.dtype)
+        dv = (v.astype(jnp.float32) * 0.0 + s_do).astype(v.dtype)
+        return dq, dk, dv
+    from repro.kernels import ops
+    return ops.flash_bwd(q, k, v, o, lse, do, causal=causal,
+                         rel_offset=rel_offset, window=window, scale=scale,
+                         interpret=(impl == "pallas_interpret"), delta=delta)
+
+
+merge = merge_ref  # (o1, lse1, o2, lse2) -> (o, lse)
+
+
+def empty_partial(q):
+    """Identity element of ``merge`` for a query chunk."""
+    B, T, H, _ = q.shape
+    o = jnp.zeros(q.shape, q.dtype)
+    lse = jnp.full((B, T, H), NEG_INF, jnp.float32)
+    return o, lse
+
+
+def mask_partial(pred, o, lse):
+    """Nullify a partial result where ``pred`` is False (e.g. on devices for
+    which a schedule step is invalid). pred is a scalar bool."""
+    o = jnp.where(pred, o, jnp.zeros_like(o))
+    lse = jnp.where(pred, lse, jnp.full_like(lse, NEG_INF))
+    return o, lse

@@ -1,0 +1,280 @@
+"""Configuration system for the DISTFLASHATTN reproduction framework.
+
+Every architecture from the assignment pool is expressed as a
+:class:`ModelConfig`; input shapes as :class:`ShapeSpec`. Configs are plain
+frozen dataclasses so they hash, print, and serialize cleanly and can be
+used as jit static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    """Attention-block configuration (dense / GQA / MLA)."""
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False           # Qwen2-style bias on q,k,v projections
+    qk_norm: bool = False            # Qwen3-style RMSNorm on q,k heads
+    rope_theta: float = 10_000.0
+    # --- MLA (DeepSeek multi-head latent attention) ---
+    kv_lora_rank: int = 0            # 0 => standard GQA path
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 0        # decoupled rope key dim (MLA only)
+    v_head_dim: int = 0              # MLA value head dim (defaults head_dim)
+    # --- windowing (paper Appendix F; used for long-context decode) ---
+    window: int = 0                  # 0 => full causal attention
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora_rank > 0
+
+    @property
+    def qk_nope_head_dim(self) -> int:
+        return self.head_dim  # MLA: non-rope part of the query/key head
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int                    # routed experts
+    n_shared: int                    # shared (always-on) experts
+    top_k: int
+    d_expert: int                    # per-expert FFN hidden size
+    d_dense_ff: int                  # FFN size of the leading dense layers
+    n_dense_layers: int = 1          # leading layers that use a dense FFN
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.001
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD, arXiv:2405.21060)."""
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128                 # SSD intra-chunk block length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (Zamba2): a shared attention block every `hybrid_period` layers
+    hybrid_period: int = 0
+    # enc-dec (Whisper): encoder layers & fixed frame count (stub frontend)
+    n_enc_layers: int = 0
+    n_audio_frames: int = 0
+    # VLM: number of stub patch-embedding tokens prepended to the text
+    n_image_tokens: int = 0
+    # DeepSeek-V3 multi-token prediction depth (extra MTP modules)
+    mtp_depth: int = 0
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    citation: str = ""
+    dtype: str = "bfloat16"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.arch_type != "ssm"
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: shared + top_k routed)."""
+        return _param_count(self, active_only=True)
+
+
+def _attn_params(c: ModelConfig) -> int:
+    a = c.attn
+    if a is None:
+        return 0
+    d = c.d_model
+    if a.is_mla:
+        vh = a.v_head_dim or a.head_dim
+        q_in = (d * a.q_lora_rank + a.q_lora_rank *
+                a.n_heads * (a.qk_nope_head_dim + a.qk_rope_head_dim)) \
+            if a.q_lora_rank else d * a.n_heads * (a.qk_nope_head_dim + a.qk_rope_head_dim)
+        kv_in = d * (a.kv_lora_rank + a.qk_rope_head_dim)
+        kv_up = a.kv_lora_rank * a.n_heads * (a.qk_nope_head_dim + vh)
+        out = a.n_heads * vh * d
+        return q_in + kv_in + kv_up + out
+    hd = a.head_dim
+    return d * (a.n_heads * hd + 2 * a.n_kv_heads * hd) + a.n_heads * hd * d
+
+
+def _ffn_params(d_model: int, d_ff: int) -> int:
+    return 3 * d_model * d_ff        # SwiGLU: gate, up, down
+
+
+def _ssm_params(c: ModelConfig) -> int:
+    s = c.ssm
+    di = s.d_inner(c.d_model)
+    nh = s.n_heads(c.d_model)
+    # in_proj: [z, x, B, C, dt] ; out_proj
+    zxbcdt = 2 * di + 2 * s.d_state + nh
+    return c.d_model * zxbcdt + di * c.d_model + s.d_conv * (di + 2 * s.d_state)
+
+
+def _param_count(c: ModelConfig, active_only: bool = False) -> int:
+    n = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+    if c.arch_type == "ssm":
+        n += c.n_layers * _ssm_params(c)
+        return n
+    if c.arch_type == "hybrid":
+        n += c.n_layers * _ssm_params(c)
+        n_shared_blocks = 1
+        a = c.attn
+        d2 = 2 * c.d_model
+        shared = d2 * 3 * a.n_heads * a.head_dim + a.n_heads * a.head_dim * d2 \
+            + _ffn_params(d2, c.d_ff) + d2 * c.d_model
+        n += n_shared_blocks * shared
+        return n
+    per_layer_attn = _attn_params(c)
+    if c.moe is not None:
+        m = c.moe
+        dense = _ffn_params(c.d_model, m.d_dense_ff)
+        shared = m.n_shared * _ffn_params(c.d_model, m.d_expert)
+        routed_total = m.n_routed * _ffn_params(c.d_model, m.d_expert)
+        routed_active = m.top_k * _ffn_params(c.d_model, m.d_expert)
+        router = c.d_model * m.n_routed
+        n_moe_layers = c.n_layers - m.n_dense_layers
+        n += c.n_layers * per_layer_attn + m.n_dense_layers * dense
+        n += n_moe_layers * (shared + router +
+                             (routed_active if active_only else routed_total))
+        return n
+    n_layers = c.n_layers + c.n_enc_layers
+    n += n_layers * (per_layer_attn + _ffn_params(c.d_model, c.d_ff))
+    if c.n_enc_layers:   # whisper decoder cross-attention
+        n += c.n_layers * per_layer_attn
+    return n
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k":    ShapeSpec("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeSpec("long_500k",   524_288, 1,   "decode"),
+}
+
+ARCH_IDS = (
+    "smollm-360m", "mamba2-2.7b", "qwen2.5-14b", "qwen3-8b", "internvl2-2b",
+    "deepseek-v2-lite-16b", "whisper-tiny", "deepseek-v3-671b",
+    "qwen1.5-32b", "zamba2-2.7b",
+)
+
+# paper's own evaluation models (§4: LLaMA-7B and variants)
+PAPER_ARCH_IDS = ("llama-7b", "llama-gqa", "llama-33h", "llama-16h")
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Load ``src/repro/configs/<arch>.py`` and return its CONFIG."""
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How the mesh axes are used for a given run."""
+    batch_axes: Tuple[str, ...] = ("data",)       # + "pod" when multi-pod
+    seq_axis: str = "model"
+    extra_seq_axes: Tuple[str, ...] = ()          # 2D sequence sharding
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    schedule: str = "balanced"                    # balanced | ring | rsa
+    remat: str = "remat_aware"                    # remat_aware | hf | none
+
+    @property
+    def seq_axes(self) -> Tuple[str, ...]:
+        return tuple(self.extra_seq_axes) + (self.seq_axis,)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    max_grad_norm: float = 1.0
+    seed: int = 0
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced variant of the same family for CPU smoke tests:
+    2 layers, d_model ≤ 512, ≤ 4 experts (assignment requirement)."""
+    kw = dict(n_layers=2, vocab=512, dtype="float32")
+    if cfg.attn is not None:
+        a = cfg.attn
+        g = max(1, a.n_heads // max(a.n_kv_heads, 1))
+        n_heads = 4
+        head_dim = 32
+        if cfg.arch_type == "hybrid":
+            head_dim = 2 * 64 // n_heads * 2  # keep n_heads·hd == 2·d_model
+        kw["attn"] = dataclasses.replace(
+            a, n_heads=n_heads, n_kv_heads=max(1, n_heads // g), head_dim=head_dim,
+            kv_lora_rank=32 if a.kv_lora_rank else 0,
+            q_lora_rank=32 if a.q_lora_rank else 0,
+            qk_rope_head_dim=16 if a.qk_rope_head_dim else 0,
+            v_head_dim=32 if a.v_head_dim else 0)
+    if cfg.arch_type == "hybrid":
+        kw["d_model"] = 64
+        kw["attn"] = dataclasses.replace(kw["attn"], head_dim=32,
+                                         n_kv_heads=4)  # 4·32 == 2·64
+        kw["hybrid_period"] = 1
+        kw["d_ff"] = 128
+    elif cfg.attn is not None:
+        kw["d_model"] = n_heads * 32
+        kw["d_ff"] = 256
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=8,
+                                        chunk=16)
+        if cfg.arch_type == "ssm":
+            kw["d_model"] = 64
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_routed=4, n_shared=min(cfg.moe.n_shared, 1),
+            top_k=2, d_expert=64, d_dense_ff=128, n_dense_layers=1,
+            capacity_factor=4.0)
+    if cfg.n_enc_layers:
+        kw["n_enc_layers"] = 2
+        kw["n_audio_frames"] = 64
+    if cfg.n_image_tokens:
+        kw["n_image_tokens"] = 16
+    return dataclasses.replace(cfg, **kw)

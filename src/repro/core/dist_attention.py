@@ -1,0 +1,691 @@
+"""DISTFLASHATTN — the paper's core contribution, as JAX shard_map code.
+
+Sequence-parallel exact attention over the ``model`` mesh axis (the paper's
+``P`` workers). Three schedules:
+
+* ``balanced`` — the paper's load-balanced schedule (§3.2, Alg. 2):
+  ``⌊P/2⌋`` ring steps; workers with unfinished causal work compute
+  ``attn(q_p, kv_{p−t})`` while *helpers* (workers whose causal prefix is
+  done) compute ``attn(q_{(h−t) mod P}, kv_h)`` on behalf of heavy workers
+  and ship the partial ``(o, lse)`` back for a ``rescale`` merge. Idle
+  fraction ``1/(2P)`` (even P) / ``0`` (odd P).
+* ``ring`` — vanilla DISTFLASHATTN (§3.1, Alg. 1): ``P−1`` steps, workers
+  idle once their causal prefix is exhausted (idle fraction → 1/2). Also
+  used for bidirectional encoders (where causal imbalance doesn't exist —
+  paper §F discussion) and for the sliding-window variant (Appendix F:
+  "change the end condition of the for loop").
+* ``rsa`` — Ring Self-Attention baseline (Li et al., 2021): all-gathers
+  K and V and materializes the full score matrix (no memory-efficient
+  attention). Benchmark baseline only.
+
+Communication/computation overlap (§3.2, Eq. 3) is expressed in dataflow:
+the ``ppermute`` producing step ``t+1``'s chunk is issued *before* step
+``t``'s compute and has no data dependence on it, so XLA's latency-hiding
+scheduler overlaps the ICI transfer with the attention kernel (the TPU
+analogue of the paper's second CUDA stream).
+
+The backward pass is hand-written (exposed as :func:`dist_attn_bwd`) so the
+rematerialization-aware checkpointing combinator (core/remat.py) can invoke
+it directly from saved ``(o, lse)`` — the FlashAttention forward is never
+recomputed, and neither is its forward communication (§3.3).
+
+All functions here are *local* (per-shard) code meant to run inside
+``jax.shard_map``; :func:`dist_flash_attn` is the user-facing wrapper that
+applies shard_map and registers the custom VJP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.attention import (chunk_attn, chunk_attn_bwd, empty_partial,
+                                  mask_partial, merge)
+from repro.kernels.ref import NEG_INF
+
+
+# --------------------------------------------------------------------------
+# Schedule configuration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistAttnSpec:
+    """Static description of one distributed-attention call site."""
+    axis: str = "model"            # sequence-parallel mesh axis
+    axis_size: int = 1             # P
+    schedule: str = "balanced"     # balanced | ring | rsa
+    causal: bool = True
+    window: int = 0                # sliding window (tokens); ring only
+    scale: Optional[float] = None
+    impl: Optional[str] = None     # attention backend override
+
+
+def _shift(x, axis, shift, size):
+    """ppermute by a fixed shift: device p receives from (p − shift) mod P."""
+    perm = [(i, (i + shift) % size) for i in range(size)]
+    return jax.tree.map(lambda a: lax.ppermute(a, axis, perm), x)
+
+
+def _ring_steps(spec: DistAttnSpec, chunk_len: int) -> int:
+    """Number of ring steps; truncated by the sliding window (Appendix F)."""
+    P_ = spec.axis_size
+    n = P_ - 1
+    if spec.window and spec.window > 0:
+        # step t covers query-key distances [(t-1)*Tc+1, (t+1)*Tc-1];
+        # it contributes only if the smallest distance is inside the window.
+        n = min(n, max(0, -(-(spec.window - 1) // chunk_len)))
+    return n
+
+
+# --------------------------------------------------------------------------
+# Forward schedules (local/per-shard code)
+# --------------------------------------------------------------------------
+
+def _fwd_ring(spec, q, k, v):
+    """Vanilla ring (Alg. 1) — causal, bidirectional, or windowed."""
+    p = lax.axis_index(spec.axis)
+    P_, Tc = spec.axis_size, q.shape[1]
+    o, s = chunk_attn(q, k, v, causal=spec.causal, rel_offset=0,
+                      window=spec.window, scale=spec.scale, impl=spec.impl)
+    n = _ring_steps(spec, Tc)
+    if n == 0:
+        return o, s
+    kv = _shift((k, v), spec.axis, 1, P_)            # prefetch step 1
+    for t in range(1, n + 1):
+        kv_next = _shift(kv, spec.axis, 1, P_) if t < n else None  # overlap
+        rel = t * Tc
+        o_t, s_t = chunk_attn(q, kv[0], kv[1], causal=False, rel_offset=rel,
+                              window=spec.window, scale=spec.scale,
+                              impl=spec.impl)
+        if spec.causal:
+            o_t, s_t = mask_partial(p >= t, o_t, s_t)
+        o, s = merge(o, s, o_t, s_t)
+        kv = kv_next
+    return o, s
+
+
+def _fwd_balanced(spec, q, k, v):
+    """Load-balanced schedule (Alg. 2). Causal only, full window."""
+    assert spec.causal and not spec.window, "balanced schedule is causal/full"
+    p = lax.axis_index(spec.axis)
+    P_, Tc = spec.axis_size, q.shape[1]
+    o, s = chunk_attn(q, k, v, causal=True, scale=spec.scale, impl=spec.impl)
+    if P_ == 1:
+        return o, s
+    T = P_ // 2
+    kv = _shift((k, v), spec.axis, 1, P_)            # prefetch step 1
+    qb = _shift(q, spec.axis, 1, P_)
+    for t in range(1, T + 1):
+        helpers = (t != T) or (P_ % 2 == 1)
+        if t < T:                                     # prefetch step t+1
+            kv_next = _shift(kv, spec.axis, 1, P_)
+            qb_next = _shift(qb, spec.axis, 1, P_)
+        is_worker = p >= t
+        # one attn kernel per device per step: workers use (q_p, kv_{p−t}),
+        # helpers use (q_{(p−t) mod P}, kv_p). No mask — strictly causal pairs.
+        q_sel = jnp.where(is_worker, q, qb)
+        k_sel = jnp.where(is_worker, kv[0], k)
+        v_sel = jnp.where(is_worker, kv[1], v)
+        o_t, s_t = chunk_attn(q_sel, k_sel, v_sel, causal=False,
+                              scale=spec.scale, impl=spec.impl)
+        o_w, s_w = mask_partial(is_worker, o_t, s_t)
+        o, s = merge(o, s, o_w, s_w)
+        if helpers:
+            # helper h computed for worker w=(h−t) mod P: route (o,lse) back
+            o_r, s_r = _shift((o_t, s_t), spec.axis, -t, P_)
+            o_r, s_r = mask_partial(p >= P_ - t, o_r, s_r)
+            o, s = merge(o, s, o_r, s_r)
+        if t < T:
+            kv, qb = kv_next, qb_next
+    return o, s
+
+
+def _fwd_ulysses(spec, q, k, v):
+    """DeepSpeed-Ulysses baseline (Jacobs et al., 2023): all-to-all the
+    sequence-sharded q/k/v into head-sharded layout, run ordinary (local)
+    FlashAttention over the full sequence, all-to-all back. Requires the
+    head counts to be divisible by P — exactly the limitation the paper
+    targets (§4.2, §4.6); we raise otherwise (Megatron would pad heads)."""
+    P_ = spec.axis_size
+    Hq, Hkv = q.shape[2], k.shape[2]
+    if Hq % P_ or Hkv % P_:
+        raise ValueError(
+            f"ulysses needs heads % P == 0 (got Hq={Hq}, Hkv={Hkv}, P={P_})"
+            " — the head-divisibility limitation of head-parallel attention")
+    def a2a(x, fwd=True):
+        if fwd:   # scatter heads, gather sequence
+            return lax.all_to_all(x, spec.axis, split_axis=2, concat_axis=1,
+                                  tiled=True)
+        return lax.all_to_all(x, spec.axis, split_axis=1, concat_axis=2,
+                              tiled=True)
+    qh, kh, vh = a2a(q), a2a(k), a2a(v)          # (B, T_glob, H/P, D)
+    o, s = chunk_attn(qh, kh, vh, causal=spec.causal, window=spec.window,
+                      scale=spec.scale, impl=spec.impl)
+    # lse (B, T_glob, H/P) -> (B, T_loc, H): split seq, concat heads
+    s_back = lax.all_to_all(s, spec.axis, split_axis=1, concat_axis=2,
+                            tiled=True)
+    return a2a(o, fwd=False), s_back
+
+
+def _fwd_rsa(spec, q, k, v):
+    """Ring Self-Attention baseline: all-gather KV, materialize scores."""
+    kg = lax.all_gather(k, spec.axis, axis=1, tiled=True)
+    vg = lax.all_gather(v, spec.axis, axis=1, tiled=True)
+    p = lax.axis_index(spec.axis)
+    Tc = q.shape[1]
+    B, Tq, Hq, D = q.shape
+    Hkv = kg.shape[2]
+    g = Hq // Hkv
+    scale = spec.scale or 1.0 / (D ** 0.5)
+    kf = jnp.repeat(kg, g, axis=2) if g > 1 else kg
+    vf = jnp.repeat(vg, g, axis=2) if g > 1 else vg
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    kf.astype(jnp.float32)) * scale
+    if spec.causal:
+        qpos = p * Tc + jnp.arange(Tq)
+        kpos = jnp.arange(kg.shape[1])
+        sc = jnp.where((kpos[None, :] <= qpos[:, None])[None, None],
+                       sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)                  # full P×-size matrix
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vf.astype(jnp.float32))
+    lse = jax.scipy.special.logsumexp(sc, axis=-1).transpose(0, 2, 1)
+    return o.astype(q.dtype), lse
+
+
+# --------------------------------------------------------------------------
+# Backward schedules (explicit; used by remat-aware checkpointing)
+# --------------------------------------------------------------------------
+
+def _bwd_ring(spec, q, k, v, o, s, do):
+    p = lax.axis_index(spec.axis)
+    P_, Tc = spec.axis_size, q.shape[1]
+    f32 = jnp.float32
+    delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)  # (B,T,H)
+    dq_l, dk_l, dv_l = chunk_attn_bwd(
+        q, k, v, o, s, do, causal=spec.causal, rel_offset=0,
+        window=spec.window, scale=spec.scale, impl=spec.impl)
+    dq = dq_l.astype(f32)
+    dkv_home = (dk_l.astype(f32), dv_l.astype(f32))
+    n = _ring_steps(spec, Tc)
+    if n == 0:
+        return dq.astype(q.dtype), dkv_home[0].astype(k.dtype), \
+            dkv_home[1].astype(v.dtype)
+    # containers: (k, v) data + (dk, dv) accumulators travel together
+    kv = _shift((k, v), spec.axis, 1, P_)
+    dkv = jax.tree.map(lambda a: jnp.zeros(a.shape, f32), kv)
+    for t in range(1, n + 1):
+        if t < n:                                     # prefetch data (overlap)
+            kv_nxt = _shift(kv, spec.axis, 1, P_)
+        rel = t * Tc
+        dq_t, dk_t, dv_t = chunk_attn_bwd(
+            q, kv[0], kv[1], o, s, do, causal=False, rel_offset=rel,
+            window=spec.window, scale=spec.scale, impl=spec.impl,
+            delta=delta)
+        valid = (p >= t) if spec.causal else jnp.bool_(True)
+        w = valid.astype(f32)
+        dq = dq + dq_t.astype(f32) * w
+        dkv = (dkv[0] + dk_t.astype(f32) * w, dkv[1] + dv_t.astype(f32) * w)
+        if t < n:                                     # accumulators move late
+            kv = kv_nxt
+            dkv = _shift(dkv, spec.axis, 1, P_)
+    # route accumulated dkv home: container at p holds chunk (p−n) mod P
+    dkv = _shift(dkv, spec.axis, -n, P_)
+    dk = dkv_home[0] + dkv[0]
+    dv = dkv_home[1] + dkv[1]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _bwd_balanced(spec, q, k, v, o, s, do):
+    p = lax.axis_index(spec.axis)
+    P_, Tc = spec.axis_size, q.shape[1]
+    f32 = jnp.float32
+    dq_l, dk_l, dv_l = chunk_attn_bwd(q, k, v, o, s, do, causal=True,
+                                      scale=spec.scale, impl=spec.impl)
+    dq = dq_l.astype(f32)
+    dk_home = dk_l.astype(f32)
+    dv_home = dv_l.astype(f32)
+    if P_ == 1:
+        return dq.astype(q.dtype), dk_home.astype(k.dtype), \
+            dv_home.astype(v.dtype)
+    T = P_ // 2
+    delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)
+    # traveling containers (ring +1): kv side and q-bundle side
+    kv = _shift((k, v), spec.axis, 1, P_)
+    dkv = (jnp.zeros(k.shape, f32), jnp.zeros(v.shape, f32))
+    qb = _shift((q, do, s, delta), spec.axis, 1, P_)
+    dqb = jnp.zeros(q.shape, f32)
+    for t in range(1, T + 1):
+        helpers = (t != T) or (P_ % 2 == 1)
+        if t < T:                                     # prefetch data (overlap)
+            kv_nxt = _shift(kv, spec.axis, 1, P_)
+            qb_nxt = _shift(qb, spec.axis, 1, P_)
+        is_worker = p >= t
+        q_sel = jnp.where(is_worker, q, qb[0])
+        do_sel = jnp.where(is_worker, do, qb[1])
+        s_sel = jnp.where(is_worker, s, qb[2])
+        k_sel = jnp.where(is_worker, kv[0], k)
+        v_sel = jnp.where(is_worker, kv[1], v)
+        o_unused = jnp.zeros_like(q_sel)  # delta passed explicitly
+        d_sel = jnp.where(is_worker, delta, qb[3])
+        dq_t, dk_t, dv_t = chunk_attn_bwd(
+            q_sel, k_sel, v_sel, o_unused, s_sel, do_sel, causal=False,
+            scale=spec.scale, impl=spec.impl, delta=d_sel)
+        w_w = is_worker.astype(f32)
+        dq = dq + dq_t.astype(f32) * w_w                 # worker: local dq
+        dkv = (dkv[0] + dk_t.astype(f32) * w_w,          # worker: traveling dkv
+               dkv[1] + dv_t.astype(f32) * w_w)
+        if helpers:
+            w_h = (p < t).astype(f32)
+            dqb = dqb + dq_t.astype(f32) * w_h           # helper: traveling dq
+            dk_home = dk_home + dk_t.astype(f32) * w_h   # helper: local dkv
+            dv_home = dv_home + dv_t.astype(f32) * w_h
+        if t < T:                                     # accumulators move late
+            kv, qb = kv_nxt, qb_nxt
+            dkv = _shift(dkv, spec.axis, 1, P_)
+            dqb = _shift(dqb, spec.axis, 1, P_)
+    # route containers home (container at p holds chunk (p−T) mod P)
+    dkv = _shift(dkv, spec.axis, -T, P_)
+    dqb = _shift(dqb, spec.axis, -T, P_)
+    dq = dq + dqb
+    dk = dk_home + dkv[0]
+    dv = dv_home + dkv[1]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# Public API: explicit fwd/bwd + custom-VJP wrapper, shard_mapped
+# --------------------------------------------------------------------------
+
+def _fwd_local(spec, q, k, v):
+    if spec.axis_size == 1:
+        return chunk_attn(q, k, v, causal=spec.causal, window=spec.window,
+                          scale=spec.scale, impl=spec.impl)
+    if spec.schedule == "balanced" and spec.causal and not spec.window:
+        return _fwd_balanced(spec, q, k, v)
+    if spec.schedule == "zigzag" and spec.causal and not spec.window:
+        return _fwd_zigzag(spec, q, k, v)
+    if spec.schedule == "rsa":
+        return _fwd_rsa(spec, q, k, v)
+    if spec.schedule == "ulysses":
+        return _fwd_ulysses(spec, q, k, v)
+    return _fwd_ring(spec, q, k, v)
+
+
+def _bwd_local(spec, q, k, v, o, s, do):
+    if spec.axis_size == 1:
+        return chunk_attn_bwd(q, k, v, o, s, do, causal=spec.causal,
+                              window=spec.window, scale=spec.scale,
+                              impl=spec.impl)
+    if spec.schedule == "balanced" and spec.causal and not spec.window:
+        return _bwd_balanced(spec, q, k, v, o, s, do)
+    if spec.schedule == "zigzag" and spec.causal and not spec.window:
+        return _bwd_zigzag(spec, q, k, v, o, s, do)
+    return _bwd_ring(spec, q, k, v, o, s, do)
+
+
+def _specs(batch_axes, seq_axis):
+    b = tuple(batch_axes) if batch_axes else None
+    qkv = P(b, seq_axis, None, None)
+    lse = P(b, seq_axis, None)
+    return qkv, lse
+
+
+def dist_attn_fwd(q, k, v, *, mesh, spec: DistAttnSpec,
+                  batch_axes=("data",)):
+    """Distributed forward → (o, lse). Global-array in/out (GSPMD land)."""
+    qkv_s, lse_s = _specs(batch_axes, spec.axis)
+    fn = jax.shard_map(partial(_fwd_local, spec), mesh=mesh,
+                       in_specs=(qkv_s, qkv_s, qkv_s),
+                       out_specs=(qkv_s, lse_s), check_vma=False)
+    return fn(q, k, v)
+
+
+def dist_attn_bwd(q, k, v, o, lse, do, *, mesh, spec: DistAttnSpec,
+                  batch_axes=("data",)):
+    """Distributed backward from saved (o, lse) → (dq, dk, dv)."""
+    qkv_s, lse_s = _specs(batch_axes, spec.axis)
+    fn = jax.shard_map(partial(_bwd_local, spec), mesh=mesh,
+                       in_specs=(qkv_s, qkv_s, qkv_s, qkv_s, lse_s, qkv_s),
+                       out_specs=(qkv_s, qkv_s, qkv_s), check_vma=False)
+    return fn(q, k, v, o, lse, do)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def dist_flash_attn(q, k, v, mesh, spec, batch_axes=("data",)):
+    """DISTFLASHATTN with autodiff. Returns (o, lse); lse is a residual
+    output (its cotangent is ignored, as in the paper's kernel)."""
+    return dist_attn_fwd(q, k, v, mesh=mesh, spec=spec,
+                         batch_axes=batch_axes)
+
+
+def _cvjp_fwd(q, k, v, mesh, spec, batch_axes):
+    o, lse = dist_attn_fwd(q, k, v, mesh=mesh, spec=spec,
+                           batch_axes=batch_axes)
+    return (o, lse), (q, k, v, o, lse)
+
+
+def _cvjp_bwd(mesh, spec, batch_axes, res, cts):
+    q, k, v, o, lse = res
+    do, _ = cts
+    dq, dk, dv = dist_attn_bwd(q, k, v, o, lse, do, mesh=mesh, spec=spec,
+                               batch_axes=batch_axes)
+    return dq, dk, dv
+
+
+dist_flash_attn.defvjp(_cvjp_fwd, _cvjp_bwd)
+
+
+# --------------------------------------------------------------------------
+# Decode-time distributed attention (flash-decoding over sequence shards)
+# --------------------------------------------------------------------------
+
+def _decode_local(seq_axes, shard_len, window, scale, q, kc, vc, k1, v1):
+    """q: (B,1,Hq,D) replicated over seq axes; kc/vc: (B,S_loc,Hkv,Dk/Dv)
+    local cache shards; k1/v1: (B,1,...) the new token's k/v (replicated).
+    Total context = S_global cached + 1 new token at position S_global."""
+    # linearized shard index over (possibly multiple) sequence axes
+    idx = jnp.int32(0)
+    for ax in seq_axes:
+        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+    n_shards = 1
+    for ax in seq_axes:
+        n_shards *= lax.axis_size(ax)
+    S_total = n_shards * shard_len
+    offset = idx * shard_len
+    B, _, Hq, Dq = q.shape
+    Hkv = kc.shape[2]
+    g = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / (Dq ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(kc, g, axis=2) if g > 1 else kc
+    vf = jnp.repeat(vc, g, axis=2) if g > 1 else vc
+    s_loc = jnp.einsum("bqhd,bkhd->bhqk", qf, kf.astype(jnp.float32)) * sc
+    if window and window > 0:
+        # new token position = S_total; attendable cache: pos > S_total−window
+        kpos = offset + jnp.arange(shard_len)
+        ok = kpos[None, None, None, :] > S_total - window
+        s_loc = jnp.where(ok, s_loc, NEG_INF)
+    m_loc = jnp.max(s_loc, axis=-1)                      # (B,H,1)
+    m_glb = lax.pmax(m_loc, seq_axes)
+    m_safe = jnp.maximum(m_glb, NEG_INF / 2)
+    p_loc = jnp.exp(s_loc - m_safe[..., None])
+    p_loc = jnp.where(m_loc[..., None] <= NEG_INF / 2,
+                      jnp.zeros_like(p_loc), p_loc)
+    num = jnp.einsum("bhqk,bkhd->bhqd", p_loc, vf.astype(jnp.float32))
+    den = jnp.sum(p_loc, axis=-1)                        # (B,H,1)
+    num = lax.psum(num, seq_axes)
+    den = lax.psum(den, seq_axes)
+    lse_c = jnp.where(den == 0.0, NEG_INF, m_safe + jnp.log(
+        jnp.where(den == 0.0, 1.0, den)))                # (B,H,1) cache lse
+    o_c = num / jnp.where(den == 0.0, 1.0, den)[..., None]
+    o_c = jnp.where((den == 0.0)[..., None], 0.0, o_c)
+    # merge with the new token's self-attention (replicated, added once —
+    # after the cross-shard psum so it isn't multiply counted)
+    k1r = jnp.repeat(k1, g, axis=2) if g > 1 else k1
+    v1r = jnp.repeat(v1, g, axis=2) if g > 1 else v1
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", qf, k1r.astype(jnp.float32)) * sc
+    lse1 = s1[..., 0]                                    # (B,H,1): one key
+    o1 = v1r.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B,Hq,1,Dv)
+    o_m, _ = _merge_bh(o_c, lse_c, o1, lse1)
+    return o_m.transpose(0, 2, 1, 3).astype(q.dtype)     # (B,1,Hq,Dv)
+
+
+def _merge_bh(o1, lse1, o2, lse2):
+    """merge in (B,H,1,D)/(B,H,1) layout."""
+    mx = jnp.maximum(jnp.maximum(lse1, lse2), NEG_INF)
+    w1 = jnp.exp(lse1 - mx)
+    w2 = jnp.exp(lse2 - mx)
+    den = w1 + w2
+    den_s = jnp.where(den == 0.0, 1.0, den)
+    o = (o1 * w1[..., None] + o2 * w2[..., None]) / den_s[..., None]
+    return o, mx + jnp.log(den_s)
+
+
+def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
+                     seq_axes=("model",), batch_axes=("data",), window=0,
+                     scale=None, shard_len=None):
+    """One-token decode against a sequence-sharded KV cache.
+
+    The cache's sequence dim is sharded over ``seq_axes`` (supports the 2D
+    (data, model) sharding used by long_500k); the query and the new token's
+    k/v are replicated across them. Exact lse-weighted combine across shards
+    (distributed flash-decoding), then a final merge with the new token's
+    self-attention.
+    """
+    n = 1
+    for ax in seq_axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+    if shard_len is None:
+        shard_len = k_cache.shape[1] // n
+    b = tuple(batch_axes) if batch_axes else None
+    seq = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+    rep = P(b, None, None, None)
+    shd = P(b, seq, None, None)
+    fn = jax.shard_map(
+        partial(_decode_local, tuple(seq_axes), shard_len, window, scale),
+        mesh=mesh,
+        in_specs=(rep, shd, shd, rep, rep),
+        out_specs=rep, check_vma=False)
+    return fn(q, k_cache, v_cache, k_new, v_new)
+
+
+# --------------------------------------------------------------------------
+# BEYOND-PAPER: zigzag placement (cf. striped/zigzag context parallelism).
+#
+# The paper balances causal load by shipping helper queries and partial
+# results (Alg. 2) — comm = kv ring + q ring + (o,lse) result sends, and in
+# the backward also dq/do containers. Zigzag placement achieves *exact*
+# balance with ONLY the kv ring: split the sequence into 2P chunks and give
+# device p chunks (p, 2P−1−p). At ring step t every device computes exactly
+# two (Tc×Tc) chunk pairs, all strictly causal (mask-free):
+#     p ≥ t:  (q_p  × kv_a)  and (q_b̄ × kv_a)
+#     p < t:  (q_b̄ × kv_a)  and (q_b̄ × kv_b̄)
+# where the received container holds kv chunks (r, 2P−1−r) = (a, b̄) of
+# r = (p−t) mod P, and b̄ denotes the device's own mirror chunk 2P−1−p.
+# Coverage: 2P(P−1) + 3P = P(2P+1) pairs = all causal chunk pairs, each
+# exactly once. The backward ships only (kv, dkv): dq stays local.
+#
+# Contract: global arrays are already zigzag-permuted (models apply the
+# permutation once after the embedding; rope tables are permuted for free
+# as trace-time constants — see models/transformer.py).
+# --------------------------------------------------------------------------
+
+def zigzag_perm(T: int, P: int):
+    """Natural→zigzag permutation: new global array order is
+    [chunk 0, chunk 2P−1 | chunk 1, chunk 2P−2 | …] so contiguous device
+    shards hold (p, 2P−1−p). Returns an index array of length T."""
+    import numpy as np
+    c = T // (2 * P)
+    order = []
+    for p in range(P):
+        order.append(np.arange(p * c, (p + 1) * c))
+        q = 2 * P - 1 - p
+        order.append(np.arange(q * c, (q + 1) * c))
+    return np.concatenate(order)
+
+
+def _fwd_zigzag(spec, q, k, v):
+    p = lax.axis_index(spec.axis)
+    P_ = spec.axis_size
+    Tl = q.shape[1]
+    c = Tl // 2
+    q_a, q_b = q[:, :c], q[:, c:]
+    k_a, k_b = k[:, :c], k[:, c:]
+    v_a, v_b = v[:, :c], v[:, c:]
+    # local step: a×a causal; b̄×a full; b̄×b̄ causal
+    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, scale=spec.scale,
+                          impl=spec.impl)
+    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, scale=spec.scale,
+                            impl=spec.impl)
+    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, scale=spec.scale,
+                            impl=spec.impl)
+    o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
+    if P_ == 1:
+        return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
+    kv = _shift((k, v), spec.axis, 1, P_)
+    for t in range(1, P_):
+        kv_next = _shift(kv, spec.axis, 1, P_) if t < P_ - 1 else None
+        ka_r, kb_r = kv[0][:, :c], kv[0][:, c:]
+        va_r, vb_r = kv[1][:, :c], kv[1][:, c:]
+        w = p >= t
+        # pair 1 -> (q_a if worker else q_b) × kv_a
+        q1 = jnp.where(w, q_a, q_b)
+        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, scale=spec.scale,
+                            impl=spec.impl)
+        o1a, s1a = mask_partial(w, o1, s1)
+        o_a, s_a = merge(o_a, s_a, o1a, s1a)
+        o1b, s1b = mask_partial(~w, o1, s1)
+        o_b, s_b = merge(o_b, s_b, o1b, s1b)
+        # pair 2 -> q_b × (kv_a if worker else kv_b̄)
+        k2 = jnp.where(w, ka_r, kb_r)
+        v2 = jnp.where(w, va_r, vb_r)
+        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, scale=spec.scale,
+                            impl=spec.impl)
+        o_b, s_b = merge(o_b, s_b, o2, s2)
+        kv = kv_next
+    return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
+
+
+def _bwd_zigzag(spec, q, k, v, o, s, do):
+    p = lax.axis_index(spec.axis)
+    P_ = spec.axis_size
+    f32 = jnp.float32
+    Tl = q.shape[1]
+    c = Tl // 2
+    sl_a, sl_b = slice(0, c), slice(c, None)
+    delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)
+
+    def cb(qs, ks, vs, ss, dos, ds, causal):
+        return chunk_attn_bwd(qs, ks, vs, jnp.zeros_like(qs), ss, dos,
+                              causal=causal, scale=spec.scale,
+                              impl=spec.impl, delta=ds)
+
+    # local pairs
+    dq = jnp.zeros(q.shape, f32)
+    dk_h = jnp.zeros(k.shape, f32)
+    dv_h = jnp.zeros(v.shape, f32)
+    for (qs, ks, causal) in ((sl_a, sl_a, True), (sl_b, sl_a, False),
+                             (sl_b, sl_b, True)):
+        dq_t, dk_t, dv_t = cb(q[:, qs], k[:, ks], v[:, ks], s[:, qs],
+                              do[:, qs], delta[:, qs], causal)
+        dq = dq.at[:, qs].add(dq_t.astype(f32))
+        dk_h = dk_h.at[:, ks].add(dk_t.astype(f32))
+        dv_h = dv_h.at[:, ks].add(dv_t.astype(f32))
+    if P_ == 1:
+        return dq.astype(q.dtype), dk_h.astype(k.dtype), dv_h.astype(v.dtype)
+
+    q_a, q_b = q[:, sl_a], q[:, sl_b]
+    s_a, s_b = s[:, sl_a], s[:, sl_b]
+    do_a, do_b = do[:, sl_a], do[:, sl_b]
+    de_a, de_b = delta[:, sl_a], delta[:, sl_b]
+    kv = _shift((k, v), spec.axis, 1, P_)
+    dkv = (jnp.zeros(k.shape, f32), jnp.zeros(v.shape, f32))
+    for t in range(1, P_):
+        if t < P_ - 1:
+            kv_nxt = _shift(kv, spec.axis, 1, P_)
+        ka_r, kb_r = kv[0][:, :c], kv[0][:, c:]
+        va_r, vb_r = kv[1][:, :c], kv[1][:, c:]
+        w = p >= t
+        wf = w.astype(f32)
+        # pair 1
+        q1 = jnp.where(w, q_a, q_b)
+        s1 = jnp.where(w, s_a, s_b)
+        do1 = jnp.where(w, do_a, do_b)
+        de1 = jnp.where(w, de_a, de_b)
+        dq1, dk1, dv1 = cb(q1, ka_r, va_r, s1, do1, de1, False)
+        dq = dq.at[:, sl_a].add(dq1.astype(f32) * wf)
+        dq = dq.at[:, sl_b].add(dq1.astype(f32) * (1 - wf))
+        dkv = (dkv[0].at[:, sl_a].add(dk1.astype(f32)),
+               dkv[1].at[:, sl_a].add(dv1.astype(f32)))
+        # pair 2
+        k2 = jnp.where(w, ka_r, kb_r)
+        v2 = jnp.where(w, va_r, vb_r)
+        dq2, dk2, dv2 = cb(q_b, k2, v2, s_b, do_b, de_b, False)
+        dq = dq.at[:, sl_b].add(dq2.astype(f32))
+        dkv = (dkv[0].at[:, sl_a].add(dk2.astype(f32) * wf),
+               dkv[1].at[:, sl_a].add(dv2.astype(f32) * wf))
+        dkv = (dkv[0].at[:, sl_b].add(dk2.astype(f32) * (1 - wf)),
+               dkv[1].at[:, sl_b].add(dv2.astype(f32) * (1 - wf)))
+        if t < P_ - 1:
+            kv = kv_nxt
+            dkv = _shift(dkv, spec.axis, 1, P_)
+    # containers at p hold chunk of (p − (P−1)) mod P = (p+1) mod P
+    dkv = _shift(dkv, spec.axis, -(P_ - 1), P_)
+    dk = dk_h + dkv[0]
+    dv = dv_h + dkv[1]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# BEYOND-PAPER: MLA latent ring. For DeepSeek MLA the materialized per-head
+# K/V chunk is n_heads·(d_qk+d_v) wide (v3: 128·320 = 40960/token) while the
+# latent it is deterministically derived from is kv_lora+rope = 576/token —
+# a 71× comm reduction if the ring ships the latent and every worker
+# up-projects locally (recompute-over-communicate, the same trade the
+# paper's §3.3 makes for time). Composed with the zigzag placement the
+# schedule is also load-balanced with no helper sends.
+# --------------------------------------------------------------------------
+
+def _fwd_zigzag_latent(spec, q, k, v, payload, w_up, expand):
+    """Zigzag forward shipping ``payload`` instead of (k, v);
+    ``expand(payload, w_up) -> (k, v)`` runs locally on every received
+    chunk. Local (k, v) are passed in pre-expanded."""
+    p = lax.axis_index(spec.axis)
+    P_ = spec.axis_size
+    Tl = q.shape[1]
+    c = Tl // 2
+    q_a, q_b = q[:, :c], q[:, c:]
+    k_a, k_b = k[:, :c], k[:, c:]
+    v_a, v_b = v[:, :c], v[:, c:]
+    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, scale=spec.scale,
+                          impl=spec.impl)
+    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, scale=spec.scale,
+                            impl=spec.impl)
+    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, scale=spec.scale,
+                            impl=spec.impl)
+    o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
+    if P_ == 1:
+        return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
+    pl = _shift(payload, spec.axis, 1, P_)
+    for t in range(1, P_):
+        pl_next = _shift(pl, spec.axis, 1, P_) if t < P_ - 1 else None
+        k_r, v_r = expand(pl, w_up)                  # local up-projection
+        ka_r, kb_r = k_r[:, :c], k_r[:, c:]
+        va_r, vb_r = v_r[:, :c], v_r[:, c:]
+        w = p >= t
+        q1 = jnp.where(w, q_a, q_b)
+        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, scale=spec.scale,
+                            impl=spec.impl)
+        o1a, s1a = mask_partial(w, o1, s1)
+        o_a, s_a = merge(o_a, s_a, o1a, s1a)
+        o1b, s1b = mask_partial(~w, o1, s1)
+        o_b, s_b = merge(o_b, s_b, o1b, s1b)
+        k2 = jnp.where(w, ka_r, kb_r)
+        v2 = jnp.where(w, va_r, vb_r)
+        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, scale=spec.scale,
+                            impl=spec.impl)
+        o_b, s_b = merge(o_b, s_b, o2, s2)
+        pl = pl_next
+    return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
+
+
+def dist_attn_fwd_latent(q, k, v, payload, w_up, expand, *, mesh, spec,
+                         batch_axes=("data",)):
+    """Latent-ring forward (zigzag schedule). ``payload``: (B, T, d_lat)
+    sharded like activations; ``w_up``: replicated up-projection weights;
+    ``expand(payload_chunk, w_up) -> (k, v)`` pure."""
+    b = tuple(batch_axes) if batch_axes else None
+    qkv_s = P(b, spec.axis, None, None)
+    pl_s = P(b, spec.axis, None)
+    lse_s = P(b, spec.axis, None)
+    w_s = jax.tree.map(lambda a: P(*(None,) * a.ndim), w_up)
+    fn = jax.shard_map(
+        partial(_fwd_zigzag_latent, spec, expand=expand), mesh=mesh,
+        in_specs=(qkv_s, qkv_s, qkv_s, pl_s, w_s),
+        out_specs=(qkv_s, lse_s), check_vma=False)
+    return fn(q, k, v, payload, w_up)

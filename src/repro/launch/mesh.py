@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips;
+multi-pod: (pod=2, data=16, model=16) = 512 chips. The ``model`` axis is
+the DISTFLASHATTN sequence-parallel axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(seq: int = 1, data: int | None = None):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // seq
+    return jax.make_mesh((data, seq), ("data", "model"))

@@ -1,0 +1,66 @@
+"""Serving driver: prefill a batch of synthetic prompts and decode N tokens
+through the sequence-sharded KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        --prompt-len 128 --gen 16 --batch 4 [--window 64]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ShapeSpec, get_config, smoke_config
+import dataclasses
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.transformer import Runtime, build_model
+from repro.parallel.sharding import make_parallel_config
+from repro.serve.engine import Engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", default="local")
+    ap.add_argument("--seq-shards", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    if args.window:
+        cfg = cfg.replace(attn=dataclasses.replace(cfg.attn,
+                                                   window=args.window))
+    mesh = make_local_mesh(seq=args.seq_shards) if args.mesh == "local" \
+        else make_production_mesh(multi_pod="multipod" in args.mesh)
+    shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
+    par = make_parallel_config(mesh, shape)
+    model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = SyntheticTokens(cfg, shape, par, mesh).batch(0)
+
+    eng = Engine(model, params)
+    t0 = time.time()
+    toks, logits = eng.generate(batch, args.gen,
+                                rng=jax.random.PRNGKey(1),
+                                temperature=args.temperature)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"generated={args.gen} tokens in {dt:.2f}s "
+          f"({args.gen * args.batch / dt:.1f} tok/s)")
+    print("sampled token ids (first request):",
+          [int(t) for t in toks[0][:16]])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,224 @@
+"""Shared transformer building blocks (pure-JAX, no flax).
+
+Parameters are plain dicts of jnp arrays. Every attention block is split
+into the three stages consumed by the rematerialization-aware checkpointing
+combinator (core/remat.py): ``pre_attn`` → ``attn`` → ``post_attn``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AttnConfig, ModelConfig
+
+
+# ------------------------------------------------------------------ init
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+
+def rms_norm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def head_rms_norm(x, w, eps=1e-5):
+    """Qwen3 qk-norm: RMSNorm over the head dim of (B,T,H,D)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# ------------------------------------------------------------------ rope
+
+def rope_tables(positions, dim, theta=10_000.0):
+    """cos/sin tables: positions (T,) -> (T, dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2).astype(jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B,T,H,D); cos/sin: (T, D/2). Rotates pairs (x[2i], x[2i+1])."""
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., 0::2]
+    x2 = xf[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------- dense attention
+
+def attn_params(key, cfg: ModelConfig, dtype):
+    """GQA attention projections (optionally biased / qk-normed)."""
+    a = cfg.attn
+    d, hd = cfg.d_model, a.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, a.n_heads * hd, dtype),
+        "wk": dense_init(k2, d, a.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, d, a.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, a.n_heads * hd, d, dtype),
+        "ln": jnp.ones((d,), dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((a.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((a.n_kv_heads * hd,), dtype)
+    if a.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attn_qkv(p, x, cfg: ModelConfig, cos, sin):
+    """pre_attn stage: norm → qkv proj → qk-norm → rope. x: (B,T,d)."""
+    a = cfg.attn
+    B, T, _ = x.shape
+    hd = a.head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if a.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, a.n_heads, hd)
+    k = k.reshape(B, T, a.n_kv_heads, hd)
+    v = v.reshape(B, T, a.n_kv_heads, hd)
+    if a.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_out(p, x, o, cfg: ModelConfig):
+    """post_attn residual add. o: (B,T,H,hd)."""
+    B, T = x.shape[:2]
+    return x + (o.reshape(B, T, -1) @ p["wo"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------- MLA attention
+
+def mla_params(key, cfg: ModelConfig, dtype):
+    """DeepSeek multi-head latent attention [arXiv:2405.04434]."""
+    a = cfg.attn
+    d = cfg.d_model
+    nh, dn, dr = a.n_heads, a.qk_nope_head_dim, a.qk_rope_head_dim
+    dv = a.v_head_dim or a.head_dim
+    ks = jax.random.split(key, 8)
+    p = {"ln": jnp.ones((d,), dtype)}
+    if a.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d, a.q_lora_rank, dtype)
+        p["q_ln"] = jnp.ones((a.q_lora_rank,), dtype)
+        p["wq_b"] = dense_init(ks[1], a.q_lora_rank, nh * (dn + dr), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, nh * (dn + dr), dtype)
+    p["wkv_a"] = dense_init(ks[2], d, a.kv_lora_rank + dr, dtype)
+    p["kv_ln"] = jnp.ones((a.kv_lora_rank,), dtype)
+    p["wkv_b"] = dense_init(ks[3], a.kv_lora_rank, nh * (dn + dv), dtype)
+    p["wo"] = dense_init(ks[4], nh * dv, d, dtype)
+    return p
+
+
+def mla_qkv(p, x, cfg: ModelConfig, cos, sin, return_latent=False):
+    """MLA pre_attn: produces per-head K/V materialized from the latent
+    (flash-compatible path; the latent-ring comm optimization ships the
+    compressed kv instead — see core/dist_attention latent variant).
+    ``return_latent`` additionally yields the (c_kv ⊕ roped k_pe) latent
+    used as the decode-time cache entry."""
+    a = cfg.attn
+    B, T, _ = x.shape
+    nh, dn, dr = a.n_heads, a.qk_nope_head_dim, a.qk_rope_head_dim
+    dv = a.v_head_dim or a.head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if a.q_lora_rank:
+        qc = rms_norm(h @ p["wq_a"], p["q_ln"], cfg.norm_eps)
+        q = (qc @ p["wq_b"]).reshape(B, T, nh, dn + dr)
+    else:
+        q = (h @ p["wq"]).reshape(B, T, nh, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    kv_a = h @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., :a.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_pe = kv_a[..., a.kv_lora_rank:].reshape(B, T, 1, dr)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe, cos, sin)
+    kv = (c_kv @ p["wkv_b"]).reshape(B, T, nh, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_pe_b = jnp.broadcast_to(k_pe, (B, T, nh, dr))
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    if return_latent:
+        latent = jnp.concatenate([c_kv, k_pe[:, :, 0, :]], axis=-1)
+        return q_full, k_full, v, latent
+    return q_full, k_full, v            # head dims: qk = dn+dr, v = dv
+
+
+def mla_scale(cfg: ModelConfig) -> float:
+    a = cfg.attn
+    return 1.0 / math.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
+
+
+# ------------------------------------------------------------------ MLP
+
+def mlp_params(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, d_model, d_ff, dtype),
+        "wu": dense_init(k2, d_model, d_ff, dtype),
+        "wd": dense_init(k3, d_ff, d_model, dtype),
+        "ln": jnp.ones((d_model,), dtype),
+    }
+
+
+def mlp_apply(p, x, eps=1e-5):
+    h = rms_norm(x, p["ln"], eps)
+    return x + ((jax.nn.silu(h @ p["wg"]) * (h @ p["wu"])) @ p["wd"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------- softmax-CE
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in f32. labels == -100 are ignored."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & mask
+    w = valid.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def mla_expand(latent, w_up, cfg: ModelConfig):
+    """Up-project the MLA latent (c_kv ⊕ roped k_pe) into per-head K/V —
+    the receive-side of the latent ring (core/dist_attention)."""
+    a = cfg.attn
+    B, T, _ = latent.shape
+    nh, dn, dr = a.n_heads, a.qk_nope_head_dim, a.qk_rope_head_dim
+    dv = a.v_head_dim or a.head_dim
+    c_kv = latent[..., :a.kv_lora_rank]
+    k_pe = latent[..., a.kv_lora_rank:]
+    kv = (c_kv @ w_up).reshape(B, T, nh, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :], (B, T, nh, dr))
+    return jnp.concatenate([k_nope, k_pe_b], axis=-1), v

@@ -1,0 +1,48 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop over a
+sequence-sharded KV cache (distributed flash-decoding, core/dist_attention).
+
+The engine keeps requests in fixed batch slots; ``generate`` runs prefill
+once and then steps the decode jit in a Python loop (one token per step —
+the decode step itself is the unit the dry-run lowers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models.transformer import Runtime, build_model
+
+
+@dataclasses.dataclass
+class Engine:
+    model: object
+    params: dict
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode)
+
+    def generate(self, batch, n_tokens: int, rng=None, temperature=0.0):
+        """batch: prefill inputs. Returns (tokens (B, n_tokens), last logits)."""
+        logits, cache = self._prefill(self.params, batch)
+        pos0 = batch["tokens"].shape[1]
+        outs = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for i in range(n_tokens):
+            outs.append(tok)
+            logits, cache = self._decode(
+                self.params, cache,
+                {"token": tok, "pos": jnp.int32(pos0 + i)})
+            lf = logits[:, -1].astype(jnp.float32)
+            if temperature > 0 and rng is not None:
+                rng, k = jax.random.split(rng)
+                tok = jax.random.categorical(k, lf / temperature)[:, None]
+                tok = tok.astype(jnp.int32)
+            else:
+                tok = jnp.argmax(lf, axis=-1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(outs, axis=1), logits

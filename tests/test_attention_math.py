@@ -1,0 +1,118 @@
+"""Property tests of the online-softmax merge algebra and the chunked
+decomposition — the invariants the distributed schedules rely on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention import empty_partial, mask_partial, merge
+from repro.kernels.ref import chunk_attn_ref, full_attn_ref, merge_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from([2, 3, 4]))
+def test_merge_associativity(seed, n):
+    """merge is associative+commutative over partials: any merge order of
+    the per-chunk results gives the same output (this is what lets the
+    balanced schedule merge helper results out of order)."""
+    B, T, H, D = 1, 8, 2, 4
+    q = _rand(seed, B, T, H, D)
+    parts = []
+    for i in range(n):
+        k = _rand(seed + i + 1, B, T, H, D)
+        v = _rand(seed + 2 * i + 7, B, T, H, D)
+        parts.append(chunk_attn_ref(q, k, v))
+    # left fold
+    o1, l1 = parts[0]
+    for o, l in parts[1:]:
+        o1, l1 = merge(o1, l1, o, l)
+    # right fold, reversed order
+    o2, l2 = parts[-1]
+    for o, l in reversed(parts[:-1]):
+        o2, l2 = merge(o2, l2, o, l)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_merge_identity(seed):
+    """empty_partial is the identity element of merge."""
+    B, T, H, D = 1, 8, 2, 4
+    q = _rand(seed, B, T, H, D)
+    k = _rand(seed + 1, B, T, H, D)
+    v = _rand(seed + 2, B, T, H, D)
+    o, lse = chunk_attn_ref(q, k, v)
+    e_o, e_l = empty_partial(q)
+    o2, l2 = merge(e_o, e_l, o, lse)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(l2), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       chunks=st.sampled_from([2, 4, 8]),
+       causal=st.booleans())
+def test_chunked_equals_monolithic(seed, chunks, causal):
+    """Splitting KV into chunks + merging == monolithic softmax attention."""
+    B, T, H, D = 1, 32, 2, 8
+    q = _rand(seed, B, T, H, D)
+    k = _rand(seed + 1, B, T, H, D)
+    v = _rand(seed + 2, B, T, H, D)
+    o_full = full_attn_ref(q, k, v, causal=causal)
+    Tc = T // chunks
+    acc = empty_partial(q)
+    for i in range(chunks):
+        sl = slice(i * Tc, (i + 1) * Tc)
+        o, lse = chunk_attn_ref(q, k[:, sl], v[:, sl], causal=causal,
+                                q_offset=0, kv_offset=i * Tc)
+        acc = merge(*acc, o, lse)
+    np.testing.assert_allclose(np.asarray(acc[0]), np.asarray(o_full),
+                               atol=2e-5)
+
+
+def test_mask_partial_neutralizes():
+    B, T, H, D = 1, 4, 1, 4
+    q = _rand(0, B, T, H, D)
+    o, lse = chunk_attn_ref(q, q, q)
+    om, lm = mask_partial(jnp.bool_(False), o, lse)
+    base = chunk_attn_ref(q, 2 * q, 3 * q)
+    merged = merge(*base, om, lm)
+    np.testing.assert_allclose(np.asarray(merged[0]), np.asarray(base[0]),
+                               atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), window=st.sampled_from([1, 5, 16, 100]))
+def test_window_subset_property(seed, window):
+    """A window ≥ T equals full causal attention; window masks monotone."""
+    B, T, H, D = 1, 16, 1, 4
+    q = _rand(seed, B, T, H, D)
+    k = _rand(seed + 1, B, T, H, D)
+    v = _rand(seed + 2, B, T, H, D)
+    o_w = full_attn_ref(q, k, v, causal=True, window=window)
+    if window >= T:
+        o_full = full_attn_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(o_w), np.asarray(o_full),
+                                   atol=1e-6)
+    if window == 1:  # each token attends only itself
+        o_self = jnp.repeat(v, 1, axis=2)
+        np.testing.assert_allclose(np.asarray(o_w), np.asarray(v), atol=1e-6)
+
+
+def test_gqa_equals_repeated_kv():
+    B, T, Hq, Hkv, D = 1, 16, 4, 2, 8
+    q = _rand(0, B, T, Hq, D)
+    k = _rand(1, B, T, Hkv, D)
+    v = _rand(2, B, T, Hkv, D)
+    o_g, lse_g = chunk_attn_ref(q, k, v, causal=True)
+    o_r, lse_r = chunk_attn_ref(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2),
+                                causal=True)
+    np.testing.assert_allclose(np.asarray(o_g), np.asarray(o_r), atol=1e-6)

@@ -1,0 +1,60 @@
+"""End-to-end training integration: a tiny model trains for a few dozen
+steps on the synthetic Markov stream and the loss must drop substantially
+(system-level behaviour, paper-faithful config: balanced schedule +
+remat-aware checkpointing)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.config import (TrainConfig, get_config, smoke_config,
+                               ShapeSpec)
+from repro.data.pipeline import SyntheticTokens
+from repro.models.transformer import Runtime, build_model
+from repro.optim import adamw
+from repro.parallel.sharding import make_parallel_config
+from repro.train.step import make_train_step
+
+
+def _train(arch, steps=30, remat="remat_aware", schedule="balanced"):
+    cfg = smoke_config(get_config(arch)).replace(vocab=128)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeSpec("ti", 64, 4, "train")
+    par = make_parallel_config(mesh, shape, schedule=schedule, remat=remat)
+    model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    tc = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=steps)
+    step = jax.jit(make_train_step(model, tc))
+    ds = SyntheticTokens(cfg, shape, par, mesh)
+    losses = []
+    for i in range(steps):
+        params, opt, m = step(params, opt, ds.batch(i))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_loss_decreases_dense():
+    losses = _train("smollm-360m")
+    assert losses[-1] < losses[0] - 0.5, losses[::10]
+
+
+def test_loss_decreases_ssm():
+    losses = _train("mamba2-2.7b", steps=25)
+    assert losses[-1] < losses[0] - 0.5, losses[::8]
+
+
+def test_remat_policies_agree():
+    """The three checkpointing policies give the same loss trajectory
+    (the paper's 'no numerical difference' claim, end to end)."""
+    base = _train("smollm-360m", steps=4, remat="none")
+    for pol in ("hf", "remat_aware"):
+        other = _train("smollm-360m", steps=4, remat=pol)
+        for a, b in zip(base, other):
+            assert abs(a - b) < 2e-3, (pol, base, other)
+
+
+def test_schedules_agree():
+    base = _train("smollm-360m", steps=3, schedule="balanced")
+    other = _train("smollm-360m", steps=3, schedule="ring")
+    for a, b in zip(base, other):
+        assert abs(a - b) < 2e-3
