@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from repro import compat
 from benchmarks.schedule_sim import (balanced_schedule, coverage_ok,
                                      expected_speedup, idle_fraction,
                                      ring_schedule)
@@ -84,8 +85,8 @@ def bench_table5_checkpointing():
         opt = adamw.init(params)
         batch = SyntheticTokens(cfg, shape, par, mesh).batch(0)
         step = jax.jit(make_train_step(model, TrainConfig()))
-        flops = step.lower(params, opt, batch).compile() \
-            .cost_analysis().get("flops", 0)
+        flops = compat.cost_analysis(
+            step.lower(params, opt, batch).compile()).get("flops", 0)
 
         def run(step=step, params=params, opt=opt, batch=batch):
             jax.block_until_ready(step(params, opt, batch))

@@ -1,0 +1,114 @@
+"""JAX version-compatibility layer.
+
+Every API the repo uses that has moved or changed shape across JAX releases
+is funneled through this module, so call sites never touch
+version-conditional code.
+
+Supported JAX versions (the compat policy, see README §Compat):
+
+* ``>= 0.4.35, < 0.5``  — ``shard_map`` lives in ``jax.experimental``
+  (kwarg ``check_rep``), ``Compiled.cost_analysis()`` returns a *list* of
+  per-module dicts, Pallas-TPU compiler params are ``TPUCompilerParams``.
+* ``>= 0.5``            — ``jax.shard_map`` is public (kwarg ``check_vma``
+  from 0.6), ``cost_analysis()`` returns a single dict,
+  ``pltpu.CompilerParams``.
+
+Exports:
+  shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=False)
+  tree_map(f, *trees, is_leaf=None)
+  cost_analysis(compiled) -> dict        (normalized; {} when unavailable)
+  pallas_tpu_compiler_params(dimension_semantics=...) -> params object
+  jax_version -> tuple[int, int, int]
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+__all__ = ["jax_version", "shard_map", "tree_map", "cost_analysis",
+           "pallas_tpu_compiler_params"]
+
+
+def _parse_version(v: str):
+    return tuple(int(x) for x in re.findall(r"\d+", v)[:3])
+
+
+jax_version = _parse_version(jax.__version__)
+
+
+# ---------------------------------------------------------------- shard_map
+
+if hasattr(jax, "shard_map"):                        # jax >= 0.5
+    _shard_map_impl = jax.shard_map
+    _REP_KWARG = "check_vma" if jax_version >= (0, 6, 0) else "check_rep"
+else:                                                # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _REP_KWARG = "check_rep"
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool = True, **kw) -> Callable:
+    """Version-stable ``shard_map``. The replication-check flag is accepted
+    under its modern name ``check_vma`` and translated to whatever the
+    installed JAX calls it (``check_rep`` before 0.6)."""
+    kw[_REP_KWARG] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+# ---------------------------------------------------------------- axis_size
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name) -> int:
+        """Static size of a mapped mesh axis, from inside shard_map.
+        JAX < 0.4.38 has no ``lax.axis_size``; the frame size is recovered
+        from ``psum(1)``, which the tracer resolves to a static int."""
+        return jax.lax.psum(1, axis_name)
+
+
+# ----------------------------------------------------------------- tree_map
+
+try:
+    tree_map = jax.tree.map                          # jax >= 0.4.25
+except AttributeError:                               # pragma: no cover
+    tree_map = jax.tree_util.tree_map
+
+
+# ------------------------------------------------------------ cost_analysis
+
+def cost_analysis(compiled) -> Dict[str, float]:
+    """Normalized ``Compiled.cost_analysis()``.
+
+    JAX 0.4.x returns a list with one properties-dict per compiled module;
+    newer versions return the dict directly; some backends return ``None``.
+    Always returns a (possibly empty) dict keyed like XLA's properties
+    ("flops", "bytes accessed", ...). Multi-module lists are summed per key
+    so FLOP accounting stays total."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    # list of per-module dicts (0.4.x); usually length 1
+    out: Dict[str, float] = {}
+    for mod in ca:
+        for k, val in mod.items():
+            if isinstance(val, (int, float)):
+                out[k] = out.get(k, 0.0) + float(val)
+            else:                                    # pragma: no cover
+                out.setdefault(k, val)
+    return out
+
+
+# ------------------------------------------- Pallas TPU compiler parameters
+
+def pallas_tpu_compiler_params(**kw) -> Any:
+    """``pltpu.CompilerParams`` (new name) / ``TPUCompilerParams`` (0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams")
+    return cls(**kw)

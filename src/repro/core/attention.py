@@ -9,54 +9,33 @@ offset between the q and kv chunks (0 for the local step, ``t·Tc`` for step
 ``t``), which is static per step — so the Pallas kernels never need dynamic
 position scalars.
 
-``impl`` selects the backend:
-  * ``ref``               — pure-jnp oracle (CPU tests, dry-run lowering)
-  * ``pallas``            — TPU Pallas kernel (compiled)
-  * ``pallas_interpret``  — Pallas kernel body interpreted on CPU (tests)
+``impl`` names a backend in :mod:`repro.kernels.registry` (``ref``,
+``chunked-lax``, ``pallas``, ``pallas-interpret``, ``null``); resolution
+honors each backend's capability flags and platform support, falling back
+down the registry's chain (with a logged downgrade) instead of crashing —
+e.g. ``pallas`` on a CPU host runs ``pallas-interpret``/``chunked-lax``.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.ref import (NEG_INF, chunk_attn_ref, chunk_attn_bwd_ref,
-                               merge_ref)
-
-_IMPL = "ref"  # process-wide default; configs override per call
+from repro.kernels import registry
+from repro.kernels.ref import NEG_INF, merge_ref
 
 
 def set_default_impl(impl: str) -> None:
-    global _IMPL
-    assert impl in ("ref", "pallas", "pallas_interpret", "null"), impl
-    _IMPL = impl
+    """Set the process-wide default backend (configs override per call)."""
+    registry.set_default(impl)
 
 
 def chunk_attn(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
                impl=None):
     """Partial attention. ``rel_offset`` = absolute(q0) − absolute(kv0),
     static per schedule step. Returns (o, lse)."""
-    impl = impl or _IMPL
-    if impl == "ref":
-        return chunk_attn_ref(q, k, v, causal=causal, q_offset=rel_offset,
-                              kv_offset=0, window=window, scale=scale)
-    if impl == "null":
-        # dry-run cost-isolation stub: shape-correct, data-dependent (so XLA
-        # cannot fold it away), but O(T) instead of O(T²). Used to isolate
-        # the attention kernel's contribution from the rest of the model;
-        # the kernel's ideal FLOPs/bytes are then added analytically
-        # (analysis/roofline.attention_sites).
-        B, Tq, Hq, _ = q.shape
-        vm = jnp.mean(v.astype(jnp.float32), axis=(1, 2), keepdims=True)
-        o = jnp.broadcast_to(vm, (B, Tq, Hq, v.shape[-1])).astype(q.dtype)
-        o = o + 0.0 * q[..., :1] * jnp.mean(k)
-        lse = jnp.mean(q.astype(jnp.float32), axis=-1)
-        return o, lse
-    from repro.kernels import ops
-    return ops.flash_fwd(q, k, v, causal=causal, rel_offset=rel_offset,
-                         window=window, scale=scale,
-                         interpret=(impl == "pallas_interpret"))
+    be = registry.resolve(impl, causal=causal, window=window,
+                          rel_offset=rel_offset, dtype=q.dtype)
+    return be.fwd(q, k, v, causal=causal, rel_offset=rel_offset,
+                  window=window, scale=scale)
 
 
 def chunk_attn_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0,
@@ -64,21 +43,10 @@ def chunk_attn_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0,
     """FA2 backward for one chunk using the saved (o, lse) — no forward
     recompute. ``delta = rowsum(o⊙do)`` may be precomputed (the distributed
     helper path ships delta instead of o). Returns (dq, dk, dv)."""
-    impl = impl or _IMPL
-    if impl == "ref":
-        return chunk_attn_bwd_ref(q, k, v, o, lse, do, causal=causal,
-                                  q_offset=rel_offset, kv_offset=0,
-                                  window=window, scale=scale, delta=delta)
-    if impl == "null":
-        s_do = jnp.mean(do.astype(jnp.float32))
-        dq = (q.astype(jnp.float32) * 0.0 + s_do).astype(q.dtype)
-        dk = (k.astype(jnp.float32) * 0.0 + s_do).astype(k.dtype)
-        dv = (v.astype(jnp.float32) * 0.0 + s_do).astype(v.dtype)
-        return dq, dk, dv
-    from repro.kernels import ops
-    return ops.flash_bwd(q, k, v, o, lse, do, causal=causal,
-                         rel_offset=rel_offset, window=window, scale=scale,
-                         interpret=(impl == "pallas_interpret"), delta=delta)
+    be = registry.resolve(impl, causal=causal, window=window,
+                          rel_offset=rel_offset, dtype=q.dtype)
+    return be.bwd(q, k, v, o, lse, do, causal=causal, rel_offset=rel_offset,
+                  window=window, scale=scale, delta=delta)
 
 
 merge = merge_ref  # (o1, lse1, o2, lse2) -> (o, lse)

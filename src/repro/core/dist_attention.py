@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.attention import (chunk_attn, chunk_attn_bwd, empty_partial,
                                   mask_partial, merge)
 from repro.kernels.ref import NEG_INF
@@ -62,13 +63,15 @@ class DistAttnSpec:
     causal: bool = True
     window: int = 0                # sliding window (tokens); ring only
     scale: Optional[float] = None
-    impl: Optional[str] = None     # attention backend override
+    # attention backend name resolved via repro.kernels.registry (None =
+    # process default); capability/platform fallback happens at resolve time
+    impl: Optional[str] = None
 
 
 def _shift(x, axis, shift, size):
     """ppermute by a fixed shift: device p receives from (p − shift) mod P."""
     perm = [(i, (i + shift) % size) for i in range(size)]
-    return jax.tree.map(lambda a: lax.ppermute(a, axis, perm), x)
+    return compat.tree_map(lambda a: lax.ppermute(a, axis, perm), x)
 
 
 def _ring_steps(spec: DistAttnSpec, chunk_len: int) -> int:
@@ -217,7 +220,7 @@ def _bwd_ring(spec, q, k, v, o, s, do):
             dkv_home[1].astype(v.dtype)
     # containers: (k, v) data + (dk, dv) accumulators travel together
     kv = _shift((k, v), spec.axis, 1, P_)
-    dkv = jax.tree.map(lambda a: jnp.zeros(a.shape, f32), kv)
+    dkv = compat.tree_map(lambda a: jnp.zeros(a.shape, f32), kv)
     for t in range(1, n + 1):
         if t < n:                                     # prefetch data (overlap)
             kv_nxt = _shift(kv, spec.axis, 1, P_)
@@ -339,7 +342,7 @@ def dist_attn_fwd(q, k, v, *, mesh, spec: DistAttnSpec,
                   batch_axes=("data",)):
     """Distributed forward → (o, lse). Global-array in/out (GSPMD land)."""
     qkv_s, lse_s = _specs(batch_axes, spec.axis)
-    fn = jax.shard_map(partial(_fwd_local, spec), mesh=mesh,
+    fn = compat.shard_map(partial(_fwd_local, spec), mesh=mesh,
                        in_specs=(qkv_s, qkv_s, qkv_s),
                        out_specs=(qkv_s, lse_s), check_vma=False)
     return fn(q, k, v)
@@ -349,7 +352,7 @@ def dist_attn_bwd(q, k, v, o, lse, do, *, mesh, spec: DistAttnSpec,
                   batch_axes=("data",)):
     """Distributed backward from saved (o, lse) → (dq, dk, dv)."""
     qkv_s, lse_s = _specs(batch_axes, spec.axis)
-    fn = jax.shard_map(partial(_bwd_local, spec), mesh=mesh,
+    fn = compat.shard_map(partial(_bwd_local, spec), mesh=mesh,
                        in_specs=(qkv_s, qkv_s, qkv_s, qkv_s, lse_s, qkv_s),
                        out_specs=(qkv_s, qkv_s, qkv_s), check_vma=False)
     return fn(q, k, v, o, lse, do)
@@ -391,10 +394,10 @@ def _decode_local(seq_axes, shard_len, window, scale, q, kc, vc, k1, v1):
     # linearized shard index over (possibly multiple) sequence axes
     idx = jnp.int32(0)
     for ax in seq_axes:
-        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+        idx = idx * compat.axis_size(ax) + lax.axis_index(ax)
     n_shards = 1
     for ax in seq_axes:
-        n_shards *= lax.axis_size(ax)
+        n_shards *= compat.axis_size(ax)
     S_total = n_shards * shard_len
     offset = idx * shard_len
     B, _, Hq, Dq = q.shape
@@ -466,7 +469,7 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
     seq = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
     rep = P(b, None, None, None)
     shd = P(b, seq, None, None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         partial(_decode_local, tuple(seq_axes), shard_len, window, scale),
         mesh=mesh,
         in_specs=(rep, shd, shd, rep, rep),
@@ -683,8 +686,8 @@ def dist_attn_fwd_latent(q, k, v, payload, w_up, expand, *, mesh, spec,
     qkv_s = P(b, spec.axis, None, None)
     pl_s = P(b, spec.axis, None)
     lse_s = P(b, spec.axis, None)
-    w_s = jax.tree.map(lambda a: P(*(None,) * a.ndim), w_up)
-    fn = jax.shard_map(
+    w_s = compat.tree_map(lambda a: P(*(None,) * a.ndim), w_up)
+    fn = compat.shard_map(
         partial(_fwd_zigzag_latent, spec, expand=expand), mesh=mesh,
         in_specs=(qkv_s, qkv_s, qkv_s, pl_s, w_s),
         out_specs=(qkv_s, lse_s), check_vma=False)

@@ -36,11 +36,12 @@ from functools import partial
 from typing import Callable
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 
 
 def _tree_add(a, b):
-    return jax.tree.map(jnp.add, a, b)
+    return compat.tree_map(jnp.add, a, b)
 
 
 def remat_aware(pre_attn: Callable, attn_fwd: Callable, attn_bwd: Callable,

@@ -1,0 +1,104 @@
+"""``chunked-lax`` attention backend: a ``lax.scan``-blocked online-softmax
+implementation that needs no Pallas — fast on CPU/GPU, exact everywhere.
+
+The KV sequence is split into ``block_kv``-sized chunks; a scan walks the
+chunks carrying the float32 ``(o, lse)`` accumulator and folds each chunk's
+partial result in with the FlashAttention-2 rescale (``merge_ref``). Peak
+score memory is O(Tq · block_kv) per step instead of the reference
+implementation's O(Tq · Tk) — the same blocking the Pallas kernel does in
+VMEM, expressed at the XLA level.
+
+Backward mirrors FA2: dq accumulates across the chunk scan while per-chunk
+(dk, dv) are emitted as scan outputs and reassembled, all from the saved
+``(o, lse)`` — no forward recompute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ref import (NEG_INF, chunk_attn_bwd_ref, chunk_attn_ref,
+                               merge_ref)
+
+DEFAULT_BLOCK_KV = 128
+
+
+def _pick_block(Tk: int, block: int) -> int:
+    """Largest divisor of Tk that is ≤ block (scan needs equal chunks).
+    When Tk has no useful divisor near the target (prime-ish lengths),
+    blocking would degenerate into a near-token-level scan — return Tk
+    itself so the caller takes the single-block (reference) path."""
+    b = min(block, Tk)
+    while Tk % b:
+        b -= 1
+    if b < min(32, Tk):
+        return Tk
+    return b
+
+
+def _blocked(x, nb, bc):
+    """(B, Tk, H, D) -> (nb, B, bc, H, D) scan-leading chunk layout."""
+    B = x.shape[0]
+    return x.reshape(B, nb, bc, *x.shape[2:]).swapaxes(0, 1)
+
+
+def chunked_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
+                block_kv=DEFAULT_BLOCK_KV):
+    """Partial attention, chunk_attn semantics: returns (o, lse)."""
+    B, Tq, Hq, _ = q.shape
+    Tk = k.shape[1]
+    Dv = v.shape[-1]
+    bc = _pick_block(Tk, block_kv)
+    nb = Tk // bc
+    if nb == 1:
+        return chunk_attn_ref(q, k, v, causal=causal, q_offset=rel_offset,
+                              kv_offset=0, window=window, scale=scale)
+    blocks = (_blocked(k, nb, bc), _blocked(v, nb, bc),
+              jnp.arange(nb, dtype=jnp.int32) * bc)
+
+    def body(carry, blk):
+        o_acc, l_acc = carry
+        kj, vj, off = blk
+        o_j, l_j = chunk_attn_ref(q, kj, vj, causal=causal,
+                                  q_offset=rel_offset, kv_offset=off,
+                                  window=window, scale=scale)
+        o_n, l_n = merge_ref(o_acc, l_acc, o_j.astype(jnp.float32), l_j)
+        return (o_n, l_n), None
+
+    init = (jnp.zeros((B, Tq, Hq, Dv), jnp.float32),
+            jnp.full((B, Tq, Hq), NEG_INF, jnp.float32))
+    (o, lse), _ = lax.scan(body, init, blocks)
+    return o.astype(q.dtype), lse
+
+
+def chunked_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
+                scale=None, delta=None, block_kv=DEFAULT_BLOCK_KV):
+    """FA2 backward from saved (o, lse), blocked over KV chunks.
+    Returns (dq, dk, dv)."""
+    B, Tq, Hq, _ = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    bc = _pick_block(Tk, block_kv)
+    nb = Tk // bc
+    if delta is None:
+        delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
+                        axis=-1)
+    if nb == 1:
+        return chunk_attn_bwd_ref(q, k, v, o, lse, do, causal=causal,
+                                  q_offset=rel_offset, kv_offset=0,
+                                  window=window, scale=scale, delta=delta)
+    blocks = (_blocked(k, nb, bc), _blocked(v, nb, bc),
+              jnp.arange(nb, dtype=jnp.int32) * bc)
+
+    def body(dq_acc, blk):
+        kj, vj, off = blk
+        dq_j, dk_j, dv_j = chunk_attn_bwd_ref(
+            q, kj, vj, o, lse, do, causal=causal, q_offset=rel_offset,
+            kv_offset=off, window=window, scale=scale, delta=delta)
+        return dq_acc + dq_j.astype(jnp.float32), (dk_j, dv_j)
+
+    dq, (dk_b, dv_b) = lax.scan(body, jnp.zeros(q.shape, jnp.float32),
+                                blocks)
+    dk = dk_b.swapaxes(0, 1).reshape(B, Tk, Hkv, -1)
+    dv = dv_b.swapaxes(0, 1).reshape(B, Tk, Hkv, -1)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

@@ -22,6 +22,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from repro import compat
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -126,7 +127,7 @@ def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
             pltpu.VMEM((br, LANES), jnp.float32),
             pltpu.VMEM((br, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -235,7 +236,7 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
         out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((br, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -260,7 +261,7 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
                    jax.ShapeDtypeStruct((B, Hq, Tk, Dv), v.dtype)],
         scratch_shapes=[pltpu.VMEM((bc, D), jnp.float32),
                         pltpu.VMEM((bc, Dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -1,0 +1,253 @@
+"""Attention backend registry.
+
+Every chunk-attention implementation is a named :class:`BackendSpec` with a
+uniform call signature and explicit capability flags. ``chunk_attn`` /
+``chunk_attn_bwd`` (core/attention.py) resolve their ``impl`` string here,
+so all schedule / model / launch code selects backends by name only.
+
+Registered backends (see README §Backend registry):
+
+  * ``ref``              — pure-jnp oracle. Ground truth; materializes the
+                           full score matrix (O(Tq·Tk) memory).
+  * ``chunked-lax``      — ``lax.scan``-blocked online-softmax rescale.
+                           Exact, Pallas-free, fast on CPU/GPU.
+  * ``pallas``           — compiled Pallas TPU kernel (TPU only).
+  * ``pallas-interpret`` — the same kernel body run by the Pallas
+                           interpreter; validates the kernel on any host.
+  * ``null``             — O(T) shape-correct stub for dry-run cost
+                           isolation. NOT exact (never resolves via
+                           fallback; must be requested explicitly).
+
+``resolve(impl, platform)`` walks each backend's fallback chain when the
+requested backend can't run (wrong platform, unsupported mask/dtype) and
+logs the downgrade — requesting ``pallas`` on CPU runs ``pallas-interpret``
+(or ``chunked-lax``) instead of crashing.
+
+Backend names are normalized (``pallas_interpret`` == ``pallas-interpret``)
+so the pre-registry spelling keeps working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+log = logging.getLogger(__name__)
+
+ALL_PLATFORMS = ("cpu", "gpu", "tpu")
+ALL_DTYPES = ("float32", "bfloat16", "float16")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One attention implementation plus its capability envelope.
+
+    ``fwd(q, k, v, *, causal, rel_offset, window, scale) -> (o, lse)``
+    ``bwd(q, k, v, o, lse, do, *, causal, rel_offset, window, scale, delta)
+        -> (dq, dk, dv)``
+    """
+    name: str
+    fwd: Callable
+    bwd: Callable
+    # capability flags
+    causal: bool = True            # supports causal masking
+    window: bool = True            # supports sliding-window masking
+    rel_offset: bool = True        # supports static q/kv position offset
+    dtypes: Tuple[str, ...] = ALL_DTYPES
+    platforms: Tuple[str, ...] = ALL_PLATFORMS
+    exact: bool = True             # numerically exact (vs stub)
+    fallback: Tuple[str, ...] = ()  # tried in order when this can't run
+    description: str = ""
+
+    def unsupported_reason(self, *, platform: str, causal: bool = False,
+                           window: int = 0, rel_offset: int = 0,
+                           dtype=None) -> Optional[str]:
+        """None if this backend can serve the request, else why not."""
+        if platform not in self.platforms:
+            return f"platform {platform!r} not in {self.platforms}"
+        if causal and not self.causal:
+            return "causal masking unsupported"
+        if window and not self.window:
+            return "sliding-window masking unsupported"
+        if rel_offset and not self.rel_offset:
+            return "rel_offset unsupported"
+        if dtype is not None and jnp.dtype(dtype).name not in self.dtypes:
+            return f"dtype {jnp.dtype(dtype).name} not in {self.dtypes}"
+        return None
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+_DEFAULT = ["ref"]
+_WARNED = set()   # (requested, resolved, platform) — log each downgrade once
+
+
+def _norm(name: str) -> str:
+    return name.replace("_", "-").lower()
+
+
+def register(spec: BackendSpec, overwrite: bool = False) -> BackendSpec:
+    key = _norm(spec.name)
+    if key in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {key!r} already registered")
+    _REGISTRY[key] = spec
+    return spec
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> BackendSpec:
+    key = _norm(name)
+    if key not in _REGISTRY:
+        raise ValueError(f"unknown attention backend {name!r}; "
+                         f"registered: {names()}")
+    return _REGISTRY[key]
+
+
+def set_default(name: str) -> None:
+    _DEFAULT[0] = get(name).name
+
+
+def default_name() -> str:
+    return _DEFAULT[0]
+
+
+def current_platform() -> str:
+    return jax.default_backend()
+
+
+def resolve(impl: Optional[str] = None, platform: Optional[str] = None, *,
+            causal: bool = False, window: int = 0, rel_offset: int = 0,
+            dtype=None) -> BackendSpec:
+    """Return a runnable backend for the request, walking fallbacks.
+
+    ``impl=None`` uses the process default. A downgrade (requested backend
+    can't serve the request) is logged once per (requested, resolved,
+    platform) triple; an empty/cyclic fallback chain raises."""
+    platform = platform or current_platform()
+    want = get(impl if impl is not None else default_name())
+    caps = dict(platform=platform, causal=causal, window=window,
+                rel_offset=rel_offset, dtype=dtype)
+    reason = want.unsupported_reason(**caps)
+    if reason is None:
+        return want
+    # transitive breadth-first walk of the fallback chain (cycle-safe)
+    seen = {_norm(want.name)}
+    queue = [fb for fb in want.fallback]
+    tried = [want.name]
+    while queue:
+        cand = get(queue.pop(0))
+        if _norm(cand.name) in seen:
+            continue
+        seen.add(_norm(cand.name))
+        tried.append(cand.name)
+        if cand.unsupported_reason(**caps) is None:
+            key = (want.name, cand.name, platform)
+            if key not in _WARNED:
+                _WARNED.add(key)
+                log.warning("attention backend %r unavailable (%s); "
+                            "downgrading to %r on %s", want.name, reason,
+                            cand.name, platform)
+            return cand
+        queue.extend(cand.fallback)
+    raise ValueError(
+        f"no runnable attention backend for impl={want.name!r} on "
+        f"{platform!r} (causal={causal}, window={window}): {reason}; "
+        f"tried {tried}")
+
+
+# ==========================================================================
+# Built-in backends
+# ==========================================================================
+
+def _ref_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None):
+    from repro.kernels.ref import chunk_attn_ref
+    return chunk_attn_ref(q, k, v, causal=causal, q_offset=rel_offset,
+                          kv_offset=0, window=window, scale=scale)
+
+
+def _ref_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
+             scale=None, delta=None):
+    from repro.kernels.ref import chunk_attn_bwd_ref
+    return chunk_attn_bwd_ref(q, k, v, o, lse, do, causal=causal,
+                              q_offset=rel_offset, kv_offset=0,
+                              window=window, scale=scale, delta=delta)
+
+
+def _chunked_fwd(q, k, v, **kw):
+    from repro.kernels.chunked import chunked_fwd
+    return chunked_fwd(q, k, v, **kw)
+
+
+def _chunked_bwd(q, k, v, o, lse, do, **kw):
+    from repro.kernels.chunked import chunked_bwd
+    return chunked_bwd(q, k, v, o, lse, do, **kw)
+
+
+def _pallas_fwd(interpret):
+    def fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None):
+        from repro.kernels import ops
+        return ops.flash_fwd(q, k, v, causal=causal, rel_offset=rel_offset,
+                             window=window, scale=scale, interpret=interpret)
+    return fwd
+
+
+def _pallas_bwd(interpret):
+    def bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
+            scale=None, delta=None):
+        from repro.kernels import ops
+        return ops.flash_bwd(q, k, v, o, lse, do, causal=causal,
+                             rel_offset=rel_offset, window=window,
+                             scale=scale, interpret=interpret, delta=delta)
+    return bwd
+
+
+def _null_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None):
+    # dry-run cost-isolation stub: shape-correct, data-dependent (so XLA
+    # cannot fold it away), but O(T) instead of O(T²). The kernel's ideal
+    # FLOPs/bytes are added analytically (analysis/roofline.attention_sites).
+    B, Tq, Hq, _ = q.shape
+    vm = jnp.mean(v.astype(jnp.float32), axis=(1, 2), keepdims=True)
+    o = jnp.broadcast_to(vm, (B, Tq, Hq, v.shape[-1])).astype(q.dtype)
+    o = o + 0.0 * q[..., :1] * jnp.mean(k)
+    lse = jnp.mean(q.astype(jnp.float32), axis=-1)
+    return o, lse
+
+
+def _null_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
+              scale=None, delta=None):
+    s_do = jnp.mean(do.astype(jnp.float32))
+    dq = (q.astype(jnp.float32) * 0.0 + s_do).astype(q.dtype)
+    dk = (k.astype(jnp.float32) * 0.0 + s_do).astype(k.dtype)
+    dv = (v.astype(jnp.float32) * 0.0 + s_do).astype(v.dtype)
+    return dq, dk, dv
+
+
+register(BackendSpec(
+    name="ref", fwd=_ref_fwd, bwd=_ref_bwd,
+    description="pure-jnp oracle; full score matrix"))
+
+register(BackendSpec(
+    name="chunked-lax", fwd=_chunked_fwd, bwd=_chunked_bwd,
+    fallback=("ref",),
+    description="lax.scan-blocked online softmax; Pallas-free"))
+
+register(BackendSpec(
+    name="pallas", fwd=_pallas_fwd(False), bwd=_pallas_bwd(False),
+    platforms=("tpu",), dtypes=("float32", "bfloat16"),
+    fallback=("pallas-interpret", "chunked-lax", "ref"),
+    description="compiled Pallas TPU FlashAttention-2 kernel"))
+
+register(BackendSpec(
+    name="pallas-interpret", fwd=_pallas_fwd(True), bwd=_pallas_bwd(True),
+    dtypes=("float32", "bfloat16"),
+    fallback=("chunked-lax", "ref"),
+    description="Pallas kernel body under the interpreter (validation)"))
+
+register(BackendSpec(
+    name="null", fwd=_null_fwd, bwd=_null_bwd, exact=False,
+    description="O(T) dry-run cost-isolation stub (not exact)"))

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.analysis import roofline as R
 from repro.core.config import (ARCH_IDS, SHAPES, TrainConfig, get_config,
                                get_shape)
@@ -57,14 +58,14 @@ def prepare(arch: str, shape_name: str, mesh, *, schedule="balanced",
     p_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     p_sh = param_shardings(p_struct, mesh, par)
     batch_struct, batch_spec = input_specs(cfg, shape, par, mesh)
-    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_spec,
+    batch_sh = compat.tree_map(lambda s: NamedSharding(mesh, s), batch_spec,
                             is_leaf=lambda x: isinstance(x, P))
 
     if shape.kind == "train":
         tc = TrainConfig()
         opt_struct = jax.eval_shape(adamw.init, p_struct)
         opt_sh = adamw.AdamWState(step=NamedSharding(mesh, P()), m=p_sh,
-                                  v=jax.tree.map(lambda s: s, p_sh))
+                                  v=compat.tree_map(lambda s: s, p_sh))
         step = make_train_step(model, tc)
         args = (p_struct, opt_struct, batch_struct)
         shardings = (p_sh, opt_sh, batch_sh)
@@ -153,13 +154,13 @@ def _measure_inner(cfg, shape, mesh, schedule, remat, impl,
     p_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     p_sh = param_shardings(p_struct, mesh, par)
     batch_struct, batch_spec = input_specs(cfg, shape, par, mesh)
-    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_spec,
+    batch_sh = compat.tree_map(lambda s: NamedSharding(mesh, s), batch_spec,
                             is_leaf=lambda x: isinstance(x, P))
     if shape.kind == "train":
         step = make_train_step(model, TrainConfig())
         opt_struct = jax.eval_shape(adamw.init, p_struct)
         opt_sh = adamw.AdamWState(step=NamedSharding(mesh, P()), m=p_sh,
-                                  v=jax.tree.map(lambda s: s, p_sh))
+                                  v=compat.tree_map(lambda s: s, p_sh))
         args, shd = (p_struct, opt_struct, batch_struct), \
             (p_sh, opt_sh, batch_sh)
     elif shape.kind == "prefill":
@@ -172,7 +173,7 @@ def _measure_inner(cfg, shape, mesh, schedule, remat, impl,
         args, shd = (p_struct, cache_struct, batch_struct), \
             (p_sh, cache_sh, batch_sh)
     compiled = jax.jit(step, in_shardings=shd).lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     coll = R.collective_stats(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -218,7 +219,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
     t2 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     coll = R.collective_stats(compiled.as_text())
     if multi_pod:
         # the multi-pod pass proves the 512-chip sharding lowers+compiles

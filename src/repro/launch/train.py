@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.config import (ShapeSpec, TrainConfig, get_config,
                                smoke_config)
 from repro.data.pipeline import SyntheticTokens
@@ -69,7 +70,7 @@ def main(argv=None):
 
     params = model.init(jax.random.PRNGKey(0))
     p_sh = param_shardings(jax.eval_shape(lambda: params), mesh, par)
-    params = jax.tree.map(
+    params = compat.tree_map(
         lambda x, s: jax.device_put(x, s), params, p_sh)
     opt = adamw.init(params)
     tc = TrainConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),

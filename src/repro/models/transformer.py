@@ -25,6 +25,7 @@ from jax import lax
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.config import ModelConfig, ParallelConfig
 from repro.core.dist_attention import (DistAttnSpec, dist_attn_bwd,
                                        dist_attn_fwd, dist_decode_attn,
@@ -160,7 +161,7 @@ def dense_layer_params(key, cfg, dtype, *, is_mla=False, use_moe=False,
 
 
 def _stack(key, n, make):
-    return jax.tree.map(lambda *xs: jnp.stack(xs),
+    return compat.tree_map(lambda *xs: jnp.stack(xs),
                         *[make(k) for k in jax.random.split(key, max(n, 1))])
 
 
@@ -312,7 +313,7 @@ class DecoderLM:
         cfg, rt = self.cfg, self.rt
         period = cfg.hybrid_period
         G = cfg.n_layers // period
-        stacked = jax.tree.map(
+        stacked = compat.tree_map(
             lambda a: a.reshape(G, period, *a.shape[1:]), p["layers"])
         ssm_layer = self._ssm_layer()
         emb0 = h
@@ -616,7 +617,7 @@ class DecoderLM:
         cfg, rt = self.cfg, self.rt
         period = cfg.hybrid_period
         G = cfg.n_layers // period
-        stacked = jax.tree.map(
+        stacked = compat.tree_map(
             lambda a: a.reshape(G, period, *a.shape[1:]), p["layers"])
         emb0 = h
         scfg = self._shared_cfg()
@@ -675,7 +676,7 @@ def _cache_write(cache, new, pos, rt: Runtime):
     def upd(c, x):
         idx = jnp.int32(0)
         for ax in seq_axes:
-            idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+            idx = idx * compat.axis_size(ax) + lax.axis_index(ax)
         slot = pos % (n * S_loc)
         owner = slot // S_loc
         local = slot % S_loc
@@ -683,7 +684,7 @@ def _cache_write(cache, new, pos, rt: Runtime):
                                                 axis=1)
         return jnp.where(idx == owner, upd_c, c)
 
-    fn = jax.shard_map(upd, mesh=rt.mesh, in_specs=(cspec, rspec),
+    fn = compat.shard_map(upd, mesh=rt.mesh, in_specs=(cspec, rspec),
                        out_specs=cspec, check_vma=False)
     return fn(cache, new)
 

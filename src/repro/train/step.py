@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.config import ModelConfig, ShapeSpec, TrainConfig
 from repro.data.pipeline import input_specs
 from repro.models.transformer import Runtime, build_model
@@ -37,7 +38,7 @@ def jit_train_step(model, tc: TrainConfig, params_sh, batch_sh):
     """jit with explicit shardings + donated params/opt."""
     opt_sh = adamw.AdamWState(
         step=NamedSharding(model.rt.mesh, P()),
-        m=params_sh, v=jax.tree.map(lambda s: s, params_sh))
+        m=params_sh, v=compat.tree_map(lambda s: s, params_sh))
     step = make_train_step(model, tc)
     return jax.jit(step,
                    in_shardings=(params_sh, opt_sh, batch_sh),
@@ -70,5 +71,5 @@ def init_sharded(model, tc: TrainConfig, rng):
     opt = jax.jit(adamw.init,
                   out_shardings=adamw.AdamWState(
                       step=NamedSharding(rt.mesh, P()), m=p_sh,
-                      v=jax.tree.map(lambda s: s, p_sh)))(params)
+                      v=compat.tree_map(lambda s: s, p_sh)))(params)
     return params, opt, p_sh

@@ -1,15 +1,115 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — unit/smoke tests must see the
 real single CPU device (the 512-device override is dryrun.py-only).
 Multi-device distribution tests run in subprocesses (see
-test_dist_attention.py) so they can set the flag before jax initializes."""
+test_dist_attention.py) so they can set the flag before jax initializes.
+
+Also installs a minimal ``hypothesis`` fallback shim (seeded-random example
+generation) when the real package is absent, so the property-test modules
+(test_attention_math / test_moe / test_ssm) always collect and run.
+"""
+import functools
+import inspect
 import os
+import random
 import subprocess
 import sys
+import types
 
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+
+# --------------------------------------------------------------------------
+# hypothesis fallback shim
+# --------------------------------------------------------------------------
+
+def _install_hypothesis_shim():
+    """Register a tiny stand-in for the ``hypothesis`` API surface the test
+    suite uses: ``given``, ``settings``, and ``strategies.{integers,
+    sampled_from, booleans, floats}``. Examples are drawn from a
+    deterministic per-test RNG (seeded by the test's qualified name), so
+    runs are reproducible; ``max_examples`` from ``settings`` is honored.
+    """
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw            # rng -> value
+
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    _DEFAULT_EXAMPLES = 10
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        if arg_strats:
+            raise TypeError("shim supports keyword strategies only")
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in kw_strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must not see the strategy-driven parameters as
+            # fixtures: expose a signature with them removed.
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in kw_strats]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__  # stop pytest unwrapping to fn
+            return wrapper
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+    st_mod.floats = floats
+    st_mod.just = just
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__is_repro_shim__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_shim()
+
+
+# --------------------------------------------------------------------------
+# multi-device subprocess runner
+# --------------------------------------------------------------------------
 
 def run_subprocess(code: str, devices: int = 8) -> str:
     """Run a python snippet with N forced host devices; returns stdout."""

@@ -1,0 +1,185 @@
+"""Attention backend registry: differential validation of every registered
+exact backend against the pure-jnp oracle across mask regimes, rescale-math
+property tests, and resolve()/fallback behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention import (chunk_attn, chunk_attn_bwd, empty_partial,
+                                  merge)
+from repro.kernels import registry
+from repro.kernels.ref import chunk_attn_bwd_ref, chunk_attn_ref
+
+EXACT_BACKENDS = [n for n in registry.names() if registry.get(n).exact]
+
+# mask regimes from the ISSUE: causal / non-causal / rel_offset / window
+MASK_CASES = {
+    "causal":      dict(causal=True, rel_offset=0, window=0),
+    "non-causal":  dict(causal=False, rel_offset=0, window=0),
+    "rel-offset":  dict(causal=True, rel_offset=96, window=0),
+    "window":      dict(causal=True, rel_offset=96, window=40),
+}
+
+
+# Tk > chunked.DEFAULT_BLOCK_KV so the chunked-lax legs exercise the real
+# blocked-scan path (nb > 1), not its single-block early return
+def _mk(seed=0, B=1, Tq=64, Tk=256, Hq=4, Hkv=2, D=32, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, Tq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, D), dtype)
+    do = jax.random.normal(ks[3], (B, Tq, Hq, D), dtype)
+    return q, k, v, do
+
+
+@pytest.mark.parametrize("mask", MASK_CASES, ids=list(MASK_CASES))
+@pytest.mark.parametrize("backend", EXACT_BACKENDS)
+def test_backend_matches_ref(backend, mask):
+    """Every registered exact backend × every mask regime agrees with the
+    oracle within fp32 tolerance, forward and backward. ``pallas`` resolves
+    through its CPU fallback chain here — that path must stay exact too."""
+    kw = MASK_CASES[mask]
+    q, k, v, do = _mk()
+    o_r, l_r = chunk_attn_ref(q, k, v, causal=kw["causal"],
+                              q_offset=kw["rel_offset"], window=kw["window"])
+    o_b, l_b = chunk_attn(q, k, v, impl=backend, **kw)
+    np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r), atol=1e-5)
+    m = (l_r > -1e29) | (l_b > -1e29)
+    np.testing.assert_allclose(np.asarray(jnp.where(m, l_b, 0)),
+                               np.asarray(jnp.where(m, l_r, 0)), atol=1e-4)
+    g_r = chunk_attn_bwd_ref(q, k, v, o_r, l_r, do, causal=kw["causal"],
+                             q_offset=kw["rel_offset"], window=kw["window"])
+    g_b = chunk_attn_bwd(q, k, v, o_b, l_b, do, impl=backend, **kw)
+    for a, b in zip(g_b, g_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+@pytest.mark.parametrize("backend",
+                         [n for n in EXACT_BACKENDS if n != "ref"])
+def test_backend_gqa_and_asymmetric_dv(backend):
+    """GQA grouping and MLA-style Dk != Dv shapes survive every backend."""
+    q, k, _, _ = _mk(seed=3, Hq=4, Hkv=2, D=48)
+    v = jax.random.normal(jax.random.PRNGKey(9), (1, 256, 2, 24))
+    o_r, l_r = chunk_attn_ref(q, k, v, causal=True, scale=0.2)
+    o_b, l_b = chunk_attn(q, k, v, causal=True, scale=0.2, impl=backend)
+    np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r), atol=1e-5)
+
+
+def test_chunked_lax_block_picking_and_odd_lengths():
+    """Block selection avoids the degenerate near-token-level scan for
+    prime-ish KV lengths (falls back to single-block), and the backend
+    stays exact at a non-power-of-two length."""
+    from repro.kernels.chunked import _pick_block
+    assert _pick_block(256, 128) == 128      # clean blocking
+    assert _pick_block(96, 128) == 96        # Tk smaller than target
+    assert _pick_block(257, 128) == 257      # prime: single block, no bc=1
+    assert _pick_block(262, 128) == 262      # 2×131: single block, no bc=2
+    q, _, _, do = _mk(seed=5)
+    k = jax.random.normal(jax.random.PRNGKey(6), (1, 257, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(7), (1, 257, 2, 32))
+    o_r, l_r = chunk_attn_ref(q, k, v, causal=True, q_offset=200)
+    o_b, l_b = chunk_attn(q, k, v, causal=True, rel_offset=200,
+                          impl="chunked-lax")
+    np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r), atol=1e-5)
+
+
+# ------------------------------------------------------------ rescale math
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from([2, 3, 4, 5]))
+def test_merge_associative_and_order_independent(seed, n):
+    """Any merge order/association of the per-chunk partials is identical —
+    the invariant that lets the balanced schedule fold helper results in as
+    they arrive."""
+    B, T, H, D = 1, 8, 2, 4
+    rng = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(rng, 0), (B, T, H, D))
+    parts = []
+    for i in range(n):
+        k = jax.random.normal(jax.random.fold_in(rng, 2 * i + 1),
+                              (B, T, H, D))
+        v = jax.random.normal(jax.random.fold_in(rng, 2 * i + 2),
+                              (B, T, H, D))
+        parts.append(chunk_attn_ref(q, k, v))
+    # left fold in order
+    o1, l1 = parts[0]
+    for o, l in parts[1:]:
+        o1, l1 = merge(o1, l1, o, l)
+    # fold in a seed-dependent permuted order with different association
+    order = list(np.random.RandomState(seed).permutation(n))
+    o2, l2 = empty_partial(q)
+    for i in order:
+        o2, l2 = merge(*parts[i], o2, l2)       # also flips argument order
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_mask_partial_is_merge_identity(seed):
+    """mask_partial(False, ·) produces the identity element of merge."""
+    from repro.core.attention import mask_partial
+    B, T, H, D = 1, 8, 2, 4
+    rng = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(rng, 0), (B, T, H, D))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, H, D))
+    o, lse = chunk_attn_ref(q, k, k)
+    om, lm = mask_partial(jnp.bool_(False), o, lse)
+    e_o, e_l = empty_partial(q)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(e_o))
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(e_l))
+    o2, l2 = merge(om, lm, o, lse)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(lse), atol=1e-6)
+
+
+# ------------------------------------------------------- resolve / fallback
+
+def test_resolve_pallas_on_cpu_downgrades_not_crashes():
+    be = registry.resolve("pallas", platform="cpu")
+    assert be.name in ("pallas-interpret", "chunked-lax", "ref")
+    assert be.unsupported_reason(platform="cpu") is None
+    # the downgrade is recorded (logged once per triple)
+    assert ("pallas", be.name, "cpu") in registry._WARNED
+
+
+def test_resolve_on_tpu_keeps_pallas():
+    assert registry.resolve("pallas", platform="tpu").name == "pallas"
+
+
+def test_resolve_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        registry.resolve("cudnn-flash")
+
+
+def test_resolve_name_normalization():
+    """Pre-registry spelling (underscores) still resolves."""
+    assert registry.resolve("pallas_interpret", platform="cpu").name == \
+        "pallas-interpret"
+
+
+def test_resolve_default_roundtrip():
+    assert registry.resolve(None).name == registry.default_name()
+    old = registry.default_name()
+    try:
+        registry.set_default("chunked-lax")
+        assert registry.resolve(None).name == "chunked-lax"
+        with pytest.raises(ValueError):
+            registry.set_default("bogus")
+    finally:
+        registry.set_default(old)
+
+
+def test_null_backend_is_marked_inexact_and_never_a_fallback():
+    assert not registry.get("null").exact
+    for name in registry.names():
+        assert "null" not in registry.get(name).fallback, name
+
+
+def test_capability_flags_reported():
+    spec = registry.get("chunked-lax")
+    assert spec.causal and spec.window and spec.rel_offset
+    assert "cpu" in spec.platforms and "tpu" in spec.platforms
+    assert registry.get("pallas").platforms == ("tpu",)

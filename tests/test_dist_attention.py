@@ -174,6 +174,47 @@ except ValueError:
     assert out.count("OK") == 4
 
 
+@pytest.mark.parametrize("P", [5, 8], ids=["odd-P", "even-P"])
+def test_cross_schedule_golden(subproc, P):
+    """Golden cross-schedule agreement: balanced vs ring vs single-device
+    full attention match within fp32 tolerance on odd and even P, and the
+    registry's chunked-lax backend gives the same answer as ref inside the
+    distributed schedules."""
+    out = subproc(f"""
+import jax, jax.numpy as jnp
+from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
+from repro.kernels.ref import full_attn_ref
+P = {P}
+mesh = jax.make_mesh((1, P), ("data", "model"))
+B, H, Hkv, D = 2, 4, 2, 16
+N = P * 32
+ks = jax.random.split(jax.random.PRNGKey(3), 3)
+q = jax.random.normal(ks[0], (B, N, H, D))
+k = jax.random.normal(ks[1], (B, N, Hkv, D))
+v = jax.random.normal(ks[2], (B, N, Hkv, D))
+o_single = full_attn_ref(q, k, v, causal=True)   # single-device oracle
+outs = {{}}
+for sched, impl in [("balanced", None), ("ring", None),
+                    ("balanced", "chunked-lax")]:
+    spec = DistAttnSpec(axis="model", axis_size=P, schedule=sched,
+                        causal=True, impl=impl)
+    o, _ = jax.jit(lambda a, b, c: dist_attn_fwd(
+        a, b, c, mesh=mesh, spec=spec, batch_axes=None))(q, k, v)
+    err = float(jnp.abs(o - o_single).max())
+    assert err < 2e-5, (sched, impl, err)
+    outs[(sched, impl)] = o
+    print("OK", sched, impl or "ref", err)
+d_sched = float(jnp.abs(outs[("balanced", None)]
+                        - outs[("ring", None)]).max())
+assert d_sched < 2e-5, d_sched
+d_impl = float(jnp.abs(outs[("balanced", None)]
+                       - outs[("balanced", "chunked-lax")]).max())
+assert d_impl < 2e-5, d_impl
+print("OK cross", d_sched, d_impl)
+""", devices=P)
+    assert out.count("OK") == 4
+
+
 def test_mla_latent_ring_prefill(subproc):
     """Latent-ring MLA prefill == materialized-KV prefill (model level)."""
     out = subproc("""

@@ -7,6 +7,7 @@ import pytest
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.analysis import roofline as R
 from repro.core.config import (ShapeSpec, TrainConfig, get_config,
                                smoke_config)
@@ -31,7 +32,7 @@ def test_lower_compile_and_analyses(arch, shape_kind):
     p_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     p_sh = param_shardings(p_struct, mesh, par)
     batch_struct, batch_spec = input_specs(cfg, shape, par, mesh)
-    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_spec,
+    batch_sh = compat.tree_map(lambda s: NamedSharding(mesh, s), batch_spec,
                             is_leaf=lambda x: isinstance(x, P))
     if shape_kind == "train":
         step = make_train_step(model, TrainConfig())
@@ -47,7 +48,7 @@ def test_lower_compile_and_analyses(arch, shape_kind):
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     assert mem.argument_size_in_bytes > 0
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     assert cost.get("flops", 0) > 0
 
 

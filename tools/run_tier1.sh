@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 test runner: pins PYTHONPATH=src and runs the suite on CPU.
+#
+#   tools/run_tier1.sh            # default run (slow-marked params skipped)
+#   tools/run_tier1.sh --all      # include slow-marked params
+#   tools/run_tier1.sh tests/test_kernels.py   # extra args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+MARK="not slow"
+if [[ "${1:-}" == "--all" ]]; then
+    MARK=""
+    shift
+fi
+exec python -m pytest -q --durations=10 -m "$MARK" "$@"
