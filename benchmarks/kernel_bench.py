@@ -1,0 +1,222 @@
+"""Tracked microbenchmark for the chunk-attention kernels.
+
+Measures, per mask regime (causal × window × rel_offset) and backend
+(``pallas-interpret``, ``chunked-lax``), forward and backward:
+
+  * the static grid-work profile of the block-sparse pruning — dense steps,
+    launched steps, executed steps, work ratio — derived from the *same*
+    ``block_sparse`` ranges the kernels size their grids with;
+  * median wall-clock of the pruned kernel vs the dense (``prune=False``)
+    sweep on this host.
+
+Results are written to ``BENCH_kernels.json`` (repo root by default) so the
+kernel perf trajectory is tracked in-repo from PR 2 onward; CI runs
+``python -m benchmarks.kernel_bench --smoke`` and uploads the file as an
+artifact per PR.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.block_sparse import kv_profile, q_profile
+from repro.kernels.chunked import chunked_bwd, chunked_fwd
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_kernels.json")
+
+
+def _regimes(T):
+    """Mask regimes keyed to the distributed schedules' chunk_attn sites
+    (DESIGN.md §2): T is the per-device chunk length."""
+    return {
+        # step 0 of every schedule: the local causal chunk (~2x dense work)
+        "local_causal": dict(causal=True, rel_offset=0, window=0),
+        # local chunk under a sliding window (Appendix F variant)
+        "local_causal_window": dict(causal=True, rel_offset=0, window=T // 4),
+        # ring step t=2: strictly causal pair, mask-free — nothing to prune,
+        # tracked to show pruning adds no overhead where it can't win
+        "ring_step_full": dict(causal=False, rel_offset=2 * T, window=0),
+        # windowed ring step t=1: only the trailing window band is live
+        "ring_step_window": dict(causal=False, rel_offset=T, window=T // 2),
+    }
+
+
+def _timeit_pair(fn_a, fn_b, iters):
+    """Median µs of two variants, iterations interleaved A/B so slow drift
+    in background load hits both equally (host CPU timing is noisy)."""
+    fn_a()                                 # warmup / compile
+    fn_b()
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return statistics.median(ta) * 1e6, statistics.median(tb) * 1e6
+
+
+def _mk(B, T, H, D, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, T, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, D), dtype)
+    do = jax.random.normal(ks[3], (B, T, H, D), dtype)
+    return q, k, v, do
+
+
+def _grid_metrics(prof):
+    return dict(full_steps=prof.full_steps, launched_steps=prof.launched_steps,
+                executed_steps=prof.executed_steps, seq_grid=prof.seq_grid,
+                work_ratio=round(prof.work_ratio, 4)
+                if prof.executed_steps else None)
+
+
+def _pallas_runners(q, k, v, do, kw, bq, bk):
+    def fwd(prune):
+        def run():
+            o, lse = ops.flash_fwd(q, k, v, block_q=bq, block_kv=bk,
+                                   interpret=True, prune=prune, **kw)
+            jax.block_until_ready(o)
+        return run
+
+    o, lse = ops.flash_fwd(q, k, v, block_q=bq, block_kv=bk, interpret=True,
+                           **kw)
+
+    def bwd(prune):
+        def run():
+            g = ops.flash_bwd(q, k, v, o, lse, do, block_q=bq, block_kv=bk,
+                              interpret=True, prune=prune, **kw)
+            jax.block_until_ready(g)
+        return run
+    return fwd, bwd
+
+
+def _chunked_runners(q, k, v, do, kw, bk):
+    def fwd(prune):
+        fn = jax.jit(lambda q, k, v: chunked_fwd(q, k, v, block_kv=bk,
+                                                 prune=prune, **kw))
+
+        def run():
+            jax.block_until_ready(fn(q, k, v))
+        return run
+
+    o, lse = chunked_fwd(q, k, v, block_kv=bk, **kw)
+
+    def bwd(prune):
+        fn = jax.jit(lambda q, k, v, o, lse, do: chunked_bwd(
+            q, k, v, o, lse, do, block_kv=bk, prune=prune, **kw))
+
+        def run():
+            jax.block_until_ready(fn(q, k, v, o, lse, do))
+        return run
+    return fwd, bwd
+
+
+def run_bench(*, T, B, H, D, bq, bk, iters, backends):
+    q, k, v, do = _mk(B, T, H, D)
+    nq, nk = T // bq, T // bk
+    cases = []
+    for regime, kw in _regimes(T).items():
+        fwd_prof = kv_profile(nq=nq, nk=nk, br=bq, bc=bk, **kw)
+        dkv_prof = q_profile(nq=nq, nk=nk, br=bq, bc=bk, **kw)
+        bwd_grid = dict(  # dq sweeps the kv grid, dkv the transposed q grid
+            full_steps=fwd_prof.full_steps + dkv_prof.full_steps,
+            launched_steps=fwd_prof.launched_steps + dkv_prof.launched_steps,
+            executed_steps=fwd_prof.executed_steps + dkv_prof.executed_steps,
+            seq_grid=max(fwd_prof.seq_grid, dkv_prof.seq_grid))
+        ex = bwd_grid["executed_steps"]
+        bwd_grid["work_ratio"] = (round(bwd_grid["full_steps"] / ex, 4)
+                                  if ex else None)
+        # chunked-lax has a single q block (the whole chunk), so its scan
+        # can only prune whole-KV-chunk extremes — profile it as such
+        scan_prof = kv_profile(nq=1, nk=nk, br=T, bc=bk, **kw)
+        for backend in backends:
+            if backend == "pallas-interpret":
+                mk_fwd, mk_bwd = _pallas_runners(q, k, v, do, kw, bq, bk)
+                grids = (_grid_metrics(fwd_prof), bwd_grid)
+            else:
+                mk_fwd, mk_bwd = _chunked_runners(q, k, v, do, kw, bk)
+                grids = (_grid_metrics(scan_prof), _grid_metrics(scan_prof))
+            for op, mk_run, grid in (("fwd", mk_fwd, grids[0]),
+                                     ("bwd", mk_bwd, grids[1])):
+                pruned_us, dense_us = _timeit_pair(mk_run(True), mk_run(False),
+                                                   iters)
+                case = dict(
+                    name=f"{regime}/{op}/{backend}",
+                    regime=dict(kw), op=op, backend=backend,
+                    shape=dict(B=B, T=T, H=H, D=D, block_q=bq, block_kv=bk,
+                               nq=nq, nk=nk),
+                    grid=grid,
+                    wall_us=dict(pruned=round(pruned_us, 1),
+                                 dense=round(dense_us, 1),
+                                 speedup=round(dense_us / pruned_us, 3)),
+                )
+                cases.append(case)
+                print(f"{case['name']:46s} steps {grid['executed_steps']:4d}"
+                      f"/{grid['full_steps']:4d}"
+                      f" (x{grid['work_ratio'] or 1:.2f})"
+                      f"  wall {pruned_us/1e3:8.1f}ms vs {dense_us/1e3:8.1f}ms"
+                      f" (x{dense_us / pruned_us:.2f})", flush=True)
+    return cases
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few iters (CI per-PR tracking)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        shape = dict(T=256, B=1, H=2, D=32, bq=32, bk=32)   # nq = nk = 8
+        iters = args.iters or 2
+    else:
+        shape = dict(T=1024, B=1, H=2, D=64, bq=128, bk=128)  # nq = nk = 8
+        iters = args.iters or 5
+
+    cases = run_bench(**shape, iters=iters,
+                      backends=("pallas-interpret", "chunked-lax"))
+
+    # headline number tracked across PRs: grid-step work ratio of the local
+    # causal chunk (the step every schedule executes on every device). The
+    # wall figure is only meaningful at the full shapes — smoke tiles are
+    # small enough that per-tile branch overhead drowns the signal, so the
+    # smoke summary rests on the deterministic step ratio alone.
+    local_fwd = next(c for c in cases
+                     if c["name"] == "local_causal/fwd/pallas-interpret")
+    summary = dict(
+        local_causal_step_ratio=local_fwd["grid"]["work_ratio"],
+        local_causal_wall_speedup=(None if args.smoke
+                                   else local_fwd["wall_us"]["speedup"]),
+    )
+    out = dict(version=1, generated_by="benchmarks/kernel_bench.py",
+               smoke=bool(args.smoke),
+               host=dict(platform=jax.default_backend(), jax=jax.__version__),
+               shape=shape, iters=iters, summary=summary, cases=cases)
+    path = os.path.abspath(args.out)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    wall = summary["local_causal_wall_speedup"]
+    print(f"summary: local causal chunk executes "
+          f"{summary['local_causal_step_ratio']}x fewer grid steps"
+          + (f", wall x{wall}" if wall else " (smoke: wall tracked per-case"
+             " only; too noisy at smoke shapes for a headline)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,13 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. Wall-clock rows are measured
-on this host (CPU; 8 forced host devices in subprocess benches); derived
-rows are analytic or HLO-derived quantities that reproduce the paper's
-comparisons where real multi-GPU wall time is unavailable.
+on this host (CPU; 8 forced host devices in subprocess benches) as the
+median over iterations (robust to CPU timing noise); derived rows are
+analytic or HLO-derived quantities that reproduce the paper's comparisons
+where real multi-GPU wall time is unavailable. ``--json OUT`` additionally
+writes the rows to a machine-readable JSON file.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4,table5]
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,table5] [--json F]
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ import argparse
 import glob
 import json
 import os
+import statistics
 import subprocess
 import sys
 import time
@@ -36,10 +39,12 @@ def row(name, us, derived=""):
 
 def _timeit(fn, iters=5):
     fn()  # warmup/compile
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / iters * 1e6
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6  # median-of-iters: noise-robust
 
 
 # ---------------------------------------------------------------- figure 4
@@ -256,11 +261,21 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows to a machine-readable JSON file")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    if args.json:
+        rows = [dict(name=n, us_per_call=us, derived=d)
+                for n, us, d in ROWS]
+        with open(args.json, "w") as f:
+            json.dump(dict(version=1, generated_by="benchmarks/run.py",
+                           benches=names, rows=rows), f, indent=1)
+            f.write("\n")
+        print(f"wrote {os.path.abspath(args.json)}", file=sys.stderr)
 
 
 if __name__ == "__main__":

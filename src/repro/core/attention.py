@@ -28,25 +28,38 @@ def set_default_impl(impl: str) -> None:
     registry.set_default(impl)
 
 
+def _tuning_kw(be, block_q, block_kv):
+    """block_q/block_kv hints are forwarded only to backends that declare
+    ``tunable_blocks`` (Pallas tile shapes, chunked-lax scan chunk); other
+    backends silently ignore the hints rather than erroring."""
+    if not be.tunable_blocks:
+        return {}
+    return registry.block_tuning_kw(block_q, block_kv)
+
+
 def chunk_attn(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
-               impl=None):
+               impl=None, block_q=None, block_kv=None):
     """Partial attention. ``rel_offset`` = absolute(q0) − absolute(kv0),
-    static per schedule step. Returns (o, lse)."""
+    static per schedule step. ``block_q``/``block_kv`` are optional tile-
+    shape hints for tunable backends. Returns (o, lse)."""
     be = registry.resolve(impl, causal=causal, window=window,
                           rel_offset=rel_offset, dtype=q.dtype)
     return be.fwd(q, k, v, causal=causal, rel_offset=rel_offset,
-                  window=window, scale=scale)
+                  window=window, scale=scale,
+                  **_tuning_kw(be, block_q, block_kv))
 
 
 def chunk_attn_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0,
-                   window=0, scale=None, impl=None, delta=None):
+                   window=0, scale=None, impl=None, delta=None,
+                   block_q=None, block_kv=None):
     """FA2 backward for one chunk using the saved (o, lse) — no forward
     recompute. ``delta = rowsum(o⊙do)`` may be precomputed (the distributed
     helper path ships delta instead of o). Returns (dq, dk, dv)."""
     be = registry.resolve(impl, causal=causal, window=window,
                           rel_offset=rel_offset, dtype=q.dtype)
     return be.bwd(q, k, v, o, lse, do, causal=causal, rel_offset=rel_offset,
-                  window=window, scale=scale, delta=delta)
+                  window=window, scale=scale, delta=delta,
+                  **_tuning_kw(be, block_q, block_kv))
 
 
 merge = merge_ref  # (o1, lse1, o2, lse2) -> (o, lse)

@@ -66,6 +66,16 @@ class DistAttnSpec:
     # attention backend name resolved via repro.kernels.registry (None =
     # process default); capability/platform fallback happens at resolve time
     impl: Optional[str] = None
+    # per-call-site kernel tile hints, forwarded to tunable backends only
+    # (Pallas block shapes / chunked-lax scan chunk). None = backend default.
+    block_q: Optional[int] = None
+    block_kv: Optional[int] = None
+
+
+def _tune(spec: DistAttnSpec) -> dict:
+    """chunk_attn tuning kwargs carried by the spec (scale + tile hints)."""
+    return dict(scale=spec.scale, impl=spec.impl, block_q=spec.block_q,
+                block_kv=spec.block_kv)
 
 
 def _shift(x, axis, shift, size):
@@ -94,7 +104,7 @@ def _fwd_ring(spec, q, k, v):
     p = lax.axis_index(spec.axis)
     P_, Tc = spec.axis_size, q.shape[1]
     o, s = chunk_attn(q, k, v, causal=spec.causal, rel_offset=0,
-                      window=spec.window, scale=spec.scale, impl=spec.impl)
+                      window=spec.window, **_tune(spec))
     n = _ring_steps(spec, Tc)
     if n == 0:
         return o, s
@@ -103,8 +113,7 @@ def _fwd_ring(spec, q, k, v):
         kv_next = _shift(kv, spec.axis, 1, P_) if t < n else None  # overlap
         rel = t * Tc
         o_t, s_t = chunk_attn(q, kv[0], kv[1], causal=False, rel_offset=rel,
-                              window=spec.window, scale=spec.scale,
-                              impl=spec.impl)
+                              window=spec.window, **_tune(spec))
         if spec.causal:
             o_t, s_t = mask_partial(p >= t, o_t, s_t)
         o, s = merge(o, s, o_t, s_t)
@@ -117,7 +126,7 @@ def _fwd_balanced(spec, q, k, v):
     assert spec.causal and not spec.window, "balanced schedule is causal/full"
     p = lax.axis_index(spec.axis)
     P_, Tc = spec.axis_size, q.shape[1]
-    o, s = chunk_attn(q, k, v, causal=True, scale=spec.scale, impl=spec.impl)
+    o, s = chunk_attn(q, k, v, causal=True, **_tune(spec))
     if P_ == 1:
         return o, s
     T = P_ // 2
@@ -135,7 +144,7 @@ def _fwd_balanced(spec, q, k, v):
         k_sel = jnp.where(is_worker, kv[0], k)
         v_sel = jnp.where(is_worker, kv[1], v)
         o_t, s_t = chunk_attn(q_sel, k_sel, v_sel, causal=False,
-                              scale=spec.scale, impl=spec.impl)
+                              **_tune(spec))
         o_w, s_w = mask_partial(is_worker, o_t, s_t)
         o, s = merge(o, s, o_w, s_w)
         if helpers:
@@ -168,7 +177,7 @@ def _fwd_ulysses(spec, q, k, v):
                               tiled=True)
     qh, kh, vh = a2a(q), a2a(k), a2a(v)          # (B, T_glob, H/P, D)
     o, s = chunk_attn(qh, kh, vh, causal=spec.causal, window=spec.window,
-                      scale=spec.scale, impl=spec.impl)
+                      **_tune(spec))
     # lse (B, T_glob, H/P) -> (B, T_loc, H): split seq, concat heads
     s_back = lax.all_to_all(s, spec.axis, split_axis=1, concat_axis=2,
                             tiled=True)
@@ -211,7 +220,7 @@ def _bwd_ring(spec, q, k, v, o, s, do):
     delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)  # (B,T,H)
     dq_l, dk_l, dv_l = chunk_attn_bwd(
         q, k, v, o, s, do, causal=spec.causal, rel_offset=0,
-        window=spec.window, scale=spec.scale, impl=spec.impl)
+        window=spec.window, **_tune(spec))
     dq = dq_l.astype(f32)
     dkv_home = (dk_l.astype(f32), dv_l.astype(f32))
     n = _ring_steps(spec, Tc)
@@ -227,7 +236,7 @@ def _bwd_ring(spec, q, k, v, o, s, do):
         rel = t * Tc
         dq_t, dk_t, dv_t = chunk_attn_bwd(
             q, kv[0], kv[1], o, s, do, causal=False, rel_offset=rel,
-            window=spec.window, scale=spec.scale, impl=spec.impl,
+            window=spec.window, **_tune(spec),
             delta=delta)
         valid = (p >= t) if spec.causal else jnp.bool_(True)
         w = valid.astype(f32)
@@ -248,7 +257,7 @@ def _bwd_balanced(spec, q, k, v, o, s, do):
     P_, Tc = spec.axis_size, q.shape[1]
     f32 = jnp.float32
     dq_l, dk_l, dv_l = chunk_attn_bwd(q, k, v, o, s, do, causal=True,
-                                      scale=spec.scale, impl=spec.impl)
+                                      **_tune(spec))
     dq = dq_l.astype(f32)
     dk_home = dk_l.astype(f32)
     dv_home = dv_l.astype(f32)
@@ -277,7 +286,7 @@ def _bwd_balanced(spec, q, k, v, o, s, do):
         d_sel = jnp.where(is_worker, delta, qb[3])
         dq_t, dk_t, dv_t = chunk_attn_bwd(
             q_sel, k_sel, v_sel, o_unused, s_sel, do_sel, causal=False,
-            scale=spec.scale, impl=spec.impl, delta=d_sel)
+            **_tune(spec), delta=d_sel)
         w_w = is_worker.astype(f32)
         dq = dq + dq_t.astype(f32) * w_w                 # worker: local dq
         dkv = (dkv[0] + dk_t.astype(f32) * w_w,          # worker: traveling dkv
@@ -307,7 +316,7 @@ def _bwd_balanced(spec, q, k, v, o, s, do):
 def _fwd_local(spec, q, k, v):
     if spec.axis_size == 1:
         return chunk_attn(q, k, v, causal=spec.causal, window=spec.window,
-                          scale=spec.scale, impl=spec.impl)
+                          **_tune(spec))
     if spec.schedule == "balanced" and spec.causal and not spec.window:
         return _fwd_balanced(spec, q, k, v)
     if spec.schedule == "zigzag" and spec.causal and not spec.window:
@@ -322,8 +331,7 @@ def _fwd_local(spec, q, k, v):
 def _bwd_local(spec, q, k, v, o, s, do):
     if spec.axis_size == 1:
         return chunk_attn_bwd(q, k, v, o, s, do, causal=spec.causal,
-                              window=spec.window, scale=spec.scale,
-                              impl=spec.impl)
+                              window=spec.window, **_tune(spec))
     if spec.schedule == "balanced" and spec.causal and not spec.window:
         return _bwd_balanced(spec, q, k, v, o, s, do)
     if spec.schedule == "zigzag" and spec.causal and not spec.window:
@@ -521,12 +529,9 @@ def _fwd_zigzag(spec, q, k, v):
     k_a, k_b = k[:, :c], k[:, c:]
     v_a, v_b = v[:, :c], v[:, c:]
     # local step: a×a causal; b̄×a full; b̄×b̄ causal
-    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, scale=spec.scale,
-                          impl=spec.impl)
-    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, scale=spec.scale,
-                            impl=spec.impl)
-    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, scale=spec.scale,
-                            impl=spec.impl)
+    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, **_tune(spec))
+    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, **_tune(spec))
+    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, **_tune(spec))
     o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
     if P_ == 1:
         return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
@@ -538,8 +543,7 @@ def _fwd_zigzag(spec, q, k, v):
         w = p >= t
         # pair 1 -> (q_a if worker else q_b) × kv_a
         q1 = jnp.where(w, q_a, q_b)
-        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, scale=spec.scale,
-                            impl=spec.impl)
+        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, **_tune(spec))
         o1a, s1a = mask_partial(w, o1, s1)
         o_a, s_a = merge(o_a, s_a, o1a, s1a)
         o1b, s1b = mask_partial(~w, o1, s1)
@@ -547,8 +551,7 @@ def _fwd_zigzag(spec, q, k, v):
         # pair 2 -> q_b × (kv_a if worker else kv_b̄)
         k2 = jnp.where(w, ka_r, kb_r)
         v2 = jnp.where(w, va_r, vb_r)
-        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, scale=spec.scale,
-                            impl=spec.impl)
+        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, **_tune(spec))
         o_b, s_b = merge(o_b, s_b, o2, s2)
         kv = kv_next
     return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
@@ -565,8 +568,7 @@ def _bwd_zigzag(spec, q, k, v, o, s, do):
 
     def cb(qs, ks, vs, ss, dos, ds, causal):
         return chunk_attn_bwd(qs, ks, vs, jnp.zeros_like(qs), ss, dos,
-                              causal=causal, scale=spec.scale,
-                              impl=spec.impl, delta=ds)
+                              causal=causal, **_tune(spec), delta=ds)
 
     # local pairs
     dq = jnp.zeros(q.shape, f32)
@@ -645,12 +647,9 @@ def _fwd_zigzag_latent(spec, q, k, v, payload, w_up, expand):
     q_a, q_b = q[:, :c], q[:, c:]
     k_a, k_b = k[:, :c], k[:, c:]
     v_a, v_b = v[:, :c], v[:, c:]
-    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, scale=spec.scale,
-                          impl=spec.impl)
-    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, scale=spec.scale,
-                            impl=spec.impl)
-    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, scale=spec.scale,
-                            impl=spec.impl)
+    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, **_tune(spec))
+    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, **_tune(spec))
+    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, **_tune(spec))
     o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
     if P_ == 1:
         return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
@@ -662,16 +661,14 @@ def _fwd_zigzag_latent(spec, q, k, v, payload, w_up, expand):
         va_r, vb_r = v_r[:, :c], v_r[:, c:]
         w = p >= t
         q1 = jnp.where(w, q_a, q_b)
-        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, scale=spec.scale,
-                            impl=spec.impl)
+        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, **_tune(spec))
         o1a, s1a = mask_partial(w, o1, s1)
         o_a, s_a = merge(o_a, s_a, o1a, s1a)
         o1b, s1b = mask_partial(~w, o1, s1)
         o_b, s_b = merge(o_b, s_b, o1b, s1b)
         k2 = jnp.where(w, ka_r, kb_r)
         v2 = jnp.where(w, va_r, vb_r)
-        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, scale=spec.scale,
-                            impl=spec.impl)
+        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, **_tune(spec))
         o_b, s_b = merge(o_b, s_b, o2, s2)
         pl = pl_next
     return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)

@@ -1,0 +1,166 @@
+"""Static block-sparsity ranges for the chunk-attention kernels.
+
+The schedules guarantee ``(causal, rel_offset, window)`` are static per step
+(DESIGN.md §2), so for a fixed block tiling the set of (q-block, kv-block)
+pairs the mask can reach is computable at trace time. This module is the
+single source of truth for those ranges — the Pallas kernels
+(``flash_attention.py``), the ``chunked-lax`` backend (``chunked.py``) and
+the kernel microbench (``benchmarks/kernel_bench.py``) all derive their
+iteration spaces from the same three functions, so CPU CI exercises the
+identical block-range logic the TPU kernels run.
+
+Conventions. Q block ``i`` covers absolute query positions
+``[rel_offset + i*br, rel_offset + (i+1)*br - 1]``; KV block ``j`` covers
+``[j*bc, (j+1)*bc - 1]`` (kv offset 0, matching ``chunk_attn`` semantics).
+A position pair attends iff ``kp <= qp`` (causal) and ``qp - kp < window``
+(window > 0). All bounds are **inclusive**; an empty range is returned as
+``hi < lo`` (callers clamp ``count = max(hi - lo + 1, 0)``).
+
+Every function accepts either Python ints (grid sizing, ``chunked-lax``)
+or traced int32 scalars (Pallas kernel bodies and index maps): ``//`` is
+floor division in both worlds, and min/max dispatch on the operand type.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _static(*xs) -> bool:
+    return all(isinstance(x, (int, np.integer)) for x in xs)
+
+
+def _mn(a, b):
+    if _static(a, b):
+        return min(a, b)
+    import jax.numpy as jnp
+    return jnp.minimum(a, b)
+
+
+def _mx(a, b):
+    if _static(a, b):
+        return max(a, b)
+    import jax.numpy as jnp
+    return jnp.maximum(a, b)
+
+
+def _cdiv(a, b):
+    """Ceil division with floor-div semantics shared by int and traced."""
+    return -(-a // b)
+
+
+def pick_block(T: int, block: int) -> int:
+    """Largest divisor of T that is ≤ ``block`` (grids and scans need equal
+    blocks, so a non-dividing tuning hint is shrunk, not crashed on). When T
+    has no useful divisor near the target (prime-ish lengths), blocking
+    would degenerate into a near-token-level sweep — return T itself so the
+    caller takes the single-block path."""
+    b = min(block, T)
+    while T % b:
+        b -= 1
+    if b < min(32, T):
+        return T
+    return b
+
+
+def kv_block_bounds(i, *, br, bc, nk, causal, rel_offset, window):
+    """Inclusive (lo, hi) of KV blocks that q block ``i`` can attend to.
+
+    A KV block is in range iff *some* (qp, kp) pair in the (br × bc) tile is
+    unmasked. ``hi < lo`` means the whole row is masked. ``lo >= 0`` and
+    ``hi <= nk - 1`` always; ``hi`` may be negative when even KV block 0 is
+    above the causal diagonal.
+    """
+    qs = rel_offset + i * br                 # first q position of the block
+    qe = qs + br - 1                         # last
+    # causal: block j reachable iff its first key j*bc <= the last query qe
+    hi = _mn(nk - 1, qe // bc) if causal else nk - 1
+    # window: block j reachable iff its last key (j+1)*bc - 1 >= qs - window + 1
+    lo = _mx(0, _cdiv(qs - window + 2, bc) - 1) if window and window > 0 else 0
+    return lo, hi
+
+
+def interior_kv_bounds(i, *, br, bc, nk, causal, rel_offset, window):
+    """Inclusive (lo, hi) of KV blocks the mask cannot touch for q block
+    ``i`` — *every* (qp, kp) pair in the tile is unmasked, so the kernel may
+    skip ``_pos_mask`` entirely. Empty (``hi < lo``) when no interior block
+    exists (e.g. the diagonal row of a causal chunk)."""
+    qs = rel_offset + i * br
+    qe = qs + br - 1
+    # causal: fully below the diagonal iff the last key (j+1)*bc - 1 <= qs
+    hi = _mn(nk - 1, (qs + 1) // bc - 1) if causal else nk - 1
+    # window: fully inside iff the first key j*bc > qe - window
+    lo = _mx(0, (qe - window) // bc + 1) if window and window > 0 else 0
+    return lo, hi
+
+
+def q_block_bounds(j, *, br, bc, nq, causal, rel_offset, window):
+    """Inclusive (lo, hi) of Q blocks that can attend to KV block ``j`` —
+    the transpose of :func:`kv_block_bounds`, used by the dkv kernel (grid
+    over KV blocks, sequential over Q blocks)."""
+    ks = j * bc                              # first key position of the block
+    ke = ks + bc - 1                         # last
+    # causal: q block i reachable iff its last query >= ks
+    lo = (_mx(0, _cdiv(ks - rel_offset + 1, br) - 1) if causal else 0)
+    # window: q block i reachable iff its first query <= ke + window - 1
+    hi = (_mn(nq - 1, (ke + window - 1 - rel_offset) // br)
+          if window and window > 0 else nq - 1)
+    return lo, hi
+
+
+# --------------------------------------------------------------- profiles
+
+
+@dataclasses.dataclass(frozen=True)
+class GridProfile:
+    """Static work profile of one pruned kernel launch.
+
+    ``rows`` is the parallel grid dimension (q blocks for fwd/dq, kv blocks
+    for dkv); ``row_counts[r]`` the number of valid sequential blocks for
+    row ``r``. The pruned kernel launches ``rows × seq_grid`` steps and
+    executes compute on ``executed_steps`` of them; the dense sweep runs
+    ``full_steps``.
+    """
+    rows: int
+    cols: int
+    row_counts: tuple
+    seq_grid: int          # pruned sequential trip count: max(row_counts)
+    full_steps: int        # rows * cols — the dense sweep
+    launched_steps: int    # rows * seq_grid
+    executed_steps: int    # sum(row_counts) — steps that do MXU work
+
+    @property
+    def work_ratio(self) -> float:
+        """Dense grid steps per executed pruned step (≥ 1)."""
+        if self.executed_steps == 0:
+            return float("inf") if self.full_steps else 1.0
+        return self.full_steps / self.executed_steps
+
+
+def _profile(rows, cols, counts) -> GridProfile:
+    counts = tuple(int(max(0, c)) for c in counts)
+    seq = max(counts) if counts else 0
+    return GridProfile(rows=rows, cols=cols, row_counts=counts, seq_grid=seq,
+                       full_steps=rows * cols, launched_steps=rows * seq,
+                       executed_steps=sum(counts))
+
+
+def kv_profile(*, nq, nk, br, bc, causal, rel_offset, window) -> GridProfile:
+    """Work profile of the fwd/dq orientation (rows = q blocks)."""
+    counts = []
+    for i in range(nq):
+        lo, hi = kv_block_bounds(i, br=br, bc=bc, nk=nk, causal=causal,
+                                 rel_offset=rel_offset, window=window)
+        counts.append(hi - lo + 1)
+    return _profile(nq, nk, counts)
+
+
+def q_profile(*, nq, nk, br, bc, causal, rel_offset, window) -> GridProfile:
+    """Work profile of the dkv orientation (rows = kv blocks)."""
+    counts = []
+    for j in range(nk):
+        lo, hi = q_block_bounds(j, br=br, bc=bc, nq=nq, causal=causal,
+                                rel_offset=rel_offset, window=window)
+        counts.append(hi - lo + 1)
+    return _profile(nk, nq, counts)

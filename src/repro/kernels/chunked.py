@@ -8,9 +8,15 @@ score memory is O(Tq · block_kv) per step instead of the reference
 implementation's O(Tq · Tk) — the same blocking the Pallas kernel does in
 VMEM, expressed at the XLA level.
 
+Block-sparse pruning mirrors the Pallas kernels: the scan only visits the
+KV chunks inside ``block_sparse.kv_block_bounds`` (the whole query chunk is
+one q block here), so CPU CI exercises the identical block-range logic the
+TPU grid pruning uses. Statically all-masked requests short-circuit to the
+empty partial.
+
 Backward mirrors FA2: dq accumulates across the chunk scan while per-chunk
-(dk, dv) are emitted as scan outputs and reassembled, all from the saved
-``(o, lse)`` — no forward recompute.
+(dk, dv) are emitted as scan outputs and reassembled (zeros for pruned
+chunks), all from the saved ``(o, lse)`` — no forward recompute.
 """
 from __future__ import annotations
 
@@ -18,23 +24,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels.block_sparse import kv_block_bounds
+from repro.kernels.block_sparse import pick_block as _pick_block
 from repro.kernels.ref import (NEG_INF, chunk_attn_bwd_ref, chunk_attn_ref,
                                merge_ref)
 
 DEFAULT_BLOCK_KV = 128
-
-
-def _pick_block(Tk: int, block: int) -> int:
-    """Largest divisor of Tk that is ≤ block (scan needs equal chunks).
-    When Tk has no useful divisor near the target (prime-ish lengths),
-    blocking would degenerate into a near-token-level scan — return Tk
-    itself so the caller takes the single-block (reference) path."""
-    b = min(block, Tk)
-    while Tk % b:
-        b -= 1
-    if b < min(32, Tk):
-        return Tk
-    return b
 
 
 def _blocked(x, nb, bc):
@@ -43,19 +38,40 @@ def _blocked(x, nb, bc):
     return x.reshape(B, nb, bc, *x.shape[2:]).swapaxes(0, 1)
 
 
+def _valid_span(Tq, Tk, bc, causal, rel_offset, window, prune):
+    """Inclusive (lo, hi) KV-chunk range for the whole query chunk (one
+    br=Tq q block) — the same static range logic the Pallas grids use."""
+    nb = Tk // bc
+    if not (prune and (causal or (window and window > 0))):
+        return 0, nb - 1
+    return kv_block_bounds(0, br=Tq, bc=bc, nk=nb, causal=causal,
+                           rel_offset=rel_offset, window=window)
+
+
 def chunked_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
-                block_kv=DEFAULT_BLOCK_KV):
-    """Partial attention, chunk_attn semantics: returns (o, lse)."""
+                block_kv=DEFAULT_BLOCK_KV, block_q=None, prune=True):
+    """Partial attention, chunk_attn semantics: returns (o, lse).
+    ``block_q`` is accepted for tuning-surface uniformity with the Pallas
+    backend (queries are not blocked here)."""
+    del block_q
     B, Tq, Hq, _ = q.shape
     Tk = k.shape[1]
     Dv = v.shape[-1]
     bc = _pick_block(Tk, block_kv)
-    nb = Tk // bc
-    if nb == 1:
-        return chunk_attn_ref(q, k, v, causal=causal, q_offset=rel_offset,
-                              kv_offset=0, window=window, scale=scale)
-    blocks = (_blocked(k, nb, bc), _blocked(v, nb, bc),
-              jnp.arange(nb, dtype=jnp.int32) * bc)
+    lo, hi = _valid_span(Tq, Tk, bc, causal, rel_offset, window, prune)
+    if hi < lo:                                  # statically fully masked
+        return (jnp.zeros((B, Tq, Hq, Dv), q.dtype),
+                jnp.full((B, Tq, Hq), NEG_INF, jnp.float32))
+    nv = hi - lo + 1
+    if nv == 1:
+        return chunk_attn_ref(q, k[:, lo * bc:(lo + 1) * bc],
+                              v[:, lo * bc:(lo + 1) * bc], causal=causal,
+                              q_offset=rel_offset, kv_offset=lo * bc,
+                              window=window, scale=scale)
+    ks = k[:, lo * bc:(hi + 1) * bc]
+    vs = v[:, lo * bc:(hi + 1) * bc]
+    blocks = (_blocked(ks, nv, bc), _blocked(vs, nv, bc),
+              (lo + jnp.arange(nv, dtype=jnp.int32)) * bc)
 
     def body(carry, blk):
         o_acc, l_acc = carry
@@ -73,22 +89,32 @@ def chunked_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
 
 
 def chunked_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
-                scale=None, delta=None, block_kv=DEFAULT_BLOCK_KV):
+                scale=None, delta=None, block_kv=DEFAULT_BLOCK_KV,
+                block_q=None, prune=True):
     """FA2 backward from saved (o, lse), blocked over KV chunks.
-    Returns (dq, dk, dv)."""
+    Returns (dq, dk, dv); dk/dv are zeros on statically-masked chunks."""
+    del block_q
     B, Tq, Hq, _ = q.shape
     Tk, Hkv = k.shape[1], k.shape[2]
     bc = _pick_block(Tk, block_kv)
-    nb = Tk // bc
+    lo, hi = _valid_span(Tq, Tk, bc, causal, rel_offset, window, prune)
+    if hi < lo:                                  # statically fully masked
+        return (jnp.zeros_like(q), jnp.zeros_like(k), jnp.zeros_like(v))
     if delta is None:
         delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
                         axis=-1)
-    if nb == 1:
-        return chunk_attn_bwd_ref(q, k, v, o, lse, do, causal=causal,
-                                  q_offset=rel_offset, kv_offset=0,
-                                  window=window, scale=scale, delta=delta)
-    blocks = (_blocked(k, nb, bc), _blocked(v, nb, bc),
-              jnp.arange(nb, dtype=jnp.int32) * bc)
+    nv = hi - lo + 1
+    sl = slice(lo * bc, (hi + 1) * bc)
+    if nv == 1:
+        dq, dk_s, dv_s = chunk_attn_bwd_ref(
+            q, k[:, sl], v[:, sl], o, lse, do, causal=causal,
+            q_offset=rel_offset, kv_offset=lo * bc, window=window,
+            scale=scale, delta=delta)
+        dk = jnp.zeros_like(k).at[:, sl].set(dk_s)
+        dv = jnp.zeros_like(v).at[:, sl].set(dv_s)
+        return dq, dk, dv
+    blocks = (_blocked(k[:, sl], nv, bc), _blocked(v[:, sl], nv, bc),
+              (lo + jnp.arange(nv, dtype=jnp.int32)) * bc)
 
     def body(dq_acc, blk):
         kj, vj, off = blk
@@ -99,6 +125,8 @@ def chunked_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
 
     dq, (dk_b, dv_b) = lax.scan(body, jnp.zeros(q.shape, jnp.float32),
                                 blocks)
-    dk = dk_b.swapaxes(0, 1).reshape(B, Tk, Hkv, -1)
-    dv = dv_b.swapaxes(0, 1).reshape(B, Tk, Hkv, -1)
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+    dk_s = dk_b.swapaxes(0, 1).reshape(B, nv * bc, Hkv, -1)
+    dv_s = dv_b.swapaxes(0, 1).reshape(B, nv * bc, Hkv, -1)
+    dk = jnp.zeros_like(k).at[:, sl].set(dk_s.astype(k.dtype))
+    dv = jnp.zeros_like(v).at[:, sl].set(dv_s.astype(v.dtype))
+    return dq.astype(q.dtype), dk, dv

@@ -1,4 +1,5 @@
-"""Pallas TPU FlashAttention-2 chunk kernels (forward + backward).
+"""Pallas TPU FlashAttention-2 chunk kernels (forward + backward),
+block-sparse over the statically-maskable grid.
 
 TARGET: TPU MXU/VMEM. Layout inside the kernels is (B, H, T, D); blocks are
 ``(block_q × head_dim)`` / ``(block_kv × head_dim)`` VMEM tiles with 128-
@@ -10,11 +11,30 @@ with a *static* relative offset (see DESIGN.md §2 — in the ring/balanced
 schedules every step's mask depends only on the static chunk distance, so no
 scalar prefetch is required).
 
+Block-sparse grid pruning (README §Block-sparse kernel pruning). Because
+``(causal, rel_offset, window)`` are static, the valid KV-block range of
+every Q block — and its transpose for the dkv kernel — is computed at trace
+time by ``block_sparse.kv_block_bounds`` / ``q_block_bounds``:
+
+  * the sequential grid dimension is **shrunk** to ``max_i count(i)`` (the
+    widest row of the trapezoid), not the dense ``nk``;
+  * the index map remaps pruned step ``jj`` of row ``i`` to real block
+    ``lo(i) + jj``, clamped to the row's last valid block so out-of-range
+    steps revisit an already-resident block (no extra DMA) and skip compute
+    under ``pl.when``;
+  * blocks the mask cannot touch (``interior_kv_bounds``) take a mask-free
+    fast path — only diagonal/window-edge tiles pay ``_pos_mask`` + where.
+
 The backward follows FA2: ``delta = rowsum(do ⊙ o)`` precomputed, then a
 dq-kernel (grid over q blocks, sequential kv) and a dkv-kernel (grid over kv
 blocks, sequential q) recompute ``p = exp(s − lse)`` blockwise from the saved
-logsumexp — the kernel-internal rematerialization the paper's checkpointing
-strategy is careful not to duplicate at the layer level (§3.3).
+logsumexp. ``lse``/``delta`` enter the kernels as narrow ``(1, 1, block_q)``
+blocks of the (B, H, T) arrays — not lane-replicated (B, H, T, 128) float32
+broadcasts materialized in HBM. Hardware note: the narrow stat blocks put T
+on the lane dimension, so the default ``block_q=128`` stays lane-aligned;
+CI validates interpret mode only, and ``test_pruned_flash_compiles_on_tpu``
+(TPU-gated) covers the compiled Mosaic lowering of the narrow blocks, the
+in-kernel ``lax.cond`` fast path, and the remapped index maps.
 """
 from __future__ import annotations
 
@@ -25,6 +45,10 @@ import jax.numpy as jnp
 from repro import compat
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.block_sparse import (interior_kv_bounds, kv_block_bounds,
+                                        kv_profile, pick_block,
+                                        q_block_bounds, q_profile)
 
 NEG_INF = -1e30
 LANES = 128  # TPU lane width; stat scratch is lane-replicated
@@ -44,83 +68,162 @@ def _pos_mask(i, j, br, bc, rel_offset, causal, window):
     return m
 
 
+def _masked(causal, window) -> bool:
+    return bool(causal) or bool(window and window > 0)
+
+
+def _apply_mask(s, i, j, rel_offset, causal, window, prune):
+    """Mask score tile ``s`` for block (i, j). With pruning, interior blocks
+    (mask provably all-True) skip the iota/compare/where entirely via a
+    runtime branch — only edge tiles pay for ``_pos_mask``."""
+    br, bc = s.shape
+
+    def _mask(x):
+        return jnp.where(_pos_mask(i, j, br, bc, rel_offset, causal, window),
+                         x, NEG_INF)
+
+    if not prune:
+        return _mask(s)
+    lo_f, hi_f = interior_kv_bounds(i, br=br, bc=bc, nk=2 ** 30,
+                                    causal=causal, rel_offset=rel_offset,
+                                    window=window)
+    return jax.lax.cond((j < lo_f) | (j > hi_f), _mask, lambda x: x, s)
+
+
+def _row_span(i, br, bc, nk, causal, rel_offset, window, prune):
+    """(first block, executed count) of the sequential sweep for row ``i``."""
+    if not (prune and _masked(causal, window)):
+        return 0, nk
+    lo, hi = kv_block_bounds(i, br=br, bc=bc, nk=nk, causal=causal,
+                             rel_offset=rel_offset, window=window)
+    return lo, jnp.maximum(hi - lo + 1, 0)
+
+
+def _kv_index(i, jj, br, bc, nk, causal, rel_offset, window, prune):
+    """Index-map remap: pruned step jj of q-row i → real KV block. Steps
+    past the row's range revisit the last valid block (no new DMA)."""
+    if not (prune and _masked(causal, window)):
+        return jj
+    lo, hi = kv_block_bounds(i, br=br, bc=bc, nk=nk, causal=causal,
+                             rel_offset=rel_offset, window=window)
+    return jnp.clip(lo + jj, 0, jnp.maximum(hi, 0))
+
+
+def _q_row_span(j, br, bc, nq, causal, rel_offset, window, prune):
+    """Transpose of :func:`_row_span` for the dkv orientation: (first q
+    block, executed count) of the sequential sweep for kv row ``j``."""
+    if not (prune and _masked(causal, window)):
+        return 0, nq
+    lo, hi = q_block_bounds(j, br=br, bc=bc, nq=nq, causal=causal,
+                            rel_offset=rel_offset, window=window)
+    return lo, jnp.maximum(hi - lo + 1, 0)
+
+
+def _q_index(j, ii, br, bc, nq, causal, rel_offset, window, prune):
+    """Transpose of :func:`_kv_index`: pruned step ii of kv-row j → real Q
+    block, clamped to revisit the row's last valid block."""
+    if not (prune and _masked(causal, window)):
+        return ii
+    lo, hi = q_block_bounds(j, br=br, bc=bc, nq=nq, causal=causal,
+                            rel_offset=rel_offset, window=window)
+    return jnp.clip(lo + ii, 0, jnp.maximum(hi, 0))
+
+
 # ---------------------------------------------------------------- forward
 
 
 def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
                 acc_ref, m_ref, l_ref,
-                *, scale, causal, rel_offset, window, n_kv):
-    i, j = pl.program_id(2), pl.program_id(3)
+                *, scale, causal, rel_offset, window, nk, prune):
+    i, jj = pl.program_id(2), pl.program_id(3)
+    br, bc = q_ref.shape[2], k_ref.shape[2]
+    lo, count = _row_span(i, br, bc, nk, causal, rel_offset, window, prune)
+    j = lo + jj
 
-    @pl.when(j == 0)
+    @pl.when(jj == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)              # (br, d)
-    k = k_ref[0, 0].astype(jnp.float32)              # (bc, d)
-    v = v_ref[0, 0].astype(jnp.float32)
-    br, bc = q.shape[0], k.shape[0]
+    @pl.when(jj < count)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (br, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bc, d)
+        v = v_ref[0, 0].astype(jnp.float32)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (br,bc)
-    mask = _pos_mask(i, j, br, bc, rel_offset, causal, window)
-    if mask is not None:
-        s = jnp.where(mask, s, NEG_INF)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if _masked(causal, window):
+            s = _apply_mask(s, i, j, rel_offset, causal, window, prune)
 
-    m_prev = m_ref[:, 0]                             # (br,)
-    m_cur = jnp.max(s, axis=1)
-    m_new = jnp.maximum(m_prev, m_cur)
-    m_safe = jnp.maximum(m_new, NEG_INF / 2)
-    p = jnp.exp(s - m_safe[:, None])
-    p = jnp.where(m_new[:, None] <= NEG_INF / 2, 0.0, p)
-    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
-    l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
-    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+        m_prev = m_ref[:, 0]                             # (br,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(m_new[:, None] <= NEG_INF / 2, 0.0, p)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+        l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
 
-    @pl.when(j == n_kv - 1)
+    # all-masked rows (count == 0) finalize straight from the init state
+    @pl.when(jj == jnp.maximum(count - 1, 0))
     def _finalize():
         l = l_ref[:, 0]
         l_safe = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
-        lse = jnp.where(l == 0.0, NEG_INF, m_ref[:, 0] + jnp.log(l_safe))
-        lse_ref[0, 0] = jnp.broadcast_to(lse[:, None], lse_ref.shape[2:])
+        lse_ref[0, 0] = jnp.where(l == 0.0, NEG_INF, m_ref[:, 0] +
+                                  jnp.log(l_safe))
 
 
 def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
-                   block_q=128, block_kv=128, interpret=False):
+                   block_q=128, block_kv=128, interpret=False, prune=True):
     """q,k: (B,Hq/Hkv,T,Dk); v: (B,Hkv,Tk,Dv) -> o (B,Hq,Tq,Dv), lse.
-    Dv may differ from Dk (MLA)."""
+    Dv may differ from Dk (MLA). ``prune=False`` forces the dense sweep
+    (benchmark baseline / differential testing)."""
     B, Hq, Tq, D = q.shape
     Hkv, Tk = k.shape[1], k.shape[2]
     Dv = v.shape[3]
     g = Hq // Hkv
-    br = min(block_q, Tq)
-    bc = min(block_kv, Tk)
-    assert Tq % br == 0 and Tk % bc == 0, (Tq, br, Tk, bc)
+    br = pick_block(Tq, block_q)      # non-dividing hints shrink to a divisor
+    bc = pick_block(Tk, block_kv)
     nq, nk = Tq // br, Tk // bc
-    grid = (B, Hq, nq, nk)
+
+    seq = nk
+    if prune and _masked(causal, window):
+        prof = kv_profile(nq=nq, nk=nk, br=br, bc=bc, causal=causal,
+                          rel_offset=rel_offset, window=window)
+        seq = prof.seq_grid
+        if seq == 0:                      # statically fully masked chunk
+            return (jnp.zeros((B, Hq, Tq, Dv), q.dtype),
+                    jnp.full((B, Hq, Tq), NEG_INF, jnp.float32))
+    grid = (B, Hq, nq, seq)
+
+    def kv_block(i, j):
+        return _kv_index(i, j, br, bc, nk, causal, rel_offset, window, prune)
 
     kernel = functools.partial(
         _fwd_kernel, scale=scale, causal=causal, rel_offset=rel_offset,
-        window=window, n_kv=nk)
-    o, lse_w = pl.pallas_call(
+        window=window, nk=nk, prune=prune)
+    o, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, br, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bc, D), lambda b, h, i, j: (b, h // g, j, 0)),
-            pl.BlockSpec((1, 1, bc, Dv), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bc, D),
+                         lambda b, h, i, j: (b, h // g, kv_block(i, j), 0)),
+            pl.BlockSpec((1, 1, bc, Dv),
+                         lambda b, h, i, j: (b, h // g, kv_block(i, j), 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, br, Dv), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, br, LANES), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, br), lambda b, h, i, j: (b, h, i)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, Hq, Tq, Dv), q.dtype),
-            jax.ShapeDtypeStruct((B, Hq, Tq, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Tq), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((br, Dv), jnp.float32),
@@ -132,78 +235,88 @@ def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
                                  "arbitrary")),
         interpret=interpret,
     )(q, k, v)
-    return o, lse_w[..., 0]
+    return o, lse
 
 
 # ---------------------------------------------------------------- backward
 
 
 def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-               acc_ref, *, scale, causal, rel_offset, window, n_kv):
-    i, j = pl.program_id(2), pl.program_id(3)
+               acc_ref, *, scale, causal, rel_offset, window, nk, prune):
+    i, jj = pl.program_id(2), pl.program_id(3)
+    br, bc = q_ref.shape[2], k_ref.shape[2]
+    lo, count = _row_span(i, br, bc, nk, causal, rel_offset, window, prune)
+    j = lo + jj
 
-    @pl.when(j == 0)
+    @pl.when(jj == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)
-    k = k_ref[0, 0].astype(jnp.float32)
-    v = v_ref[0, 0].astype(jnp.float32)
-    do = do_ref[0, 0].astype(jnp.float32)
-    lse = lse_ref[0, 0][:, 0]                        # (br,)
-    delta = delta_ref[0, 0][:, 0]
-    br, bc = q.shape[0], k.shape[0]
+    @pl.when(jj < count)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]                              # (br,)
+        delta = delta_ref[0, 0]
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-    mask = _pos_mask(i, j, br, bc, rel_offset, causal, window)
-    if mask is not None:
-        s = jnp.where(mask, s, NEG_INF)
-    p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0, jnp.exp(s - lse[:, None]))
-    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
-    ds = p * (dp - delta[:, None]) * scale
-    acc_ref[...] += jax.lax.dot(ds, k)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if _masked(causal, window):
+            s = _apply_mask(s, i, j, rel_offset, causal, window, prune)
+        p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0,
+                      jnp.exp(s - lse[:, None]))
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta[:, None]) * scale
+        acc_ref[...] += jax.lax.dot(ds, k)
 
-    @pl.when(j == n_kv - 1)
+    @pl.when(jj == jnp.maximum(count - 1, 0))
     def _finalize():
         dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
 
 
 def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
                 dk_ref, dv_ref, dk_acc, dv_acc,
-                *, scale, causal, rel_offset, window, n_q):
-    j, i = pl.program_id(2), pl.program_id(3)        # kv block j, q block i
+                *, scale, causal, rel_offset, window, nq, prune):
+    j, ii = pl.program_id(2), pl.program_id(3)       # kv block j, q step ii
+    br, bc = q_ref.shape[2], k_ref.shape[2]
+    lo_q, count = _q_row_span(j, br, bc, nq, causal, rel_offset, window,
+                              prune)
+    i = lo_q + ii
 
-    @pl.when(i == 0)
+    @pl.when(ii == 0)
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    q = q_ref[0, 0].astype(jnp.float32)
-    k = k_ref[0, 0].astype(jnp.float32)
-    v = v_ref[0, 0].astype(jnp.float32)
-    do = do_ref[0, 0].astype(jnp.float32)
-    lse = lse_ref[0, 0][:, 0]
-    delta = delta_ref[0, 0][:, 0]
-    br, bc = q.shape[0], k.shape[0]
+    @pl.when(ii < count)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-    mask = _pos_mask(i, j, br, bc, rel_offset, causal, window)
-    if mask is not None:
-        s = jnp.where(mask, s, NEG_INF)
-    p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0, jnp.exp(s - lse[:, None]))
-    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
-    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
-    ds = p * (dp - delta[:, None]) * scale
-    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if _masked(causal, window):
+            s = _apply_mask(s, i, j, rel_offset, causal, window, prune)
+        p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0,
+                      jnp.exp(s - lse[:, None]))
+        dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta[:, None]) * scale
+        dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
 
-    @pl.when(i == n_q - 1)
+    @pl.when(ii == jnp.maximum(count - 1, 0))
     def _finalize():
         dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
 
 
 def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
-                   block_q=128, block_kv=128, interpret=False, delta=None):
+                   block_q=128, block_kv=128, interpret=False, delta=None,
+                   prune=True):
     """Backward from saved (o, lse). Layout (B,H,T,D). Returns dq, dk, dv
     (dk/dv summed over the GQA group). ``delta`` (B,H,Tq) may be passed
     precomputed (distributed helper path)."""
@@ -211,27 +324,44 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
     Hkv, Tk = k.shape[1], k.shape[2]
     Dv = v.shape[3]
     g = Hq // Hkv
-    br = min(block_q, Tq)
-    bc = min(block_kv, Tk)
+    br = pick_block(Tq, block_q)      # non-dividing hints shrink to a divisor
+    bc = pick_block(Tk, block_kv)
     nq, nk = Tq // br, Tk // bc
 
     if delta is None:
         delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
                         axis=-1)
     delta = delta.astype(jnp.float32)
-    lse_w = jnp.broadcast_to(lse[..., None], (*lse.shape, LANES))
-    delta_w = jnp.broadcast_to(delta[..., None], (*delta.shape, LANES))
+    lse = lse.astype(jnp.float32)
+
+    pruned = prune and _masked(causal, window)
+    seq_kv, seq_q = nk, nq
+    if pruned:
+        seq_kv = kv_profile(nq=nq, nk=nk, br=br, bc=bc, causal=causal,
+                            rel_offset=rel_offset, window=window).seq_grid
+        seq_q = q_profile(nq=nq, nk=nk, br=br, bc=bc, causal=causal,
+                          rel_offset=rel_offset, window=window).seq_grid
+    if pruned and (seq_kv == 0 or seq_q == 0):   # statically fully masked
+        return (jnp.zeros(q.shape, q.dtype),
+                jnp.zeros((B, Hkv, Tk, D), k.dtype),
+                jnp.zeros((B, Hkv, Tk, Dv), v.dtype))
+
+    def kv_block(i, j):
+        return _kv_index(i, j, br, bc, nk, causal, rel_offset, window, prune)
 
     q_spec = pl.BlockSpec((1, 1, br, D), lambda b, h, i, j: (b, h, i, 0))
-    kv_spec = pl.BlockSpec((1, 1, bc, D), lambda b, h, i, j: (b, h // g, j, 0))
-    v_spec = pl.BlockSpec((1, 1, bc, Dv), lambda b, h, i, j: (b, h // g, j, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, bc, D), lambda b, h, i, j: (b, h // g, kv_block(i, j), 0))
+    v_spec = pl.BlockSpec(
+        (1, 1, bc, Dv), lambda b, h, i, j: (b, h // g, kv_block(i, j), 0))
     do_spec = pl.BlockSpec((1, 1, br, Dv), lambda b, h, i, j: (b, h, i, 0))
-    stat_spec = pl.BlockSpec((1, 1, br, LANES), lambda b, h, i, j: (b, h, i, 0))
+    stat_spec = pl.BlockSpec((1, 1, br), lambda b, h, i, j: (b, h, i))
 
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, scale=scale, causal=causal,
-                          rel_offset=rel_offset, window=window, n_kv=nk),
-        grid=(B, Hq, nq, nk),
+                          rel_offset=rel_offset, window=window, nk=nk,
+                          prune=prune),
+        grid=(B, Hq, nq, seq_kv),
         in_specs=[q_spec, kv_spec, v_spec, do_spec, stat_spec, stat_spec],
         out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
@@ -240,22 +370,30 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v, do, lse_w, delta_w)
+    )(q, k, v, do, lse, delta)
 
-    # dkv: grid over kv blocks, sequential q blocks. Output per *query* head,
-    # then group-summed below (GQA).
-    q_spec2 = pl.BlockSpec((1, 1, br, D), lambda b, h, j, i: (b, h, i, 0))
+    # dkv: grid over kv blocks, sequential over the valid q blocks. Output
+    # per *query* head, then group-summed below (GQA).
+    def q_block(j, i):
+        return _q_index(j, i, br, bc, nq, causal, rel_offset, window, prune)
+
+    q_spec2 = pl.BlockSpec((1, 1, br, D),
+                           lambda b, h, j, i: (b, h, q_block(j, i), 0))
     kv_spec2 = pl.BlockSpec((1, 1, bc, D), lambda b, h, j, i: (b, h // g, j, 0))
     v_spec2 = pl.BlockSpec((1, 1, bc, Dv), lambda b, h, j, i: (b, h // g, j, 0))
-    do_spec2 = pl.BlockSpec((1, 1, br, Dv), lambda b, h, j, i: (b, h, i, 0))
+    do_spec2 = pl.BlockSpec((1, 1, br, Dv),
+                            lambda b, h, j, i: (b, h, q_block(j, i), 0))
     k_out2 = pl.BlockSpec((1, 1, bc, D), lambda b, h, j, i: (b, h, j, 0))
     v_out2 = pl.BlockSpec((1, 1, bc, Dv), lambda b, h, j, i: (b, h, j, 0))
-    stat_spec2 = pl.BlockSpec((1, 1, br, LANES), lambda b, h, j, i: (b, h, i, 0))
+    stat_spec2 = pl.BlockSpec((1, 1, br),
+                              lambda b, h, j, i: (b, h, q_block(j, i)))
     dk_h, dv_h = pl.pallas_call(
         functools.partial(_dkv_kernel, scale=scale, causal=causal,
-                          rel_offset=rel_offset, window=window, n_q=nq),
-        grid=(B, Hq, nk, nq),
-        in_specs=[q_spec2, kv_spec2, v_spec2, do_spec2, stat_spec2, stat_spec2],
+                          rel_offset=rel_offset, window=window, nq=nq,
+                          prune=prune),
+        grid=(B, Hq, nk, seq_q),
+        in_specs=[q_spec2, kv_spec2, v_spec2, do_spec2, stat_spec2,
+                  stat_spec2],
         out_specs=[k_out2, v_out2],
         out_shape=[jax.ShapeDtypeStruct((B, Hq, Tk, D), k.dtype),
                    jax.ShapeDtypeStruct((B, Hq, Tk, Dv), v.dtype)],
@@ -265,7 +403,7 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v, do, lse_w, delta_w)
+    )(q, k, v, do, lse, delta)
     if g > 1:
         dk_h = dk_h.reshape(B, Hkv, g, Tk, D).sum(axis=2)
         dv_h = dv_h.reshape(B, Hkv, g, Tk, Dv).sum(axis=2)

@@ -2,7 +2,9 @@
 
 Public layout is (B, T, H, D) (matching the model code); the kernels use
 (B, H, T, D). Block sizes default to 128 (MXU-aligned) and shrink to the
-chunk size for small test shapes.
+chunk size for small test shapes. ``prune`` (default on) enables the
+static block-sparse grid pruning; ``prune=False`` forces the dense
+``nq × nk`` sweep (benchmark baseline / differential testing).
 """
 from __future__ import annotations
 
@@ -19,24 +21,26 @@ def _to_bhtd(x):
 
 
 @partial(jax.jit, static_argnames=("causal", "rel_offset", "window", "scale",
-                                   "block_q", "block_kv", "interpret"))
+                                   "block_q", "block_kv", "interpret",
+                                   "prune"))
 def flash_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
-              block_q=128, block_kv=128, interpret=False):
+              block_q=128, block_kv=128, interpret=False, prune=True):
     """(B,T,H,D) partial attention -> (o (B,T,H,D), lse (B,T,H))."""
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
     o, lse = fa.flash_fwd_bhtd(
         _to_bhtd(q), _to_bhtd(k), _to_bhtd(v), scale=scale, causal=causal,
         rel_offset=rel_offset, window=window, block_q=block_q,
-        block_kv=block_kv, interpret=interpret)
+        block_kv=block_kv, interpret=interpret, prune=prune)
     return _to_bhtd(o), jnp.transpose(lse, (0, 2, 1))
 
 
 @partial(jax.jit, static_argnames=("causal", "rel_offset", "window", "scale",
-                                   "block_q", "block_kv", "interpret"))
+                                   "block_q", "block_kv", "interpret",
+                                   "prune"))
 def flash_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
               scale=None, block_q=128, block_kv=128, interpret=False,
-              delta=None):
+              delta=None, prune=True):
     """Backward from saved (o, lse). Returns (dq, dk, dv)."""
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
@@ -45,5 +49,6 @@ def flash_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
         jnp.transpose(lse, (0, 2, 1)), _to_bhtd(do), scale=scale,
         causal=causal, rel_offset=rel_offset, window=window,
         block_q=block_q, block_kv=block_kv, interpret=interpret,
-        delta=None if delta is None else jnp.transpose(delta, (0, 2, 1)))
+        delta=None if delta is None else jnp.transpose(delta, (0, 2, 1)),
+        prune=prune)
     return _to_bhtd(dq), _to_bhtd(dk), _to_bhtd(dv)

@@ -59,6 +59,10 @@ class BackendSpec:
     dtypes: Tuple[str, ...] = ALL_DTYPES
     platforms: Tuple[str, ...] = ALL_PLATFORMS
     exact: bool = True             # numerically exact (vs stub)
+    # accepts block_q/block_kv tuning hints (fwd/bwd take them as kwargs);
+    # chunk_attn only forwards the hints to backends with this flag set, so
+    # schedules can pick block shapes per step without knowing the backend
+    tunable_blocks: bool = False
     fallback: Tuple[str, ...] = ()  # tried in order when this can't run
     description: str = ""
 
@@ -188,21 +192,35 @@ def _chunked_bwd(q, k, v, o, lse, do, **kw):
     return chunked_bwd(q, k, v, o, lse, do, **kw)
 
 
+def block_tuning_kw(block_q, block_kv):
+    """None-filtered {block_q, block_kv} kwargs for tunable backends (shared
+    by chunk_attn's hint forwarding and the pallas closures below)."""
+    kw = {}
+    if block_q is not None:
+        kw["block_q"] = block_q
+    if block_kv is not None:
+        kw["block_kv"] = block_kv
+    return kw
+
+
 def _pallas_fwd(interpret):
-    def fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None):
+    def fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
+            block_q=None, block_kv=None):
         from repro.kernels import ops
         return ops.flash_fwd(q, k, v, causal=causal, rel_offset=rel_offset,
-                             window=window, scale=scale, interpret=interpret)
+                             window=window, scale=scale, interpret=interpret,
+                             **block_tuning_kw(block_q, block_kv))
     return fwd
 
 
 def _pallas_bwd(interpret):
     def bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
-            scale=None, delta=None):
+            scale=None, delta=None, block_q=None, block_kv=None):
         from repro.kernels import ops
         return ops.flash_bwd(q, k, v, o, lse, do, causal=causal,
                              rel_offset=rel_offset, window=window,
-                             scale=scale, interpret=interpret, delta=delta)
+                             scale=scale, interpret=interpret, delta=delta,
+                             **block_tuning_kw(block_q, block_kv))
     return bwd
 
 
@@ -233,18 +251,21 @@ register(BackendSpec(
 
 register(BackendSpec(
     name="chunked-lax", fwd=_chunked_fwd, bwd=_chunked_bwd,
+    tunable_blocks=True,
     fallback=("ref",),
     description="lax.scan-blocked online softmax; Pallas-free"))
 
 register(BackendSpec(
     name="pallas", fwd=_pallas_fwd(False), bwd=_pallas_bwd(False),
     platforms=("tpu",), dtypes=("float32", "bfloat16"),
+    tunable_blocks=True,
     fallback=("pallas-interpret", "chunked-lax", "ref"),
     description="compiled Pallas TPU FlashAttention-2 kernel"))
 
 register(BackendSpec(
     name="pallas-interpret", fwd=_pallas_fwd(True), bwd=_pallas_bwd(True),
     dtypes=("float32", "bfloat16"),
+    tunable_blocks=True,
     fallback=("chunked-lax", "ref"),
     description="Pallas kernel body under the interpreter (validation)"))
 

@@ -1,0 +1,124 @@
+"""Brute-force verification of the static block-sparsity ranges every
+pruned kernel derives its iteration space from (kernels/block_sparse.py):
+for each block, the predicted valid/interior ranges must equal the ground
+truth computed from the dense position mask."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.kernels import block_sparse as bs
+
+
+def _dense_mask(br, bc, nq, nk, causal, rel, window):
+    """(Tq, Tk) boolean attend-mask, same semantics as kernels' _pos_mask."""
+    qp = rel + np.arange(nq * br)
+    kp = np.arange(nk * bc)
+    m = np.ones((nq * br, nk * bc), dtype=bool)
+    if causal:
+        m &= kp[None, :] <= qp[:, None]
+    if window and window > 0:
+        m &= (qp[:, None] - kp[None, :]) < window
+    return m
+
+
+SWEEP = list(itertools.product(
+    [16, 32],                 # br
+    [16, 48],                 # bc
+    [1, 3, 4],                # nq
+    [1, 2, 5],                # nk
+    [False, True],            # causal
+    [-96, -16, 0, 16, 96],    # rel_offset
+    [0, 1, 24, 1000],         # window
+))
+
+
+@pytest.mark.parametrize("br,bc", [(16, 16), (16, 48), (32, 16), (32, 48)])
+def test_block_bounds_match_dense_mask(br, bc):
+    """kv/q/interior bounds agree with any()/all() of the dense mask for
+    every block of every sweep config."""
+    for (br_, bc_, nq, nk, causal, rel, window) in SWEEP:
+        if (br_, bc_) != (br, bc):
+            continue
+        m = _dense_mask(br, bc, nq, nk, causal, rel, window)
+        kw = dict(br=br, bc=bc, causal=causal, rel_offset=rel, window=window)
+        for i in range(nq):
+            lo, hi = bs.kv_block_bounds(i, nk=nk, **kw)
+            lo_f, hi_f = bs.interior_kv_bounds(i, nk=nk, **kw)
+            assert 0 <= lo and hi <= nk - 1
+            for j in range(nk):
+                tile = m[i * br:(i + 1) * br, j * bc:(j + 1) * bc]
+                cfg = (br, bc, nq, nk, causal, rel, window, i, j)
+                assert (lo <= j <= hi) == bool(tile.any()), cfg
+                assert (lo_f <= j <= hi_f) == bool(tile.all()), cfg
+        for j in range(nk):
+            lo_q, hi_q = bs.q_block_bounds(j, nq=nq, **kw)
+            for i in range(nq):
+                tile = m[i * br:(i + 1) * br, j * bc:(j + 1) * bc]
+                cfg = (br, bc, nq, nk, causal, rel, window, i, j)
+                assert (lo_q <= i <= hi_q) == bool(tile.any()), cfg
+
+
+def test_profiles_count_the_same_valid_pairs():
+    """The fwd/dq orientation (rows = q blocks) and the dkv orientation
+    (rows = kv blocks) execute the same set of valid (i, j) pairs."""
+    for (br, bc, nq, nk, causal, rel, window) in SWEEP:
+        kw = dict(nq=nq, nk=nk, br=br, bc=bc, causal=causal,
+                  rel_offset=rel, window=window)
+        pk, pq = bs.kv_profile(**kw), bs.q_profile(**kw)
+        assert pk.executed_steps == pq.executed_steps, (br, bc, nq, nk,
+                                                        causal, rel, window)
+        assert pk.full_steps == pq.full_steps == nq * nk
+        assert pk.executed_steps <= pk.launched_steps <= pk.full_steps
+        assert pk.seq_grid == max(pk.row_counts, default=0)
+
+
+def test_local_causal_chunk_work_ratio():
+    """The acceptance target: the local causal chunk (rel=0, Tq=Tk) at
+    nq = nk ≥ 8 executes ≥1.5x fewer grid steps than the dense sweep."""
+    for n in (8, 16):
+        p = bs.kv_profile(nq=n, nk=n, br=128, bc=128, causal=True,
+                          rel_offset=0, window=0)
+        assert p.executed_steps == n * (n + 1) // 2      # exact trapezoid
+        assert p.work_ratio >= 1.5, (n, p.work_ratio)
+        pq = bs.q_profile(nq=n, nk=n, br=128, bc=128, causal=True,
+                          rel_offset=0, window=0)
+        assert pq.executed_steps == p.executed_steps
+
+
+def test_degenerate_ranges():
+    """All-masked and all-unmasked edges of the range computation."""
+    # q chunk entirely before the kv chunk: causal masks everything
+    p = bs.kv_profile(nq=2, nk=2, br=64, bc=64, causal=True,
+                      rel_offset=-128, window=0)
+    assert p.executed_steps == 0 and p.seq_grid == 0
+    assert p.work_ratio == float("inf")
+    # no mask at all: pruning must be the identity
+    p = bs.kv_profile(nq=3, nk=5, br=64, bc=64, causal=False,
+                      rel_offset=0, window=0)
+    assert p.executed_steps == p.full_steps == 15
+    assert p.row_counts == (5, 5, 5)
+    # window beyond the whole kv chunk: also the identity (causal only)
+    p = bs.kv_profile(nq=2, nk=2, br=64, bc=64, causal=True,
+                      rel_offset=64, window=10_000)
+    assert p.row_counts == (2, 2)
+
+
+def test_traced_bounds_match_python_bounds():
+    """The same formulas under jax tracing (kernel bodies / index maps)
+    produce the same numbers as the Python path (grid sizing)."""
+    import jax
+    import jax.numpy as jnp
+
+    kw = dict(br=32, bc=16, nk=7, causal=True, rel_offset=48, window=40)
+
+    @jax.jit
+    def traced(i):
+        lo, hi = bs.kv_block_bounds(i, **kw)
+        lo_f, hi_f = bs.interior_kv_bounds(i, **kw)
+        return jnp.stack([lo, hi, lo_f, hi_f])
+
+    for i in range(4):
+        want = (*bs.kv_block_bounds(i, **kw), *bs.interior_kv_bounds(i, **kw))
+        got = tuple(int(x) for x in traced(jnp.int32(i)))
+        assert got == want, (i, got, want)

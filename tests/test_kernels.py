@@ -86,6 +86,158 @@ def test_kernel_block_sizes():
         assert jnp.allclose(o_r, o_p, atol=1e-5), (bq, bk)
 
 
+# --------------------------------------------------- block-sparse pruning
+
+# causal × window × rel_offset sweep for the pruned grids, including odd
+# nq/nk, Tq != Tk, GQA g > 1, and the all-masked / all-unmasked range edges
+PRUNE_CASES = [
+    # (B, Tq, Tk, Hq, Hkv, D, causal, rel, window, bq, bk)
+    (1, 192, 320, 4, 2, 32, True, 0, 0, 64, 64),     # odd nq/nk trapezoid
+    (1, 192, 320, 4, 2, 32, True, 128, 48, 64, 64),  # causal + rel + window
+    (1, 128, 256, 2, 1, 32, False, 256, 96, 64, 64),  # windowed ring step
+    (1, 128, 128, 2, 2, 32, True, -128, 0, 64, 64),  # all blocks masked
+    (1, 128, 128, 2, 2, 32, False, 0, 0, 64, 64),    # no mask: prune = noop
+    (1, 128, 128, 2, 2, 32, True, -64, 0, 64, 64),   # leading rows masked
+    (1, 64, 256, 2, 2, 32, True, 192, 64, 64, 64),   # single-q-block band
+    (1, 128, 192, 3, 3, 16, True, 32, 80, 32, 64),   # br != bc, odd heads
+]
+
+
+def _prune_ids(c):
+    B, Tq, Tk, Hq, Hkv, D, causal, rel, window, bq, bk = c
+    return (f"Tq{Tq}-Tk{Tk}-g{Hq // Hkv}-c{int(causal)}-r{rel}-w{window}"
+            f"-b{bq}x{bk}")
+
+
+@pytest.mark.parametrize("case", PRUNE_CASES, ids=_prune_ids)
+def test_pruned_flash_fwd_matches_ref_and_dense(case):
+    """Pruned Pallas grids are exact vs the oracle AND bit-consistent with
+    the dense (prune=False) sweep of the same kernel."""
+    B, Tq, Tk, Hq, Hkv, D, causal, rel, window, bq, bk = case
+    q, k, v, _ = _mk(B, Tq, Tk, Hq, Hkv, D, jnp.float32)
+    o_r, lse_r = chunk_attn_ref(q, k, v, causal=causal, q_offset=rel,
+                                window=window)
+    kw = dict(causal=causal, rel_offset=rel, window=window, block_q=bq,
+              block_kv=bk, interpret=True)
+    o_p, lse_p = ops.flash_fwd(q, k, v, **kw)
+    o_d, lse_d = ops.flash_fwd(q, k, v, prune=False, **kw)
+    assert jnp.allclose(o_r, o_p, atol=1e-5, rtol=1e-5)
+    m = (lse_r > -1e29) | (lse_p > -1e29)
+    assert jnp.allclose(jnp.where(m, lse_r, 0), jnp.where(m, lse_p, 0),
+                        atol=1e-4, rtol=1e-4)
+    assert jnp.allclose(o_p, o_d, atol=1e-6), "prune changed the result"
+    assert jnp.allclose(lse_p, lse_d, atol=1e-6)
+
+
+@pytest.mark.parametrize("case", PRUNE_CASES, ids=_prune_ids)
+def test_pruned_flash_bwd_matches_ref_and_dense(case):
+    B, Tq, Tk, Hq, Hkv, D, causal, rel, window, bq, bk = case
+    q, k, v, do = _mk(B, Tq, Tk, Hq, Hkv, D, jnp.float32)
+    o, lse = chunk_attn_ref(q, k, v, causal=causal, q_offset=rel,
+                            window=window)
+    ref = chunk_attn_bwd_ref(q, k, v, o, lse, do, causal=causal,
+                             q_offset=rel, window=window)
+    kw = dict(causal=causal, rel_offset=rel, window=window, block_q=bq,
+              block_kv=bk, interpret=True)
+    pal = ops.flash_bwd(q, k, v, o, lse, do, **kw)
+    den = ops.flash_bwd(q, k, v, o, lse, do, prune=False, **kw)
+    for r, p_, d_ in zip(ref, pal, den):
+        assert jnp.allclose(r, p_, atol=2e-4, rtol=2e-4)
+        assert jnp.allclose(p_, d_, atol=1e-6), "prune changed the result"
+
+
+@pytest.mark.parametrize("case", PRUNE_CASES, ids=_prune_ids)
+def test_pruned_chunked_lax_matches_ref(case):
+    """The chunked-lax backend prunes its KV scan with the identical
+    block-range logic — exact vs the oracle on the same sweep."""
+    from repro.kernels.chunked import chunked_bwd, chunked_fwd
+    B, Tq, Tk, Hq, Hkv, D, causal, rel, window, bq, bk = case
+    q, k, v, do = _mk(B, Tq, Tk, Hq, Hkv, D, jnp.float32)
+    o_r, lse_r = chunk_attn_ref(q, k, v, causal=causal, q_offset=rel,
+                                window=window)
+    kw = dict(causal=causal, rel_offset=rel, window=window, block_kv=bk)
+    o_c, lse_c = chunked_fwd(q, k, v, **kw)
+    o_d, lse_d = chunked_fwd(q, k, v, prune=False, **kw)
+    assert jnp.allclose(o_r, o_c, atol=1e-5, rtol=1e-5)
+    assert jnp.allclose(o_c, o_d, atol=1e-6)
+    m = (lse_r > -1e29) | (lse_c > -1e29)
+    assert jnp.allclose(jnp.where(m, lse_r, 0), jnp.where(m, lse_c, 0),
+                        atol=1e-4, rtol=1e-4)
+    g_r = chunk_attn_bwd_ref(q, k, v, o_r, lse_r, do, causal=causal,
+                             q_offset=rel, window=window)
+    g_c = chunked_bwd(q, k, v, o_c, lse_c, do, **kw)
+    g_d = chunked_bwd(q, k, v, o_c, lse_c, do, prune=False, **kw)
+    for r, c_, d_ in zip(g_r, g_c, g_d):
+        assert jnp.allclose(r, c_, atol=2e-4, rtol=2e-4)
+        assert jnp.allclose(c_, d_, atol=1e-6)
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled Mosaic lowering needs TPU hardware")
+@pytest.mark.parametrize("case", PRUNE_CASES[:3], ids=_prune_ids)
+def test_pruned_flash_compiles_on_tpu(case):
+    """CI validates the pruned kernels under interpret=True only; on real
+    TPU this exercises the compiled lowering of the in-kernel lax.cond,
+    the narrow (1,1,br) lse/delta blocks, and the index-map remapping."""
+    B, Tq, Tk, Hq, Hkv, D, causal, rel, window, bq, bk = case
+    q, k, v, do = _mk(B, Tq, Tk, Hq, Hkv, D, jnp.float32)
+    kw = dict(causal=causal, rel_offset=rel, window=window, block_q=bq,
+              block_kv=bk)
+    o_r, lse_r = chunk_attn_ref(q, k, v, causal=causal, q_offset=rel,
+                                window=window)
+    o_p, lse_p = ops.flash_fwd(q, k, v, **kw)
+    assert jnp.allclose(o_r, o_p, atol=1e-5, rtol=1e-5)
+    ref = chunk_attn_bwd_ref(q, k, v, o_r, lse_r, do, causal=causal,
+                             q_offset=rel, window=window)
+    pal = ops.flash_bwd(q, k, v, o_p, lse_p, do, **kw)
+    for r, p_ in zip(ref, pal):
+        assert jnp.allclose(r, p_, atol=2e-4, rtol=2e-4)
+
+
+def test_pruned_grid_is_smaller_where_mask_allows():
+    """The windowed regimes actually shrink the sequential grid dimension
+    (not just skip compute): seq_grid < nk."""
+    from repro.kernels.block_sparse import kv_profile
+    p = kv_profile(nq=8, nk=8, br=128, bc=128, causal=False,
+                   rel_offset=1024, window=512)
+    assert 0 < p.seq_grid < 8
+    assert p.executed_steps < p.launched_steps < p.full_steps
+
+
+# ------------------------------------------------------ block tuning surface
+
+def test_chunk_attn_block_hints_reach_tunable_backends():
+    """block_q/block_kv flow through chunk_attn to tunable backends and
+    stay exact; non-tunable backends silently drop the hints."""
+    from repro.core.attention import chunk_attn, chunk_attn_bwd
+    q, k, v, do = _mk(1, 128, 256, 2, 2, 32, jnp.float32)
+    o_r, lse_r = chunk_attn_ref(q, k, v, causal=True, q_offset=128)
+    for impl in ("chunked-lax", "pallas-interpret", "ref"):
+        # non-dividing hints (96 ∤ 128) must shrink to a divisor, not crash
+        o_nd, _ = chunk_attn(q, k, v, causal=True, rel_offset=128,
+                             impl=impl, block_q=96, block_kv=96)
+        assert jnp.allclose(o_r, o_nd, atol=1e-5), impl
+        o_b, lse_b = chunk_attn(q, k, v, causal=True, rel_offset=128,
+                                impl=impl, block_q=64, block_kv=32)
+        assert jnp.allclose(o_r, o_b, atol=1e-5), impl
+        g_r = chunk_attn_bwd_ref(q, k, v, o_r, lse_r, do, causal=True,
+                                 q_offset=128)
+        g_b = chunk_attn_bwd(q, k, v, o_b, lse_b, do, causal=True,
+                             rel_offset=128, impl=impl, block_q=64,
+                             block_kv=32)
+        for a, b in zip(g_r, g_b):
+            assert jnp.allclose(a, b, atol=2e-4), impl
+
+
+def test_registry_tunable_flag():
+    from repro.kernels import registry
+    assert registry.get("pallas").tunable_blocks
+    assert registry.get("pallas-interpret").tunable_blocks
+    assert registry.get("chunked-lax").tunable_blocks
+    assert not registry.get("ref").tunable_blocks
+    assert not registry.get("null").tunable_blocks
+
+
 def test_kernel_ref_grad_consistency():
     """ref bwd == jax.grad through monolithic softmax attention."""
     from repro.kernels.ref import full_attn_ref
