@@ -1,7 +1,8 @@
 """Tracked microbenchmark for the chunk-attention kernels.
 
-Measures, per mask regime (causal × window × rel_offset) and backend
-(``pallas-interpret``, ``chunked-lax``), forward and backward:
+Measures, per mask regime (a static MaskSpec: causal × window × rel_offset
+× packed-document) and backend (``pallas-interpret``, ``chunked-lax``),
+forward and backward:
 
   * the static grid-work profile of the block-sparse pruning — dense steps,
     launched steps, executed steps, work ratio — derived from the *same*
@@ -19,6 +20,7 @@ artifact per PR.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import statistics
@@ -27,6 +29,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import mask as mk
 from repro.kernels import ops
 from repro.kernels.block_sparse import kv_profile, q_profile
 from repro.kernels.chunked import chunked_bwd, chunked_fwd
@@ -40,14 +43,19 @@ def _regimes(T):
     (DESIGN.md §2): T is the per-device chunk length."""
     return {
         # step 0 of every schedule: the local causal chunk (~2x dense work)
-        "local_causal": dict(causal=True, rel_offset=0, window=0),
+        "local_causal": mk.causal(),
         # local chunk under a sliding window (Appendix F variant)
-        "local_causal_window": dict(causal=True, rel_offset=0, window=T // 4),
+        "local_causal_window": mk.sliding_window(T // 4),
         # ring step t=2: strictly causal pair, mask-free — nothing to prune,
         # tracked to show pruning adds no overhead where it can't win
-        "ring_step_full": dict(causal=False, rel_offset=2 * T, window=0),
+        "ring_step_full": mk.full(rel_offset=2 * T),
         # windowed ring step t=1: only the trailing window band is live
-        "ring_step_window": dict(causal=False, rel_offset=T, window=T // 2),
+        "ring_step_window": mk.sliding_window(T // 2, causal=False,
+                                              rel_offset=T),
+        # packed batch (4 uneven documents, static layout): causal AND
+        # same-document — cross-document blocks are pruned at trace time
+        "local_causal_document": mk.document(
+            boundaries=mk.doc_boundaries(T, 4)),
     }
 
 
@@ -83,40 +91,40 @@ def _grid_metrics(prof):
                 if prof.executed_steps else None)
 
 
-def _pallas_runners(q, k, v, do, kw, bq, bk):
+def _pallas_runners(q, k, v, do, mask, bq, bk):
     def fwd(prune):
         def run():
-            o, lse = ops.flash_fwd(q, k, v, block_q=bq, block_kv=bk,
-                                   interpret=True, prune=prune, **kw)
+            o, lse = ops.flash_fwd(q, k, v, mask=mask, block_q=bq,
+                                   block_kv=bk, interpret=True, prune=prune)
             jax.block_until_ready(o)
         return run
 
-    o, lse = ops.flash_fwd(q, k, v, block_q=bq, block_kv=bk, interpret=True,
-                           **kw)
+    o, lse = ops.flash_fwd(q, k, v, mask=mask, block_q=bq, block_kv=bk,
+                           interpret=True)
 
     def bwd(prune):
         def run():
-            g = ops.flash_bwd(q, k, v, o, lse, do, block_q=bq, block_kv=bk,
-                              interpret=True, prune=prune, **kw)
+            g = ops.flash_bwd(q, k, v, o, lse, do, mask=mask, block_q=bq,
+                              block_kv=bk, interpret=True, prune=prune)
             jax.block_until_ready(g)
         return run
     return fwd, bwd
 
 
-def _chunked_runners(q, k, v, do, kw, bk):
+def _chunked_runners(q, k, v, do, mask, bk):
     def fwd(prune):
-        fn = jax.jit(lambda q, k, v: chunked_fwd(q, k, v, block_kv=bk,
-                                                 prune=prune, **kw))
+        fn = jax.jit(lambda q, k, v: chunked_fwd(q, k, v, mask=mask,
+                                                 block_kv=bk, prune=prune))
 
         def run():
             jax.block_until_ready(fn(q, k, v))
         return run
 
-    o, lse = chunked_fwd(q, k, v, block_kv=bk, **kw)
+    o, lse = chunked_fwd(q, k, v, mask=mask, block_kv=bk)
 
     def bwd(prune):
         fn = jax.jit(lambda q, k, v, o, lse, do: chunked_bwd(
-            q, k, v, o, lse, do, block_kv=bk, prune=prune, **kw))
+            q, k, v, o, lse, do, mask=mask, block_kv=bk, prune=prune))
 
         def run():
             jax.block_until_ready(fn(q, k, v, o, lse, do))
@@ -128,9 +136,9 @@ def run_bench(*, T, B, H, D, bq, bk, iters, backends):
     q, k, v, do = _mk(B, T, H, D)
     nq, nk = T // bq, T // bk
     cases = []
-    for regime, kw in _regimes(T).items():
-        fwd_prof = kv_profile(nq=nq, nk=nk, br=bq, bc=bk, **kw)
-        dkv_prof = q_profile(nq=nq, nk=nk, br=bq, bc=bk, **kw)
+    for regime, mask in _regimes(T).items():
+        fwd_prof = kv_profile(nq=nq, nk=nk, br=bq, bc=bk, mask=mask)
+        dkv_prof = q_profile(nq=nq, nk=nk, br=bq, bc=bk, mask=mask)
         bwd_grid = dict(  # dq sweeps the kv grid, dkv the transposed q grid
             full_steps=fwd_prof.full_steps + dkv_prof.full_steps,
             launched_steps=fwd_prof.launched_steps + dkv_prof.launched_steps,
@@ -141,13 +149,13 @@ def run_bench(*, T, B, H, D, bq, bk, iters, backends):
                                   if ex else None)
         # chunked-lax has a single q block (the whole chunk), so its scan
         # can only prune whole-KV-chunk extremes — profile it as such
-        scan_prof = kv_profile(nq=1, nk=nk, br=T, bc=bk, **kw)
+        scan_prof = kv_profile(nq=1, nk=nk, br=T, bc=bk, mask=mask)
         for backend in backends:
             if backend == "pallas-interpret":
-                mk_fwd, mk_bwd = _pallas_runners(q, k, v, do, kw, bq, bk)
+                mk_fwd, mk_bwd = _pallas_runners(q, k, v, do, mask, bq, bk)
                 grids = (_grid_metrics(fwd_prof), bwd_grid)
             else:
-                mk_fwd, mk_bwd = _chunked_runners(q, k, v, do, kw, bk)
+                mk_fwd, mk_bwd = _chunked_runners(q, k, v, do, mask, bk)
                 grids = (_grid_metrics(scan_prof), _grid_metrics(scan_prof))
             for op, mk_run, grid in (("fwd", mk_fwd, grids[0]),
                                      ("bwd", mk_bwd, grids[1])):
@@ -155,7 +163,7 @@ def run_bench(*, T, B, H, D, bq, bk, iters, backends):
                                                    iters)
                 case = dict(
                     name=f"{regime}/{op}/{backend}",
-                    regime=dict(kw), op=op, backend=backend,
+                    regime=dataclasses.asdict(mask), op=op, backend=backend,
                     shape=dict(B=B, T=T, H=H, D=D, block_q=bq, block_kv=bk,
                                nq=nq, nk=nk),
                     grid=grid,
@@ -164,7 +172,7 @@ def run_bench(*, T, B, H, D, bq, bk, iters, backends):
                                  speedup=round(dense_us / pruned_us, 3)),
                 )
                 cases.append(case)
-                print(f"{case['name']:46s} steps {grid['executed_steps']:4d}"
+                print(f"{case['name']:52s} steps {grid['executed_steps']:4d}"
                       f"/{grid['full_steps']:4d}"
                       f" (x{grid['work_ratio'] or 1:.2f})"
                       f"  wall {pruned_us/1e3:8.1f}ms vs {dense_us/1e3:8.1f}ms"
@@ -190,19 +198,26 @@ def main(argv=None):
     cases = run_bench(**shape, iters=iters,
                       backends=("pallas-interpret", "chunked-lax"))
 
-    # headline number tracked across PRs: grid-step work ratio of the local
-    # causal chunk (the step every schedule executes on every device). The
-    # wall figure is only meaningful at the full shapes — smoke tiles are
-    # small enough that per-tile branch overhead drowns the signal, so the
-    # smoke summary rests on the deterministic step ratio alone.
+    # headline numbers tracked across PRs: the grid-step work ratios of the
+    # local causal chunk (the step every schedule executes on every device)
+    # and the packed-document chunk (must beat plain causal — the packed
+    # batch acceptance criterion). The wall figure is only meaningful at
+    # the full shapes — smoke tiles are small enough that per-tile branch
+    # overhead drowns the signal, so the smoke summary rests on the
+    # deterministic step ratios alone.
     local_fwd = next(c for c in cases
                      if c["name"] == "local_causal/fwd/pallas-interpret")
+    doc_fwd = next(c for c in cases if c["name"] ==
+                   "local_causal_document/fwd/pallas-interpret")
+    assert doc_fwd["grid"]["executed_steps"] < \
+        local_fwd["grid"]["executed_steps"], "packed must prune below causal"
     summary = dict(
         local_causal_step_ratio=local_fwd["grid"]["work_ratio"],
+        document_step_ratio=doc_fwd["grid"]["work_ratio"],
         local_causal_wall_speedup=(None if args.smoke
                                    else local_fwd["wall_us"]["speedup"]),
     )
-    out = dict(version=1, generated_by="benchmarks/kernel_bench.py",
+    out = dict(version=2, generated_by="benchmarks/kernel_bench.py",
                smoke=bool(args.smoke),
                host=dict(platform=jax.default_backend(), jax=jax.__version__),
                shape=shape, iters=iters, summary=summary, cases=cases)
@@ -213,7 +228,8 @@ def main(argv=None):
     print(f"wrote {path}")
     wall = summary["local_causal_wall_speedup"]
     print(f"summary: local causal chunk executes "
-          f"{summary['local_causal_step_ratio']}x fewer grid steps"
+          f"{summary['local_causal_step_ratio']}x fewer grid steps; packed "
+          f"document chunk {summary['document_step_ratio']}x"
           + (f", wall x{wall}" if wall else " (smoke: wall tracked per-case"
              " only; too noisy at smoke shapes for a headline)"))
 

@@ -112,13 +112,14 @@ def bench_table3_rsa():
     and wall time, 8 host devices, seq-parallel attention only."""
     code = """
 import time, jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
 mesh = jax.make_mesh((1,8), ("data","model"))
 B,N,H,D = 1,4096,8,64
 ks = jax.random.split(jax.random.PRNGKey(0),3)
 q,k,v = (jax.random.normal(kk,(B,N,H,D),jnp.float32) for kk in ks)
 for sched in ("rsa","balanced"):
-    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, causal=True)
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=mk.causal())
     f = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=None)[0])
     co = f.lower(q,k,v).compile()
     mem = co.memory_analysis().temp_size_in_bytes
@@ -150,6 +151,7 @@ def bench_table4_ulysses():
     layer from compiled HLO (8 host devices) + head-divisibility failures."""
     code = """
 import jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
 from repro.analysis.roofline import collective_stats
 mesh = jax.make_mesh((1,8), ("data","model"))
@@ -159,20 +161,20 @@ for name, H, Hkv, sched in [("balanced_mha",8,8,"balanced"),
                             ("balanced_gqa",8,2,"balanced")]:
     ks = jax.random.split(jax.random.PRNGKey(0),3)
     q = jax.random.normal(ks[0],(B,N,H,D)); k = jax.random.normal(ks[1],(B,N,Hkv,D)); v = jax.random.normal(ks[2],(B,N,Hkv,D))
-    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, causal=True)
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=mk.causal())
     f = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=None)[0])
     txt = f.lower(q,k,v).compile().as_text()
     st = collective_stats(txt)
     print(f"RESULT {name} coll_bytes={st.total_bytes:.0f}")
 # irregular heads: ulysses must fail, balanced must work (paper 4.2/4.6)
 q = jax.random.normal(jax.random.PRNGKey(0),(B,N,33,32))
-spec = DistAttnSpec(axis="model", axis_size=8, schedule="ulysses", causal=True)
+spec = DistAttnSpec(axis="model", axis_size=8, schedule="ulysses", mask=mk.causal())
 try:
     dist_attn_fwd(q,q,q,mesh=mesh,spec=spec,batch_axes=None)
     print("RESULT ulysses_33h ok")
 except ValueError:
     print("RESULT ulysses_33h infeasible_head_padding_required")
-spec = DistAttnSpec(axis="model", axis_size=8, schedule="balanced", causal=True)
+spec = DistAttnSpec(axis="model", axis_size=8, schedule="balanced", mask=mk.causal())
 o,_ = jax.jit(lambda q: dist_attn_fwd(q,q,q,mesh=mesh,spec=spec,batch_axes=None))(q)
 print("RESULT balanced_33h ok_no_padding")
 """
@@ -180,6 +182,51 @@ print("RESULT balanced_33h ok_no_padding")
         if line.startswith("RESULT"):
             parts = line.split()
             row(f"table4/{parts[1]}", 0, " ".join(parts[2:]))
+
+
+# ------------------------------------------------- schedule-level tracking
+
+def bench_schedules_wall():
+    """Tracked schedule-level benchmark (BENCH_schedules.json): forward
+    wall-clock of each sequence-parallel schedule on 8 host devices, for
+    the dense causal mask AND a packed (document) batch — so the perf
+    trajectory covers the schedules, not just the kernels, and the packed
+    path is tracked from its introduction."""
+    code = """
+import time, statistics, numpy as np, jax, jax.numpy as jnp
+from repro.core import mask as mk
+from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd, zigzag_perm
+mesh = jax.make_mesh((1,8), ("data","model"))
+B,N,H,D = 1,2048,8,64
+ks = jax.random.split(jax.random.PRNGKey(0),3)
+q,k,v = (jax.random.normal(kk,(B,N,H,D),jnp.float32) for kk in ks)
+bnd = mk.doc_boundaries(N, 8)
+seg = jnp.asarray(np.tile(mk.segments_from_boundaries(N, bnd), (B,1)))
+perm = zigzag_perm(N, 8)
+def timeit(f, *a):
+    jax.block_until_ready(f(*a))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(f(*a))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+for sched in ("ring","balanced","zigzag","ulysses","rsa"):
+    qq, kk_, vv, ss = (q[:,perm],k[:,perm],v[:,perm],seg[:,perm]) \\
+        if sched == "zigzag" else (q,k,v,seg)
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=mk.causal())
+    f = jax.jit(lambda a,b,c: dist_attn_fwd(a,b,c,mesh=mesh,spec=spec,batch_axes=None)[0])
+    us = timeit(f, qq, kk_, vv)
+    print(f"RESULT {sched}/causal {us:.0f}")
+    specd = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=mk.document())
+    fd = jax.jit(lambda a,b,c,s: dist_attn_fwd(a,b,c,mesh=mesh,spec=specd,batch_axes=None,segments=s)[0])
+    usd = timeit(fd, qq, kk_, vv, ss)
+    print(f"RESULT {sched}/document {usd:.0f}")
+"""
+    for line in _subproc(code).splitlines():
+        if line.startswith("RESULT"):
+            _, name, us = line.split()
+            row(f"schedules/attn_fwd_{name}_seq2k_8dev", f"{float(us):.0f}",
+                "wall us, CPU host mesh")
 
 
 # ------------------------------------------------------------- appendix D
@@ -254,17 +301,27 @@ BENCHES = {
     "table4": bench_table4_ulysses,
     "table2": bench_table2_max_seqlen,
     "appD": bench_appendixD_comm_volume,
+    "schedules": bench_schedules_wall,
     "roofline": bench_roofline_table,
 }
+
+# the subset tracked in BENCH_schedules.json (CI smoke + in-repo history):
+# deterministic derived rows + the schedule-level wall rows
+TRACKED = ("fig4", "appD", "table2", "schedules")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names, or 'tracked' for "
+                         "the BENCH_schedules.json subset")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write rows to a machine-readable JSON file")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+    if args.only == "tracked":
+        names = list(TRACKED)
+    else:
+        names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()

@@ -18,6 +18,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.analysis.roofline import collective_stats  # noqa: E402
 from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd  # noqa
 from repro.kernels.ref import full_attn_ref  # noqa: E402
+from repro.core import mask as mask_lib  # noqa: E402
 
 
 def main():
@@ -29,7 +30,7 @@ def main():
     print(f"{'schedule':>10} {'max err':>12} {'coll bytes/layer':>18} ops")
     for sched in ("ring", "balanced", "ulysses", "rsa"):
         spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched,
-                            causal=True)
+                            mask=mask_lib.causal())
         f = jax.jit(lambda q, k, v: dist_attn_fwd(
             q, k, v, mesh=mesh, spec=spec, batch_axes=None)[0])
         txt = f.lower(q, k, v).compile().as_text()

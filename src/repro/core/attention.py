@@ -6,19 +6,30 @@ pair; partials merge exactly with :func:`merge` (the paper's ``rescale``).
 Key property exploited by the schedules (DESIGN.md §2): in the ring /
 balanced schedules, the mask of every step depends only on the **relative**
 offset between the q and kv chunks (0 for the local step, ``t·Tc`` for step
-``t``), which is static per step — so the Pallas kernels never need dynamic
-position scalars.
+``t``), which is static per step. The mask is passed as a declarative
+:class:`repro.core.mask.MaskSpec` (full / causal / sliding_window /
+prefix_lm / document) — so the Pallas kernels never need dynamic position
+scalars, and the block-sparse pruner can reason about the whole spec.
+Per-token document segment IDs are dynamic and travel as
+``q_segments``/``kv_segments`` operands next to q/k/v.
+
+The pre-MaskSpec ``causal``/``rel_offset``/``window`` kwargs remain as
+**deprecated shims** (mapped onto a MaskSpec, one DeprecationWarning per
+process); new call sites should pass ``mask=``.
 
 ``impl`` names a backend in :mod:`repro.kernels.registry` (``ref``,
 ``chunked-lax``, ``pallas``, ``pallas-interpret``, ``null``); resolution
-honors each backend's capability flags and platform support, falling back
-down the registry's chain (with a logged downgrade) instead of crashing —
-e.g. ``pallas`` on a CPU host runs ``pallas-interpret``/``chunked-lax``.
+matches the MaskSpec's kinds against each backend's capability set and
+platform support, falling back down the registry's chain (with a logged
+downgrade) instead of crashing — e.g. ``pallas`` on a CPU host runs
+``pallas-interpret``/``chunked-lax``.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import mask as mk
+from repro.core.mask import MaskSpec
 from repro.kernels import registry
 from repro.kernels.ref import NEG_INF, merge_ref
 
@@ -26,6 +37,23 @@ from repro.kernels.ref import NEG_INF, merge_ref
 def set_default_impl(impl: str) -> None:
     """Set the process-wide default backend (configs override per call)."""
     registry.set_default(impl)
+
+
+def _resolve_mask(mask, causal, rel_offset, window) -> MaskSpec:
+    """``mask=`` wins; the legacy kwarg triple is a deprecated shim."""
+    if mask is not None:
+        if causal is not None or rel_offset is not None or window is not None:
+            raise ValueError(
+                "pass either mask= or the legacy causal/rel_offset/window "
+                "kwargs, not both")
+        return mask
+    if causal is not None or window is not None or rel_offset is not None:
+        mk.warn_legacy_once(
+            "chunk_attn(causal=, rel_offset=, window=)",
+            "mask=repro.core.mask.{full,causal,sliding_window,prefix_lm,"
+            "document}(...)")
+    return mk.from_legacy(causal=bool(causal), window=int(window or 0),
+                          rel_offset=int(rel_offset or 0))
 
 
 def _tuning_kw(be, block_q, block_kv):
@@ -37,28 +65,31 @@ def _tuning_kw(be, block_q, block_kv):
     return registry.block_tuning_kw(block_q, block_kv)
 
 
-def chunk_attn(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
-               impl=None, block_q=None, block_kv=None):
-    """Partial attention. ``rel_offset`` = absolute(q0) − absolute(kv0),
-    static per schedule step. ``block_q``/``block_kv`` are optional tile-
-    shape hints for tunable backends. Returns (o, lse)."""
-    be = registry.resolve(impl, causal=causal, window=window,
-                          rel_offset=rel_offset, dtype=q.dtype)
-    return be.fwd(q, k, v, causal=causal, rel_offset=rel_offset,
-                  window=window, scale=scale,
-                  **_tuning_kw(be, block_q, block_kv))
+def chunk_attn(q, k, v, *, mask: MaskSpec | None = None, causal=None,
+               rel_offset=None, window=None, scale=None, impl=None,
+               block_q=None, block_kv=None, q_segments=None,
+               kv_segments=None):
+    """Partial attention under a static ``mask`` (MaskSpec).
+    ``q_segments``/``kv_segments`` are (B, Tq)/(B, Tk) int32 document IDs
+    (document kind). ``block_q``/``block_kv`` are optional tile-shape hints
+    for tunable backends. Returns (o, lse)."""
+    mask = _resolve_mask(mask, causal, rel_offset, window)
+    be = registry.resolve(impl, mask=mask, dtype=q.dtype)
+    return be.fwd(q, k, v, mask=mask, scale=scale, q_segments=q_segments,
+                  kv_segments=kv_segments, **_tuning_kw(be, block_q, block_kv))
 
 
-def chunk_attn_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0,
-                   window=0, scale=None, impl=None, delta=None,
-                   block_q=None, block_kv=None):
+def chunk_attn_bwd(q, k, v, o, lse, do, *, mask: MaskSpec | None = None,
+                   causal=None, rel_offset=None, window=None, scale=None,
+                   impl=None, delta=None, block_q=None, block_kv=None,
+                   q_segments=None, kv_segments=None):
     """FA2 backward for one chunk using the saved (o, lse) — no forward
     recompute. ``delta = rowsum(o⊙do)`` may be precomputed (the distributed
     helper path ships delta instead of o). Returns (dq, dk, dv)."""
-    be = registry.resolve(impl, causal=causal, window=window,
-                          rel_offset=rel_offset, dtype=q.dtype)
-    return be.bwd(q, k, v, o, lse, do, causal=causal, rel_offset=rel_offset,
-                  window=window, scale=scale, delta=delta,
+    mask = _resolve_mask(mask, causal, rel_offset, window)
+    be = registry.resolve(impl, mask=mask, dtype=q.dtype)
+    return be.bwd(q, k, v, o, lse, do, mask=mask, scale=scale, delta=delta,
+                  q_segments=q_segments, kv_segments=kv_segments,
                   **_tuning_kw(be, block_q, block_kv))
 
 

@@ -179,6 +179,10 @@ class ShapeSpec:
     seq_len: int
     global_batch: int
     kind: str                        # "train" | "prefill" | "decode"
+    # packed-sequence training: documents packed per sequence. > 1 makes the
+    # pipeline emit ``segment_ids`` and the models mask cross-document
+    # attention (MaskSpec kind ``document``). 1 = one document per sequence.
+    docs: int = 1
 
 
 SHAPES = {
@@ -215,7 +219,8 @@ class ParallelConfig:
     seq_axis: str = "model"
     extra_seq_axes: Tuple[str, ...] = ()          # 2D sequence sharding
     fsdp_axes: Tuple[str, ...] = ("data",)
-    schedule: str = "balanced"                    # balanced | ring | rsa
+    # balanced | ring | rsa | ulysses | zigzag (see core/dist_attention.py)
+    schedule: str = "balanced"
     remat: str = "remat_aware"                    # remat_aware | hf | none
 
     @property

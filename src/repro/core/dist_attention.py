@@ -1,22 +1,37 @@
 """DISTFLASHATTN — the paper's core contribution, as JAX shard_map code.
 
 Sequence-parallel exact attention over the ``model`` mesh axis (the paper's
-``P`` workers). Three schedules:
+``P`` workers). Schedules (validated in ``DistAttnSpec.__post_init__`` —
+unknown names raise instead of silently running the ring):
 
 * ``balanced`` — the paper's load-balanced schedule (§3.2, Alg. 2):
   ``⌊P/2⌋`` ring steps; workers with unfinished causal work compute
   ``attn(q_p, kv_{p−t})`` while *helpers* (workers whose causal prefix is
   done) compute ``attn(q_{(h−t) mod P}, kv_h)`` on behalf of heavy workers
   and ship the partial ``(o, lse)`` back for a ``rescale`` merge. Idle
-  fraction ``1/(2P)`` (even P) / ``0`` (odd P).
+  fraction ``1/(2P)`` (even P) / ``0`` (odd P). Causal-kind masks only
+  (document included).
 * ``ring`` — vanilla DISTFLASHATTN (§3.1, Alg. 1): ``P−1`` steps, workers
   idle once their causal prefix is exhausted (idle fraction → 1/2). Also
   used for bidirectional encoders (where causal imbalance doesn't exist —
   paper §F discussion) and for the sliding-window variant (Appendix F:
   "change the end condition of the for loop").
+* ``zigzag`` — beyond-paper balanced placement, see the section below.
+* ``ulysses`` — DeepSpeed-Ulysses head-parallel baseline (all-to-all);
+  raises on head counts not divisible by P (paper §4.2/§4.6).
 * ``rsa`` — Ring Self-Attention baseline (Li et al., 2021): all-gathers
   K and V and materializes the full score matrix (no memory-efficient
   attention). Benchmark baseline only.
+
+Masking is a declarative :class:`repro.core.mask.MaskSpec` carried by
+``DistAttnSpec.mask``; every schedule derives each step's spec statically
+(``mk.ring_step`` / ``mk.strict_causal_pair``). Packed-sequence (document)
+masking is first-class: the per-token ``segments`` array is sharded like
+the activations and **travels the ring alongside K/V**, so every step
+masks cross-document pairs exactly; the kernels prune what their static
+layout allows. Prefix-LM masks need absolute positions, which per-shard
+ring steps don't have — they are served by ``ulysses``/``rsa`` or a
+single-shard axis, and rejected elsewhere at spec-construction time.
 
 Communication/computation overlap (§3.2, Eq. 3) is expressed in dataflow:
 the ``ppermute`` producing step ``t+1``'s chunk is issued *before* step
@@ -41,12 +56,15 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import mask as mk
 from repro.core.attention import (chunk_attn, chunk_attn_bwd, empty_partial,
                                   mask_partial, merge)
+from repro.core.mask import MaskSpec
 from repro.kernels.ref import NEG_INF
 
 
@@ -54,14 +72,26 @@ from repro.kernels.ref import NEG_INF
 # Schedule configuration
 # --------------------------------------------------------------------------
 
+SCHEDULES = ("balanced", "ring", "rsa", "ulysses", "zigzag")
+
+
 @dataclasses.dataclass(frozen=True)
 class DistAttnSpec:
-    """Static description of one distributed-attention call site."""
+    """Static description of one distributed-attention call site.
+
+    ``schedule`` ∈ ``balanced | ring | rsa | ulysses | zigzag`` (validated —
+    a typo raises instead of silently running the ring schedule).
+    ``mask`` is the MaskSpec of the *whole* (unsharded) attention; the
+    schedules derive per-step specs from it. The pre-MaskSpec ``causal``/
+    ``window`` constructor kwargs remain as deprecated shims.
+    """
     axis: str = "model"            # sequence-parallel mesh axis
     axis_size: int = 1             # P
-    schedule: str = "balanced"     # balanced | ring | rsa
-    causal: bool = True
-    window: int = 0                # sliding window (tokens); ring only
+    schedule: str = "balanced"     # balanced | ring | rsa | ulysses | zigzag
+    mask: Optional[MaskSpec] = None
+    # deprecated shims, mapped onto ``mask`` (default: causal, full window)
+    causal: dataclasses.InitVar[Optional[bool]] = None
+    window: dataclasses.InitVar[Optional[int]] = None
     scale: Optional[float] = None
     # attention backend name resolved via repro.kernels.registry (None =
     # process default); capability/platform fallback happens at resolve time
@@ -71,11 +101,60 @@ class DistAttnSpec:
     block_q: Optional[int] = None
     block_kv: Optional[int] = None
 
+    def __post_init__(self, causal, window):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; valid: {SCHEDULES}")
+        if self.mask is None:
+            if causal is not None or window is not None:
+                mk.warn_legacy_once(
+                    "DistAttnSpec(causal=, window=)",
+                    "mask=repro.core.mask.{causal,sliding_window,full,"
+                    "document}(...)")
+            # the spec-level legacy default is causal (unlike chunk_attn's)
+            m = mk.from_legacy(causal=True if causal is None else causal,
+                               window=window or 0)
+            object.__setattr__(self, "mask", m)
+        elif causal is not None or window is not None:
+            raise ValueError("pass either mask= or the legacy causal/window "
+                             "kwargs, not both")
+        m = self.mask
+        if m.q_offset or m.kv_offset:
+            raise ValueError("DistAttnSpec.mask must be offset-free — the "
+                             "schedules derive per-step offsets")
+        if self.axis_size > 1:
+            if m.boundaries is not None and self.schedule != "ulysses":
+                raise ValueError(
+                    f"static document boundaries don't compose with the "
+                    f"{self.schedule!r} schedule's per-shard coordinates; "
+                    f"pass dynamic segments= arrays instead")
+            if self.schedule in ("balanced", "zigzag") and \
+                    not (m.causal and not m.window and not m.prefix_len):
+                raise ValueError(
+                    f"{self.schedule!r} handles causal full-window masks "
+                    f"only (got {m.kind!r}); use ring/ulysses")
+            # rsa/ulysses serve prefix_lm forward-only (absolute positions
+            # exist there); their backward — the ring — rejects it below
+            if m.prefix_len and self.schedule == "ring":
+                raise ValueError(
+                    "prefix_lm needs absolute kv positions, which the "
+                    "ring schedule's per-shard chunks don't have; use "
+                    "ulysses/rsa or a single-shard axis")
+            if m.window and self.schedule == "rsa":
+                raise ValueError("rsa baseline has no sliding-window path")
+
 
 def _tune(spec: DistAttnSpec) -> dict:
     """chunk_attn tuning kwargs carried by the spec (scale + tile hints)."""
     return dict(scale=spec.scale, impl=spec.impl, block_q=spec.block_q,
                 block_kv=spec.block_kv)
+
+
+def _seg_kw(mask: MaskSpec, q_seg, kv_seg) -> dict:
+    """Segment operands, only when the mask consumes them."""
+    if not mask.document or q_seg is None:
+        return {}
+    return dict(q_segments=q_seg, kv_segments=kv_seg)
 
 
 def _shift(x, axis, shift, size):
@@ -88,10 +167,11 @@ def _ring_steps(spec: DistAttnSpec, chunk_len: int) -> int:
     """Number of ring steps; truncated by the sliding window (Appendix F)."""
     P_ = spec.axis_size
     n = P_ - 1
-    if spec.window and spec.window > 0:
+    w = spec.mask.window
+    if w and w > 0:
         # step t covers query-key distances [(t-1)*Tc+1, (t+1)*Tc-1];
         # it contributes only if the smallest distance is inside the window.
-        n = min(n, max(0, -(-(spec.window - 1) // chunk_len)))
+        n = min(n, max(0, -(-(w - 1) // chunk_len)))
     return n
 
 
@@ -99,51 +179,67 @@ def _ring_steps(spec: DistAttnSpec, chunk_len: int) -> int:
 # Forward schedules (local/per-shard code)
 # --------------------------------------------------------------------------
 
-def _fwd_ring(spec, q, k, v):
-    """Vanilla ring (Alg. 1) — causal, bidirectional, or windowed."""
+def _fwd_ring(spec, q, k, v, seg=None):
+    """Vanilla ring (Alg. 1) — causal, bidirectional, windowed, document."""
     p = lax.axis_index(spec.axis)
     P_, Tc = spec.axis_size, q.shape[1]
-    o, s = chunk_attn(q, k, v, causal=spec.causal, rel_offset=0,
-                      window=spec.window, **_tune(spec))
+    m = spec.mask
+    o, s = chunk_attn(q, k, v, mask=m, **_seg_kw(m, seg, seg), **_tune(spec))
     n = _ring_steps(spec, Tc)
     if n == 0:
         return o, s
     kv = _shift((k, v), spec.axis, 1, P_)            # prefetch step 1
+    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
     for t in range(1, n + 1):
-        kv_next = _shift(kv, spec.axis, 1, P_) if t < n else None  # overlap
-        rel = t * Tc
-        o_t, s_t = chunk_attn(q, kv[0], kv[1], causal=False, rel_offset=rel,
-                              window=spec.window, **_tune(spec))
-        if spec.causal:
+        if t < n:                                     # prefetch (overlap)
+            kv_next = _shift(kv, spec.axis, 1, P_)
+            seg_next = _shift(seg_r, spec.axis, 1, P_) \
+                if seg_r is not None else None
+        m_t = mk.ring_step(m, t * Tc)
+        o_t, s_t = chunk_attn(q, kv[0], kv[1], mask=m_t,
+                              **_seg_kw(m_t, seg, seg_r), **_tune(spec))
+        if m.causal:
             o_t, s_t = mask_partial(p >= t, o_t, s_t)
         o, s = merge(o, s, o_t, s_t)
-        kv = kv_next
+        if t < n:
+            kv, seg_r = kv_next, seg_next
     return o, s
 
 
-def _fwd_balanced(spec, q, k, v):
-    """Load-balanced schedule (Alg. 2). Causal only, full window."""
-    assert spec.causal and not spec.window, "balanced schedule is causal/full"
+def _fwd_balanced(spec, q, k, v, seg=None):
+    """Load-balanced schedule (Alg. 2). Causal-kind masks, full window."""
     p = lax.axis_index(spec.axis)
     P_, Tc = spec.axis_size, q.shape[1]
-    o, s = chunk_attn(q, k, v, causal=True, **_tune(spec))
+    m = spec.mask
+    m_x = mk.strict_causal_pair(m)     # off-diagonal pairs: document only
+    o, s = chunk_attn(q, k, v, mask=m, **_seg_kw(m, seg, seg), **_tune(spec))
     if P_ == 1:
         return o, s
     T = P_ // 2
     kv = _shift((k, v), spec.axis, 1, P_)            # prefetch step 1
     qb = _shift(q, spec.axis, 1, P_)
+    # one traveling segment chunk serves both sides: the helper's q chunk
+    # and the worker's kv chunk are the same remote device's tokens
+    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
     for t in range(1, T + 1):
         helpers = (t != T) or (P_ % 2 == 1)
         if t < T:                                     # prefetch step t+1
             kv_next = _shift(kv, spec.axis, 1, P_)
             qb_next = _shift(qb, spec.axis, 1, P_)
+            seg_next = _shift(seg_r, spec.axis, 1, P_) \
+                if seg_r is not None else None
         is_worker = p >= t
         # one attn kernel per device per step: workers use (q_p, kv_{p−t}),
-        # helpers use (q_{(p−t) mod P}, kv_p). No mask — strictly causal pairs.
+        # helpers use (q_{(p−t) mod P}, kv_p). No positional mask — strictly
+        # causal pairs; document segments still apply.
         q_sel = jnp.where(is_worker, q, qb)
         k_sel = jnp.where(is_worker, kv[0], k)
         v_sel = jnp.where(is_worker, kv[1], v)
-        o_t, s_t = chunk_attn(q_sel, k_sel, v_sel, causal=False,
+        skw = {}
+        if seg_r is not None and m.document:
+            skw = dict(q_segments=jnp.where(is_worker, seg, seg_r),
+                       kv_segments=jnp.where(is_worker, seg_r, seg))
+        o_t, s_t = chunk_attn(q_sel, k_sel, v_sel, mask=m_x, **skw,
                               **_tune(spec))
         o_w, s_w = mask_partial(is_worker, o_t, s_t)
         o, s = merge(o, s, o_w, s_w)
@@ -154,10 +250,11 @@ def _fwd_balanced(spec, q, k, v):
             o, s = merge(o, s, o_r, s_r)
         if t < T:
             kv, qb = kv_next, qb_next
+            seg_r = seg_next if seg_r is not None else None
     return o, s
 
 
-def _fwd_ulysses(spec, q, k, v):
+def _fwd_ulysses(spec, q, k, v, seg=None):
     """DeepSpeed-Ulysses baseline (Jacobs et al., 2023): all-to-all the
     sequence-sharded q/k/v into head-sharded layout, run ordinary (local)
     FlashAttention over the full sequence, all-to-all back. Requires the
@@ -176,16 +273,22 @@ def _fwd_ulysses(spec, q, k, v):
         return lax.all_to_all(x, spec.axis, split_axis=1, concat_axis=2,
                               tiled=True)
     qh, kh, vh = a2a(q), a2a(k), a2a(v)          # (B, T_glob, H/P, D)
-    o, s = chunk_attn(qh, kh, vh, causal=spec.causal, window=spec.window,
-                      **_tune(spec))
+    m = spec.mask
+    skw = {}
+    if seg is not None and m.document:
+        seg_g = lax.all_gather(seg, spec.axis, axis=1, tiled=True)
+        skw = dict(q_segments=seg_g, kv_segments=seg_g)
+    o, s = chunk_attn(qh, kh, vh, mask=m, **skw, **_tune(spec))
     # lse (B, T_glob, H/P) -> (B, T_loc, H): split seq, concat heads
     s_back = lax.all_to_all(s, spec.axis, split_axis=1, concat_axis=2,
                             tiled=True)
     return a2a(o, fwd=False), s_back
 
 
-def _fwd_rsa(spec, q, k, v):
+def _fwd_rsa(spec, q, k, v, seg=None):
     """Ring Self-Attention baseline: all-gather KV, materialize scores."""
+    if spec.mask.needs_segments and seg is None:
+        raise ValueError("document mask without boundaries needs segments=")
     kg = lax.all_gather(k, spec.axis, axis=1, tiled=True)
     vg = lax.all_gather(v, spec.axis, axis=1, tiled=True)
     p = lax.axis_index(spec.axis)
@@ -193,16 +296,24 @@ def _fwd_rsa(spec, q, k, v):
     B, Tq, Hq, D = q.shape
     Hkv = kg.shape[2]
     g = Hq // Hkv
+    m = spec.mask
     scale = spec.scale or 1.0 / (D ** 0.5)
     kf = jnp.repeat(kg, g, axis=2) if g > 1 else kg
     vf = jnp.repeat(vg, g, axis=2) if g > 1 else vg
     sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                     kf.astype(jnp.float32)) * scale
-    if spec.causal:
+    if m.needs_mask:
+        # same MaskSpec.allow semantics as the kernels, with this shard's
+        # traced absolute query positions and the gathered global keys
         qpos = p * Tc + jnp.arange(Tq)
         kpos = jnp.arange(kg.shape[1])
-        sc = jnp.where((kpos[None, :] <= qpos[:, None])[None, None],
-                       sc, NEG_INF)
+        qs = ks = None
+        if m.document and seg is not None:
+            sg = lax.all_gather(seg, spec.axis, axis=1, tiled=True)
+            qs, ks = seg[:, :, None], sg[:, None, :]
+        allow = m.allow(qpos[:, None], kpos[None, :], qs, ks)
+        allow = allow[None, None] if allow.ndim == 2 else allow[:, None]
+        sc = jnp.where(allow, sc, NEG_INF)
     w = jax.nn.softmax(sc, axis=-1)                  # full P×-size matrix
     o = jnp.einsum("bhqk,bkhd->bqhd", w, vf.astype(jnp.float32))
     lse = jax.scipy.special.logsumexp(sc, axis=-1).transpose(0, 2, 1)
@@ -213,14 +324,14 @@ def _fwd_rsa(spec, q, k, v):
 # Backward schedules (explicit; used by remat-aware checkpointing)
 # --------------------------------------------------------------------------
 
-def _bwd_ring(spec, q, k, v, o, s, do):
+def _bwd_ring(spec, q, k, v, o, s, do, seg=None):
     p = lax.axis_index(spec.axis)
     P_, Tc = spec.axis_size, q.shape[1]
+    m = spec.mask
     f32 = jnp.float32
     delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)  # (B,T,H)
     dq_l, dk_l, dv_l = chunk_attn_bwd(
-        q, k, v, o, s, do, causal=spec.causal, rel_offset=0,
-        window=spec.window, **_tune(spec))
+        q, k, v, o, s, do, mask=m, **_seg_kw(m, seg, seg), **_tune(spec))
     dq = dq_l.astype(f32)
     dkv_home = (dk_l.astype(f32), dv_l.astype(f32))
     n = _ring_steps(spec, Tc)
@@ -229,21 +340,23 @@ def _bwd_ring(spec, q, k, v, o, s, do):
             dkv_home[1].astype(v.dtype)
     # containers: (k, v) data + (dk, dv) accumulators travel together
     kv = _shift((k, v), spec.axis, 1, P_)
+    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
     dkv = compat.tree_map(lambda a: jnp.zeros(a.shape, f32), kv)
     for t in range(1, n + 1):
         if t < n:                                     # prefetch data (overlap)
             kv_nxt = _shift(kv, spec.axis, 1, P_)
-        rel = t * Tc
+            seg_nxt = _shift(seg_r, spec.axis, 1, P_) \
+                if seg_r is not None else None
+        m_t = mk.ring_step(m, t * Tc)
         dq_t, dk_t, dv_t = chunk_attn_bwd(
-            q, kv[0], kv[1], o, s, do, causal=False, rel_offset=rel,
-            window=spec.window, **_tune(spec),
-            delta=delta)
-        valid = (p >= t) if spec.causal else jnp.bool_(True)
+            q, kv[0], kv[1], o, s, do, mask=m_t,
+            **_seg_kw(m_t, seg, seg_r), **_tune(spec), delta=delta)
+        valid = (p >= t) if m.causal else jnp.bool_(True)
         w = valid.astype(f32)
         dq = dq + dq_t.astype(f32) * w
         dkv = (dkv[0] + dk_t.astype(f32) * w, dkv[1] + dv_t.astype(f32) * w)
         if t < n:                                     # accumulators move late
-            kv = kv_nxt
+            kv, seg_r = kv_nxt, (seg_nxt if seg_r is not None else None)
             dkv = _shift(dkv, spec.axis, 1, P_)
     # route accumulated dkv home: container at p holds chunk (p−n) mod P
     dkv = _shift(dkv, spec.axis, -n, P_)
@@ -252,12 +365,14 @@ def _bwd_ring(spec, q, k, v, o, s, do):
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
-def _bwd_balanced(spec, q, k, v, o, s, do):
+def _bwd_balanced(spec, q, k, v, o, s, do, seg=None):
     p = lax.axis_index(spec.axis)
     P_, Tc = spec.axis_size, q.shape[1]
+    m = spec.mask
+    m_x = mk.strict_causal_pair(m)
     f32 = jnp.float32
-    dq_l, dk_l, dv_l = chunk_attn_bwd(q, k, v, o, s, do, causal=True,
-                                      **_tune(spec))
+    dq_l, dk_l, dv_l = chunk_attn_bwd(q, k, v, o, s, do, mask=m,
+                                      **_seg_kw(m, seg, seg), **_tune(spec))
     dq = dq_l.astype(f32)
     dk_home = dk_l.astype(f32)
     dv_home = dv_l.astype(f32)
@@ -270,12 +385,15 @@ def _bwd_balanced(spec, q, k, v, o, s, do):
     kv = _shift((k, v), spec.axis, 1, P_)
     dkv = (jnp.zeros(k.shape, f32), jnp.zeros(v.shape, f32))
     qb = _shift((q, do, s, delta), spec.axis, 1, P_)
+    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
     dqb = jnp.zeros(q.shape, f32)
     for t in range(1, T + 1):
         helpers = (t != T) or (P_ % 2 == 1)
         if t < T:                                     # prefetch data (overlap)
             kv_nxt = _shift(kv, spec.axis, 1, P_)
             qb_nxt = _shift(qb, spec.axis, 1, P_)
+            seg_nxt = _shift(seg_r, spec.axis, 1, P_) \
+                if seg_r is not None else None
         is_worker = p >= t
         q_sel = jnp.where(is_worker, q, qb[0])
         do_sel = jnp.where(is_worker, do, qb[1])
@@ -284,8 +402,12 @@ def _bwd_balanced(spec, q, k, v, o, s, do):
         v_sel = jnp.where(is_worker, kv[1], v)
         o_unused = jnp.zeros_like(q_sel)  # delta passed explicitly
         d_sel = jnp.where(is_worker, delta, qb[3])
+        skw = {}
+        if seg_r is not None and m.document:
+            skw = dict(q_segments=jnp.where(is_worker, seg, seg_r),
+                       kv_segments=jnp.where(is_worker, seg_r, seg))
         dq_t, dk_t, dv_t = chunk_attn_bwd(
-            q_sel, k_sel, v_sel, o_unused, s_sel, do_sel, causal=False,
+            q_sel, k_sel, v_sel, o_unused, s_sel, do_sel, mask=m_x, **skw,
             **_tune(spec), delta=d_sel)
         w_w = is_worker.astype(f32)
         dq = dq + dq_t.astype(f32) * w_w                 # worker: local dq
@@ -298,6 +420,7 @@ def _bwd_balanced(spec, q, k, v, o, s, do):
             dv_home = dv_home + dv_t.astype(f32) * w_h
         if t < T:                                     # accumulators move late
             kv, qb = kv_nxt, qb_nxt
+            seg_r = seg_nxt if seg_r is not None else None
             dkv = _shift(dkv, spec.axis, 1, P_)
             dqb = _shift(dqb, spec.axis, 1, P_)
     # route containers home (container at p holds chunk (p−T) mod P)
@@ -313,63 +436,88 @@ def _bwd_balanced(spec, q, k, v, o, s, do):
 # Public API: explicit fwd/bwd + custom-VJP wrapper, shard_mapped
 # --------------------------------------------------------------------------
 
-def _fwd_local(spec, q, k, v):
+def _fwd_local(spec, q, k, v, seg=None):
     if spec.axis_size == 1:
-        return chunk_attn(q, k, v, causal=spec.causal, window=spec.window,
+        m = spec.mask
+        return chunk_attn(q, k, v, mask=m, **_seg_kw(m, seg, seg),
                           **_tune(spec))
-    if spec.schedule == "balanced" and spec.causal and not spec.window:
-        return _fwd_balanced(spec, q, k, v)
-    if spec.schedule == "zigzag" and spec.causal and not spec.window:
-        return _fwd_zigzag(spec, q, k, v)
-    if spec.schedule == "rsa":
-        return _fwd_rsa(spec, q, k, v)
-    if spec.schedule == "ulysses":
-        return _fwd_ulysses(spec, q, k, v)
-    return _fwd_ring(spec, q, k, v)
+    sched = spec.schedule              # validated in __post_init__
+    if sched == "balanced":
+        return _fwd_balanced(spec, q, k, v, seg)
+    if sched == "zigzag":
+        return _fwd_zigzag(spec, q, k, v, seg)
+    if sched == "rsa":
+        return _fwd_rsa(spec, q, k, v, seg)
+    if sched == "ulysses":
+        return _fwd_ulysses(spec, q, k, v, seg)
+    assert sched == "ring", sched
+    return _fwd_ring(spec, q, k, v, seg)
 
 
-def _bwd_local(spec, q, k, v, o, s, do):
+def _bwd_local(spec, q, k, v, o, s, do, seg=None):
     if spec.axis_size == 1:
-        return chunk_attn_bwd(q, k, v, o, s, do, causal=spec.causal,
-                              window=spec.window, **_tune(spec))
-    if spec.schedule == "balanced" and spec.causal and not spec.window:
-        return _bwd_balanced(spec, q, k, v, o, s, do)
-    if spec.schedule == "zigzag" and spec.causal and not spec.window:
-        return _bwd_zigzag(spec, q, k, v, o, s, do)
-    return _bwd_ring(spec, q, k, v, o, s, do)
+        m = spec.mask
+        return chunk_attn_bwd(q, k, v, o, s, do, mask=m,
+                              **_seg_kw(m, seg, seg), **_tune(spec))
+    sched = spec.schedule
+    if sched == "balanced":
+        return _bwd_balanced(spec, q, k, v, o, s, do, seg)
+    if sched == "zigzag":
+        return _bwd_zigzag(spec, q, k, v, o, s, do, seg)
+    # rsa / ulysses baselines reuse the exact ring backward — which cannot
+    # express absolute coordinates (prefix masks, static doc boundaries)
+    # in its per-shard chunks
+    if spec.mask.prefix_len:
+        raise ValueError("prefix_lm distributed backward needs axis_size"
+                         " == 1 (fwd-only baselines support it)")
+    if spec.mask.boundaries is not None:
+        raise ValueError("static document boundaries have no distributed "
+                         "backward (the ring sees per-shard coordinates); "
+                         "pass dynamic segments= instead")
+    return _bwd_ring(spec, q, k, v, o, s, do, seg)
 
 
 def _specs(batch_axes, seq_axis):
     b = tuple(batch_axes) if batch_axes else None
     qkv = P(b, seq_axis, None, None)
     lse = P(b, seq_axis, None)
-    return qkv, lse
+    seg = P(b, seq_axis)
+    return qkv, lse, seg
 
 
 def dist_attn_fwd(q, k, v, *, mesh, spec: DistAttnSpec,
-                  batch_axes=("data",)):
-    """Distributed forward → (o, lse). Global-array in/out (GSPMD land)."""
-    qkv_s, lse_s = _specs(batch_axes, spec.axis)
+                  batch_axes=("data",), segments=None):
+    """Distributed forward → (o, lse). Global-array in/out (GSPMD land).
+    ``segments`` is a (B, T) int32 document-ID array sharded like the
+    activations (document masks only)."""
+    qkv_s, lse_s, seg_s = _specs(batch_axes, spec.axis)
+    in_specs, args = [qkv_s] * 3, [q, k, v]
+    if segments is not None:
+        in_specs.append(seg_s)
+        args.append(segments)
     fn = compat.shard_map(partial(_fwd_local, spec), mesh=mesh,
-                       in_specs=(qkv_s, qkv_s, qkv_s),
-                       out_specs=(qkv_s, lse_s), check_vma=False)
-    return fn(q, k, v)
+                          in_specs=tuple(in_specs),
+                          out_specs=(qkv_s, lse_s), check_vma=False)
+    return fn(*args)
 
 
 def dist_attn_bwd(q, k, v, o, lse, do, *, mesh, spec: DistAttnSpec,
-                  batch_axes=("data",)):
+                  batch_axes=("data",), segments=None):
     """Distributed backward from saved (o, lse) → (dq, dk, dv)."""
-    qkv_s, lse_s = _specs(batch_axes, spec.axis)
+    qkv_s, lse_s, seg_s = _specs(batch_axes, spec.axis)
+    in_specs = [qkv_s, qkv_s, qkv_s, qkv_s, lse_s, qkv_s]
+    args = [q, k, v, o, lse, do]
+    if segments is not None:
+        in_specs.append(seg_s)
+        args.append(segments)
     fn = compat.shard_map(partial(_bwd_local, spec), mesh=mesh,
-                       in_specs=(qkv_s, qkv_s, qkv_s, qkv_s, lse_s, qkv_s),
-                       out_specs=(qkv_s, qkv_s, qkv_s), check_vma=False)
-    return fn(q, k, v, o, lse, do)
+                          in_specs=tuple(in_specs),
+                          out_specs=(qkv_s, qkv_s, qkv_s), check_vma=False)
+    return fn(*args)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def dist_flash_attn(q, k, v, mesh, spec, batch_axes=("data",)):
-    """DISTFLASHATTN with autodiff. Returns (o, lse); lse is a residual
-    output (its cotangent is ignored, as in the paper's kernel)."""
+def _dist_flash_attn(q, k, v, mesh, spec, batch_axes):
     return dist_attn_fwd(q, k, v, mesh=mesh, spec=spec,
                          batch_axes=batch_axes)
 
@@ -388,7 +536,42 @@ def _cvjp_bwd(mesh, spec, batch_axes, res, cts):
     return dq, dk, dv
 
 
-dist_flash_attn.defvjp(_cvjp_fwd, _cvjp_bwd)
+_dist_flash_attn.defvjp(_cvjp_fwd, _cvjp_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _dist_flash_attn_seg(q, k, v, segments, mesh, spec, batch_axes):
+    return dist_attn_fwd(q, k, v, mesh=mesh, spec=spec,
+                         batch_axes=batch_axes, segments=segments)
+
+
+def _cvjp_seg_fwd(q, k, v, segments, mesh, spec, batch_axes):
+    o, lse = dist_attn_fwd(q, k, v, mesh=mesh, spec=spec,
+                           batch_axes=batch_axes, segments=segments)
+    return (o, lse), (q, k, v, segments, o, lse)
+
+
+def _cvjp_seg_bwd(mesh, spec, batch_axes, res, cts):
+    q, k, v, segments, o, lse = res
+    do, _ = cts
+    dq, dk, dv = dist_attn_bwd(q, k, v, o, lse, do, mesh=mesh, spec=spec,
+                               batch_axes=batch_axes, segments=segments)
+    # integer segment IDs take a float0 cotangent
+    dseg = np.zeros(segments.shape, jax.dtypes.float0)
+    return dq, dk, dv, dseg
+
+
+_dist_flash_attn_seg.defvjp(_cvjp_seg_fwd, _cvjp_seg_bwd)
+
+
+def dist_flash_attn(q, k, v, mesh, spec, batch_axes=("data",),
+                    segments=None):
+    """DISTFLASHATTN with autodiff. Returns (o, lse); lse is a residual
+    output (its cotangent is ignored, as in the paper's kernel).
+    ``segments`` (document masks) is non-differentiable."""
+    if segments is None:
+        return _dist_flash_attn(q, k, v, mesh, spec, batch_axes)
+    return _dist_flash_attn_seg(q, k, v, segments, mesh, spec, batch_axes)
 
 
 # --------------------------------------------------------------------------
@@ -500,17 +683,18 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
 # r = (p−t) mod P, and b̄ denotes the device's own mirror chunk 2P−1−p.
 # Coverage: 2P(P−1) + 3P = P(2P+1) pairs = all causal chunk pairs, each
 # exactly once. The backward ships only (kv, dkv): dq stays local.
+# Document segments ride the kv ring exactly like K/V.
 #
-# Contract: global arrays are already zigzag-permuted (models apply the
-# permutation once after the embedding; rope tables are permuted for free
-# as trace-time constants — see models/transformer.py).
+# Contract: global arrays (tokens AND segment IDs) are already
+# zigzag-permuted (models apply the permutation once after the embedding;
+# rope tables are permuted for free as trace-time constants — see
+# models/transformer.py).
 # --------------------------------------------------------------------------
 
 def zigzag_perm(T: int, P: int):
     """Natural→zigzag permutation: new global array order is
     [chunk 0, chunk 2P−1 | chunk 1, chunk 2P−2 | …] so contiguous device
     shards hold (p, 2P−1−p). Returns an index array of length T."""
-    import numpy as np
     c = T // (2 * P)
     order = []
     for p in range(P):
@@ -520,30 +704,49 @@ def zigzag_perm(T: int, P: int):
     return np.concatenate(order)
 
 
-def _fwd_zigzag(spec, q, k, v):
+def _fwd_zigzag(spec, q, k, v, seg=None):
     p = lax.axis_index(spec.axis)
     P_ = spec.axis_size
     Tl = q.shape[1]
     c = Tl // 2
+    m = spec.mask
+    m_x = mk.strict_causal_pair(m)
+    doc = seg is not None and m.document
+
+    def sk(qs, ks):
+        return dict(q_segments=qs, kv_segments=ks) if doc else {}
+
     q_a, q_b = q[:, :c], q[:, c:]
     k_a, k_b = k[:, :c], k[:, c:]
     v_a, v_b = v[:, :c], v[:, c:]
+    s_a_, s_b_ = (seg[:, :c], seg[:, c:]) if seg is not None else (None, None)
     # local step: a×a causal; b̄×a full; b̄×b̄ causal
-    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, **_tune(spec))
-    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, **_tune(spec))
-    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, **_tune(spec))
+    o_a, s_a = chunk_attn(q_a, k_a, v_a, mask=m, **sk(s_a_, s_a_),
+                          **_tune(spec))
+    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, mask=m_x, **sk(s_b_, s_a_),
+                            **_tune(spec))
+    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, mask=m, **sk(s_b_, s_b_),
+                            **_tune(spec))
     o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
     if P_ == 1:
         return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
     kv = _shift((k, v), spec.axis, 1, P_)
+    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
     for t in range(1, P_):
-        kv_next = _shift(kv, spec.axis, 1, P_) if t < P_ - 1 else None
+        if t < P_ - 1:
+            kv_next = _shift(kv, spec.axis, 1, P_)
+            seg_next = _shift(seg_r, spec.axis, 1, P_) \
+                if seg_r is not None else None
         ka_r, kb_r = kv[0][:, :c], kv[0][:, c:]
         va_r, vb_r = kv[1][:, :c], kv[1][:, c:]
+        sa_r, sb_r = (seg_r[:, :c], seg_r[:, c:]) if seg_r is not None \
+            else (None, None)
         w = p >= t
         # pair 1 -> (q_a if worker else q_b) × kv_a
         q1 = jnp.where(w, q_a, q_b)
-        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, **_tune(spec))
+        s1q = jnp.where(w, s_a_, s_b_) if doc else None
+        o1, s1 = chunk_attn(q1, ka_r, va_r, mask=m_x, **sk(s1q, sa_r),
+                            **_tune(spec))
         o1a, s1a = mask_partial(w, o1, s1)
         o_a, s_a = merge(o_a, s_a, o1a, s1a)
         o1b, s1b = mask_partial(~w, o1, s1)
@@ -551,33 +754,42 @@ def _fwd_zigzag(spec, q, k, v):
         # pair 2 -> q_b × (kv_a if worker else kv_b̄)
         k2 = jnp.where(w, ka_r, kb_r)
         v2 = jnp.where(w, va_r, vb_r)
-        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, **_tune(spec))
+        s2k = jnp.where(w, sa_r, sb_r) if doc else None
+        o2, s2 = chunk_attn(q_b, k2, v2, mask=m_x, **sk(s_b_, s2k),
+                            **_tune(spec))
         o_b, s_b = merge(o_b, s_b, o2, s2)
-        kv = kv_next
+        if t < P_ - 1:
+            kv, seg_r = kv_next, (seg_next if seg_r is not None else None)
     return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
 
 
-def _bwd_zigzag(spec, q, k, v, o, s, do):
+def _bwd_zigzag(spec, q, k, v, o, s, do, seg=None):
     p = lax.axis_index(spec.axis)
     P_ = spec.axis_size
     f32 = jnp.float32
     Tl = q.shape[1]
     c = Tl // 2
     sl_a, sl_b = slice(0, c), slice(c, None)
+    m = spec.mask
+    m_x = mk.strict_causal_pair(m)
+    doc = seg is not None and m.document
     delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)
 
-    def cb(qs, ks, vs, ss, dos, ds, causal):
+    def cb(qs, ks, vs, ss, dos, ds, mask, qseg=None, kseg=None):
+        skw = dict(q_segments=qseg, kv_segments=kseg) if doc else {}
         return chunk_attn_bwd(qs, ks, vs, jnp.zeros_like(qs), ss, dos,
-                              causal=causal, **_tune(spec), delta=ds)
+                              mask=mask, **skw, **_tune(spec), delta=ds)
 
     # local pairs
     dq = jnp.zeros(q.shape, f32)
     dk_h = jnp.zeros(k.shape, f32)
     dv_h = jnp.zeros(v.shape, f32)
-    for (qs, ks, causal) in ((sl_a, sl_a, True), (sl_b, sl_a, False),
-                             (sl_b, sl_b, True)):
+    for (qs, ks, mask) in ((sl_a, sl_a, m), (sl_b, sl_a, m_x),
+                           (sl_b, sl_b, m)):
         dq_t, dk_t, dv_t = cb(q[:, qs], k[:, ks], v[:, ks], s[:, qs],
-                              do[:, qs], delta[:, qs], causal)
+                              do[:, qs], delta[:, qs], mask,
+                              seg[:, qs] if doc else None,
+                              seg[:, ks] if doc else None)
         dq = dq.at[:, qs].add(dq_t.astype(f32))
         dk_h = dk_h.at[:, ks].add(dk_t.astype(f32))
         dv_h = dv_h.at[:, ks].add(dv_t.astype(f32))
@@ -588,13 +800,19 @@ def _bwd_zigzag(spec, q, k, v, o, s, do):
     s_a, s_b = s[:, sl_a], s[:, sl_b]
     do_a, do_b = do[:, sl_a], do[:, sl_b]
     de_a, de_b = delta[:, sl_a], delta[:, sl_b]
+    sg_a, sg_b = (seg[:, sl_a], seg[:, sl_b]) if doc else (None, None)
     kv = _shift((k, v), spec.axis, 1, P_)
+    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
     dkv = (jnp.zeros(k.shape, f32), jnp.zeros(v.shape, f32))
     for t in range(1, P_):
         if t < P_ - 1:
             kv_nxt = _shift(kv, spec.axis, 1, P_)
+            seg_nxt = _shift(seg_r, spec.axis, 1, P_) \
+                if seg_r is not None else None
         ka_r, kb_r = kv[0][:, :c], kv[0][:, c:]
         va_r, vb_r = kv[1][:, :c], kv[1][:, c:]
+        sa_r, sb_r = (seg_r[:, :c], seg_r[:, c:]) if seg_r is not None \
+            else (None, None)
         w = p >= t
         wf = w.astype(f32)
         # pair 1
@@ -602,7 +820,8 @@ def _bwd_zigzag(spec, q, k, v, o, s, do):
         s1 = jnp.where(w, s_a, s_b)
         do1 = jnp.where(w, do_a, do_b)
         de1 = jnp.where(w, de_a, de_b)
-        dq1, dk1, dv1 = cb(q1, ka_r, va_r, s1, do1, de1, False)
+        sg1 = jnp.where(w, sg_a, sg_b) if doc else None
+        dq1, dk1, dv1 = cb(q1, ka_r, va_r, s1, do1, de1, m_x, sg1, sa_r)
         dq = dq.at[:, sl_a].add(dq1.astype(f32) * wf)
         dq = dq.at[:, sl_b].add(dq1.astype(f32) * (1 - wf))
         dkv = (dkv[0].at[:, sl_a].add(dk1.astype(f32)),
@@ -610,14 +829,15 @@ def _bwd_zigzag(spec, q, k, v, o, s, do):
         # pair 2
         k2 = jnp.where(w, ka_r, kb_r)
         v2 = jnp.where(w, va_r, vb_r)
-        dq2, dk2, dv2 = cb(q_b, k2, v2, s_b, do_b, de_b, False)
+        sg2 = jnp.where(w, sa_r, sb_r) if doc else None
+        dq2, dk2, dv2 = cb(q_b, k2, v2, s_b, do_b, de_b, m_x, sg_b, sg2)
         dq = dq.at[:, sl_b].add(dq2.astype(f32))
         dkv = (dkv[0].at[:, sl_a].add(dk2.astype(f32) * wf),
                dkv[1].at[:, sl_a].add(dv2.astype(f32) * wf))
         dkv = (dkv[0].at[:, sl_b].add(dk2.astype(f32) * (1 - wf)),
                dkv[1].at[:, sl_b].add(dv2.astype(f32) * (1 - wf)))
         if t < P_ - 1:
-            kv = kv_nxt
+            kv, seg_r = kv_nxt, (seg_nxt if seg_r is not None else None)
             dkv = _shift(dkv, spec.axis, 1, P_)
     # containers at p hold chunk of (p − (P−1)) mod P = (p+1) mod P
     dkv = _shift(dkv, spec.axis, -(P_ - 1), P_)
@@ -644,12 +864,14 @@ def _fwd_zigzag_latent(spec, q, k, v, payload, w_up, expand):
     P_ = spec.axis_size
     Tl = q.shape[1]
     c = Tl // 2
+    m = spec.mask
+    m_x = mk.strict_causal_pair(m)
     q_a, q_b = q[:, :c], q[:, c:]
     k_a, k_b = k[:, :c], k[:, c:]
     v_a, v_b = v[:, :c], v[:, c:]
-    o_a, s_a = chunk_attn(q_a, k_a, v_a, causal=True, **_tune(spec))
-    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, causal=False, **_tune(spec))
-    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, causal=True, **_tune(spec))
+    o_a, s_a = chunk_attn(q_a, k_a, v_a, mask=m, **_tune(spec))
+    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, mask=m_x, **_tune(spec))
+    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, mask=m, **_tune(spec))
     o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
     if P_ == 1:
         return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
@@ -661,14 +883,14 @@ def _fwd_zigzag_latent(spec, q, k, v, payload, w_up, expand):
         va_r, vb_r = v_r[:, :c], v_r[:, c:]
         w = p >= t
         q1 = jnp.where(w, q_a, q_b)
-        o1, s1 = chunk_attn(q1, ka_r, va_r, causal=False, **_tune(spec))
+        o1, s1 = chunk_attn(q1, ka_r, va_r, mask=m_x, **_tune(spec))
         o1a, s1a = mask_partial(w, o1, s1)
         o_a, s_a = merge(o_a, s_a, o1a, s1a)
         o1b, s1b = mask_partial(~w, o1, s1)
         o_b, s_b = merge(o_b, s_b, o1b, s1b)
         k2 = jnp.where(w, ka_r, kb_r)
         v2 = jnp.where(w, va_r, vb_r)
-        o2, s2 = chunk_attn(q_b, k2, v2, causal=False, **_tune(spec))
+        o2, s2 = chunk_attn(q_b, k2, v2, mask=m_x, **_tune(spec))
         o_b, s_b = merge(o_b, s_b, o2, s2)
         pl = pl_next
     return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
@@ -679,6 +901,9 @@ def dist_attn_fwd_latent(q, k, v, payload, w_up, expand, *, mesh, spec,
     """Latent-ring forward (zigzag schedule). ``payload``: (B, T, d_lat)
     sharded like activations; ``w_up``: replicated up-projection weights;
     ``expand(payload_chunk, w_up) -> (k, v)`` pure."""
+    if spec.mask.kinds - {"causal"}:
+        raise ValueError("latent ring supports plain causal masks only "
+                         f"(got {spec.mask.kind!r})")
     b = tuple(batch_axes) if batch_axes else None
     qkv_s = P(b, spec.axis, None, None)
     pl_s = P(b, spec.axis, None)

@@ -1,0 +1,327 @@
+"""Declarative attention-mask specification — the ``MaskSpec`` API.
+
+The schedules exploit that each ring step's mask is a *static* function of
+the step (DESIGN.md §2).  Pre-MaskSpec that structure was encoded as three
+loose kwargs (``causal``, ``window``, ``rel_offset``) threaded through every
+layer, which made new mask regimes (packed-document batches, prefix-LM)
+inexpressible.  :class:`MaskSpec` replaces the triple with one declarative
+object that the registry, the kernels, the block-sparse pruner, and the
+distributed schedules all reason about.
+
+Mask kinds (constructors at module level):
+
+  * ``full()``                 — no mask.
+  * ``causal()``               — ``kv_pos <= q_pos``.
+  * ``sliding_window(w)``      — causal ∧ ``q_pos − kv_pos < w``.
+  * ``prefix_lm(n)``           — bidirectional over the first ``n`` absolute
+                                 kv positions, causal after.
+  * ``document(boundaries=…)`` — causal ∧ same-segment (packed sequences).
+
+``MaskSpec`` is **static** (a frozen, hashable dataclass): it can be a jit
+static argument, a ``BackendSpec`` capability subject, and a field of
+``DistAttnSpec``.  The *dynamic* part of document masking — per-token
+segment-ID arrays — travels alongside the tensors as explicit
+``q_segments``/``kv_segments`` operands (they ride the ring next to KV in
+the distributed schedules).  When the packing layout is static,
+``document(boundaries=(0, …))`` carries the document start positions so the
+block-sparse pruner can drop cross-document blocks at trace time with no
+segment arrays at all.
+
+Positions. ``q_offset``/``kv_offset`` are the absolute positions of element
+0 of each chunk (``rel_offset == q_offset − kv_offset`` is the legacy
+name).  The distributed schedules derive a per-step spec with
+:func:`ring_step`; the chunked scan shifts ``kv_offset`` per KV chunk.
+
+Semantics of one (q, kv) position pair — ``attend(qp, kp)``:
+
+    pre  = prefix_len > 0 and kp < prefix_len
+    ok   = (not causal  or kp <= qp      or pre)
+         ∧ (not window  or qp − kp < w   or pre)
+         ∧ (not document or seg(qp) == seg(kp))
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Tuple
+
+KINDS = ("full", "causal", "sliding_window", "prefix_lm", "document")
+
+_DEPRECATION_WARNED = set()
+
+
+def warn_legacy_once(site: str, hint: str) -> None:
+    """One DeprecationWarning per call site per process — shared by every
+    layer that still accepts the pre-MaskSpec kwarg shims."""
+    if site in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(site)
+    warnings.warn(f"{site} is deprecated; pass {hint}",
+                  DeprecationWarning, stacklevel=4)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Static attention-mask description (see module docstring).
+
+    Fields compose (``document`` is causal ∧ same-segment); the
+    constructors below build the canonical kinds.  Hashable → usable as a
+    jit static argument and inside ``DistAttnSpec``.
+    """
+    causal: bool = False
+    window: int = 0                 # sliding-window width (0 = unlimited)
+    prefix_len: int = 0             # bidirectional prefix (absolute kv pos)
+    document: bool = False          # same-segment constraint
+    q_offset: int = 0               # absolute position of q[0]
+    kv_offset: int = 0              # absolute position of kv[0]
+    # static document layout: sorted doc start positions, boundaries[0] == 0.
+    # None => segment arrays must be supplied at call time.
+    boundaries: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.window < 0:
+            raise ValueError(f"window must be >= 0, got {self.window}")
+        if self.prefix_len < 0:
+            raise ValueError(f"prefix_len must be >= 0, got {self.prefix_len}")
+        if self.prefix_len and not (self.causal or self.window):
+            raise ValueError(
+                "prefix_len only relaxes a causal/window mask; "
+                "prefix_len without causal=True (or a window) is a no-op")
+        if self.boundaries is not None:
+            b = tuple(int(x) for x in self.boundaries)
+            if not self.document:
+                raise ValueError("boundaries given without document=True")
+            if not b or b[0] != 0 or list(b) != sorted(set(b)):
+                raise ValueError(
+                    f"boundaries must be sorted, unique, and start at 0; "
+                    f"got {b}")
+            object.__setattr__(self, "boundaries", b)
+
+    # ------------------------------------------------------------ queries
+    @property
+    def rel_offset(self) -> int:
+        """Legacy name: absolute(q0) − absolute(kv0)."""
+        return self.q_offset - self.kv_offset
+
+    @property
+    def kinds(self) -> frozenset:
+        """Capability requirements of this spec (matched by the registry)."""
+        s = set()
+        if self.causal:
+            s.add("causal")
+        if self.window:
+            s.add("sliding_window")
+        if self.prefix_len:
+            s.add("prefix_lm")
+        if self.document:
+            s.add("document")
+        return frozenset(s)
+
+    @property
+    def kind(self) -> str:
+        """Primary label, for logs / bench case names."""
+        if self.document:
+            return "document"
+        if self.prefix_len:
+            return "prefix_lm"
+        if self.window:
+            return "sliding_window"
+        if self.causal:
+            return "causal"
+        return "full"
+
+    @property
+    def needs_mask(self) -> bool:
+        return bool(self.kinds)
+
+    @property
+    def needs_segments(self) -> bool:
+        """Dynamic segment-ID arrays required (document without a static
+        layout)."""
+        return self.document and self.boundaries is None
+
+    @property
+    def prunable(self) -> bool:
+        """The block-sparse pruner can bound valid KV blocks at trace time."""
+        return (self.causal or self.window > 0
+                or (self.document and self.boundaries is not None))
+
+    # -------------------------------------------------------- derivations
+    def replace(self, **kw) -> "MaskSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ----------------------------------------------- position-level masks
+    def doc_start(self, p):
+        """Start position of the document containing absolute position
+        ``p``, from the static ``boundaries``.  ``p`` may be a Python int
+        or a traced scalar."""
+        assert self.boundaries is not None
+        if isinstance(p, int):
+            lo = 0
+            for b in self.boundaries:
+                if b <= p:
+                    lo = b
+            return lo
+        import jax.numpy as jnp
+        lo = jnp.int32(0)
+        for b in self.boundaries[1:]:
+            lo = jnp.where(p >= b, jnp.int32(b), lo)
+        return lo
+
+    def doc_end(self, p):
+        """Last position of the document containing ``p`` (the position
+        after the last boundary extends to +inf, clamped by callers)."""
+        assert self.boundaries is not None
+        big = 2 ** 30
+        if isinstance(p, int):
+            hi = big
+            for b in reversed(self.boundaries):
+                if b > p:
+                    hi = b - 1
+            return hi
+        import jax.numpy as jnp
+        hi = jnp.int32(big)
+        for b in reversed(self.boundaries[1:]):   # smallest b > p wins
+            hi = jnp.where(p < b, jnp.int32(b - 1), hi)
+        return hi
+
+    def segment_of(self, pos):
+        """Segment index of absolute position array ``pos`` (static
+        boundaries only) — the trace-time stand-in for segment-ID arrays."""
+        assert self.boundaries is not None
+        import jax.numpy as jnp
+        seg = jnp.zeros(pos.shape, jnp.int32)
+        for b in self.boundaries[1:]:
+            seg = seg + (pos >= b).astype(jnp.int32)
+        return seg
+
+    def allow(self, q_pos, kv_pos, q_segments=None, kv_segments=None):
+        """Boolean attend-mask from broadcastable position (and segment)
+        arrays, or ``None`` when nothing is masked.  ``q_pos``/``kv_pos``
+        are *absolute* positions (the caller adds ``q_offset``/
+        ``kv_offset``); segments broadcast against them."""
+        import jax.numpy as jnp
+        m = None
+
+        def _and(a, b):
+            return b if a is None else a & b
+
+        pre = None
+        if self.prefix_len:
+            pre = kv_pos < self.prefix_len
+        if self.causal:
+            c = kv_pos <= q_pos
+            m = _and(m, c | pre if pre is not None else c)
+        if self.window and self.window > 0:
+            w = q_pos - kv_pos < self.window
+            m = _and(m, w | pre if pre is not None else w)
+        if self.document:
+            if q_segments is None or kv_segments is None:
+                if self.boundaries is None:
+                    raise ValueError(
+                        "document mask needs q_segments/kv_segments "
+                        "(or static boundaries)")
+                q_segments = self.segment_of(q_pos)
+                kv_segments = self.segment_of(kv_pos)
+            m = _and(m, jnp.asarray(q_segments) == jnp.asarray(kv_segments))
+        return m
+
+
+# --------------------------------------------------------------------------
+# Constructors (the declarative "kinds")
+# --------------------------------------------------------------------------
+
+def full(rel_offset: int = 0) -> MaskSpec:
+    return MaskSpec(q_offset=rel_offset)
+
+
+def causal(rel_offset: int = 0) -> MaskSpec:
+    return MaskSpec(causal=True, q_offset=rel_offset)
+
+
+def sliding_window(window: int, *, causal: bool = True,
+                   rel_offset: int = 0) -> MaskSpec:
+    """Banded mask. ``causal=False`` gives the trailing band alone — the
+    shape of a windowed ring step (the received chunk is strictly past, so
+    the causal half is statically satisfied)."""
+    return MaskSpec(causal=causal, window=window, q_offset=rel_offset)
+
+
+def prefix_lm(prefix_len: int, rel_offset: int = 0) -> MaskSpec:
+    """Bidirectional over absolute kv positions < prefix_len, causal after
+    (T5/PaLM-style prefix language modeling)."""
+    return MaskSpec(causal=True, prefix_len=prefix_len, q_offset=rel_offset)
+
+
+def document(*, boundaries: Optional[Tuple[int, ...]] = None,
+             causal: bool = True, window: int = 0,
+             rel_offset: int = 0) -> MaskSpec:
+    """Packed-sequence mask: causal ∧ same-document.  With static
+    ``boundaries`` (doc start positions) the block-sparse pruner skips
+    cross-document blocks at trace time; without, per-token
+    ``q_segments``/``kv_segments`` arrays must accompany the call."""
+    return MaskSpec(causal=causal, window=window, document=True,
+                    q_offset=rel_offset,
+                    boundaries=None if boundaries is None
+                    else tuple(boundaries))
+
+
+def from_legacy(causal: bool = False, window: int = 0,
+                rel_offset: int = 0) -> MaskSpec:
+    """Map the deprecated (causal, window, rel_offset) kwarg triple."""
+    return MaskSpec(causal=bool(causal), window=int(window or 0),
+                    q_offset=int(rel_offset))
+
+
+def as_spec(mask: Optional[MaskSpec], causal=False, window=0,
+            rel_offset=0) -> MaskSpec:
+    """Shared mask=/legacy-kwarg reconciliation for the kernel entry
+    points (ops / chunked / ref): ``mask`` wins; mixing both is an error."""
+    if mask is None:
+        return from_legacy(causal=causal, window=window,
+                           rel_offset=rel_offset)
+    if causal or window or rel_offset:
+        raise ValueError("pass either mask= or the legacy kwargs, not both")
+    return mask
+
+
+def ring_step(mask: MaskSpec, rel: int) -> MaskSpec:
+    """Per-step spec for a ring schedule receiving a strictly-past KV chunk
+    at distance ``rel`` (> 0): the causal constraint is statically
+    satisfied, so it is dropped; window / document constraints remain."""
+    return mask.replace(causal=False, q_offset=rel, kv_offset=0)
+
+
+def strict_causal_pair(mask: MaskSpec) -> MaskSpec:
+    """Per-step spec for a (q-chunk, kv-chunk) pair the schedule proves
+    strictly causal (balanced/zigzag off-diagonal pairs): only the
+    document constraint survives; positions are irrelevant."""
+    return mask.replace(causal=False, window=0, q_offset=0, kv_offset=0)
+
+
+def doc_boundaries(T: int, n_docs: int) -> Tuple[int, ...]:
+    """Deterministic uneven packing layout: ``n_docs`` documents over a
+    length-``T`` sequence with lengths proportional to 1..n (remainder to
+    the last doc).  Shared by the data pipeline, the kernel bench, and the
+    packed-sequence tests so they all agree on the layout."""
+    if n_docs <= 1 or T < n_docs:
+        return (0,)
+    total = n_docs * (n_docs + 1) // 2
+    lens = [max(1, (i + 1) * T // total) for i in range(n_docs - 1)]
+    used = sum(lens)
+    if used >= T:                      # tiny T: fall back to equal split
+        lens = [T // n_docs] * (n_docs - 1)
+    starts = [0]
+    for ln in lens:
+        starts.append(starts[-1] + ln)
+    return tuple(starts)
+
+
+def segments_from_boundaries(T: int, boundaries: Tuple[int, ...]):
+    """(T,) int32 segment-ID array for a static layout (numpy, host-side —
+    what the data pipeline ships next to the tokens)."""
+    import numpy as np
+    seg = np.zeros((T,), np.int32)
+    for b in boundaries[1:]:
+        seg[b:] += 1
+    return seg

@@ -41,7 +41,13 @@ import jax.numpy as jnp
 
 
 def _tree_add(a, b):
-    return compat.tree_map(jnp.add, a, b)
+    def add(x, y):
+        # integer leaves (e.g. document segment IDs threaded through the
+        # attention stages) carry float0 cotangents — pass them through
+        if getattr(x, "dtype", None) == jax.dtypes.float0:
+            return x
+        return jnp.add(x, y)
+    return compat.tree_map(add, a, b)
 
 
 def remat_aware(pre_attn: Callable, attn_fwd: Callable, attn_bwd: Callable,

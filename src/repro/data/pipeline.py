@@ -72,6 +72,10 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec, par: ParallelConfig,
             batch = {"tokens": sds((B, T), jnp.int32),
                      "labels": sds((B, T), jnp.int32)}
             shard = {"tokens": tok, "labels": tok}
+            if kind == "train" and shape.docs > 1:
+                # packed-sequence training: per-token document IDs
+                batch["segment_ids"] = sds((B, T), jnp.int32)
+                shard["segment_ids"] = tok
         return batch, shard
 
     # ---- decode: one token + cache of T context
@@ -150,7 +154,14 @@ def cache_specs(cfg: ModelConfig, shape: ShapeSpec, par: ParallelConfig):
 class SyntheticTokens:
     """Reproducible pseudo-text stream: a hash-mixed Markov chain over the
     vocabulary. Learnable (loss drops quickly) and fully deterministic in
-    (seed, step)."""
+    (seed, step).
+
+    When ``shape.docs > 1`` the stream is **packed**: each sequence holds
+    ``docs`` independent documents (uneven static layout from
+    ``mask.doc_boundaries``), the batch gains a ``segment_ids`` array, the
+    Markov chain restarts at every boundary, and the label at each
+    document's last token is ``-100`` (no cross-document next-token loss).
+    """
     cfg: ModelConfig
     shape: ShapeSpec
     par: ParallelConfig
@@ -168,6 +179,21 @@ class SyntheticTokens:
             x[:, t + 1] = np.where(rng.random(B) < 0.8,
                                    (x[:, t] * 31 + 7) % v, noise)
         return x.astype(np.int32)
+
+    def _packed(self, step: int, B: int, T: int):
+        """(tokens, labels, segment_ids), all (B, T) int32."""
+        from repro.core.mask import doc_boundaries, segments_from_boundaries
+        bnd = doc_boundaries(T, self.shape.docs)
+        seg = np.tile(segments_from_boundaries(T, bnd), (B, 1))
+        tokens = np.empty((B, T), np.int32)
+        labels = np.full((B, T), -100, np.int32)
+        ends = list(bnd[1:]) + [T]
+        for d, (b0, b1) in enumerate(zip(bnd, ends)):
+            # independent stream per document (chain restarts at boundary)
+            stream = self._tokens(step * 8191 + d, B, b1 - b0 - 1)
+            tokens[:, b0:b1] = stream
+            labels[:, b0:b1 - 1] = stream[:, 1:]     # last token: no target
+        return tokens, labels, seg
 
     def batch(self, step: int):
         cfg, shape, par = self.cfg, self.shape, self.par
@@ -199,6 +225,11 @@ class SyntheticTokens:
                     jnp.asarray(fr, dt),
                     NamedSharding(self.mesh, P(_bs(par), None, None))),
             }
+        if self.shape.kind == "train" and self.shape.docs > 1:
+            tokens, labels, seg = self._packed(step, B, T)
+            return {"tokens": jax.device_put(tokens, tok_sh),
+                    "labels": jax.device_put(labels, tok_sh),
+                    "segment_ids": jax.device_put(seg, tok_sh)}
         x = self._tokens(step, B, T)
         return {"tokens": jax.device_put(x[:, :-1], tok_sh),
                 "labels": jax.device_put(x[:, 1:], tok_sh)}

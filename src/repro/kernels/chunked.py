@@ -8,11 +8,13 @@ score memory is O(Tq · block_kv) per step instead of the reference
 implementation's O(Tq · Tk) — the same blocking the Pallas kernel does in
 VMEM, expressed at the XLA level.
 
-Block-sparse pruning mirrors the Pallas kernels: the scan only visits the
-KV chunks inside ``block_sparse.kv_block_bounds`` (the whole query chunk is
-one q block here), so CPU CI exercises the identical block-range logic the
-TPU grid pruning uses. Statically all-masked requests short-circuit to the
-empty partial.
+Masking is a :class:`repro.core.mask.MaskSpec`; document segment IDs ride
+the scan as per-chunk slices next to K/V. Block-sparse pruning mirrors the
+Pallas kernels: the scan only visits the KV chunks inside
+``block_sparse.kv_block_bounds`` (the whole query chunk is one q block
+here) — including the document-boundary pruning of packed batches — so CPU
+CI exercises the identical block-range logic the TPU grid pruning uses.
+Statically all-masked requests short-circuit to the empty partial.
 
 Backward mirrors FA2: dq accumulates across the chunk scan while per-chunk
 (dk, dv) are emitted as scan outputs and reassembled (zeros for pruned
@@ -24,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.mask import MaskSpec, as_spec
 from repro.kernels.block_sparse import kv_block_bounds
 from repro.kernels.block_sparse import pick_block as _pick_block
 from repro.kernels.ref import (NEG_INF, chunk_attn_bwd_ref, chunk_attn_ref,
@@ -33,52 +36,63 @@ DEFAULT_BLOCK_KV = 128
 
 
 def _blocked(x, nb, bc):
-    """(B, Tk, H, D) -> (nb, B, bc, H, D) scan-leading chunk layout."""
+    """(B, Tk, ...) -> (nb, B, bc, ...) scan-leading chunk layout."""
     B = x.shape[0]
     return x.reshape(B, nb, bc, *x.shape[2:]).swapaxes(0, 1)
 
 
-def _valid_span(Tq, Tk, bc, causal, rel_offset, window, prune):
+def _valid_span(Tq, Tk, bc, mask: MaskSpec, prune):
     """Inclusive (lo, hi) KV-chunk range for the whole query chunk (one
     br=Tq q block) — the same static range logic the Pallas grids use."""
     nb = Tk // bc
-    if not (prune and (causal or (window and window > 0))):
+    if not (prune and mask.prunable):
         return 0, nb - 1
-    return kv_block_bounds(0, br=Tq, bc=bc, nk=nb, causal=causal,
-                           rel_offset=rel_offset, window=window)
+    return kv_block_bounds(0, br=Tq, bc=bc, nk=nb, mask=mask)
 
 
-def chunked_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
-                block_kv=DEFAULT_BLOCK_KV, block_q=None, prune=True):
+def _seg_chunks(seg, sl, nv, bc):
+    if seg is None:
+        return None
+    return _blocked(jnp.asarray(seg)[:, sl], nv, bc)
+
+
+def chunked_fwd(q, k, v, *, mask=None, causal=False, rel_offset=0, window=0,
+                scale=None, block_kv=DEFAULT_BLOCK_KV, block_q=None,
+                prune=True, q_segments=None, kv_segments=None):
     """Partial attention, chunk_attn semantics: returns (o, lse).
     ``block_q`` is accepted for tuning-surface uniformity with the Pallas
     backend (queries are not blocked here)."""
     del block_q
+    mask = as_spec(mask, causal=causal, window=window,
+                   rel_offset=rel_offset)
     B, Tq, Hq, _ = q.shape
     Tk = k.shape[1]
     Dv = v.shape[-1]
     bc = _pick_block(Tk, block_kv)
-    lo, hi = _valid_span(Tq, Tk, bc, causal, rel_offset, window, prune)
+    lo, hi = _valid_span(Tq, Tk, bc, mask, prune)
     if hi < lo:                                  # statically fully masked
         return (jnp.zeros((B, Tq, Hq, Dv), q.dtype),
                 jnp.full((B, Tq, Hq), NEG_INF, jnp.float32))
     nv = hi - lo + 1
     if nv == 1:
         return chunk_attn_ref(q, k[:, lo * bc:(lo + 1) * bc],
-                              v[:, lo * bc:(lo + 1) * bc], causal=causal,
-                              q_offset=rel_offset, kv_offset=lo * bc,
-                              window=window, scale=scale)
-    ks = k[:, lo * bc:(hi + 1) * bc]
-    vs = v[:, lo * bc:(hi + 1) * bc]
-    blocks = (_blocked(ks, nv, bc), _blocked(vs, nv, bc),
-              (lo + jnp.arange(nv, dtype=jnp.int32)) * bc)
+                              v[:, lo * bc:(lo + 1) * bc], mask=mask,
+                              kv_offset=lo * bc, scale=scale,
+                              q_segments=q_segments,
+                              kv_segments=None if kv_segments is None else
+                              jnp.asarray(kv_segments)[:,
+                                                       lo * bc:(lo + 1) * bc])
+    sl = slice(lo * bc, (hi + 1) * bc)
+    blocks = (_blocked(k[:, sl], nv, bc), _blocked(v[:, sl], nv, bc),
+              (lo + jnp.arange(nv, dtype=jnp.int32)) * bc,
+              _seg_chunks(kv_segments, sl, nv, bc))
 
     def body(carry, blk):
         o_acc, l_acc = carry
-        kj, vj, off = blk
-        o_j, l_j = chunk_attn_ref(q, kj, vj, causal=causal,
-                                  q_offset=rel_offset, kv_offset=off,
-                                  window=window, scale=scale)
+        kj, vj, off, sj = blk
+        o_j, l_j = chunk_attn_ref(q, kj, vj, mask=mask, kv_offset=off,
+                                  scale=scale, q_segments=q_segments,
+                                  kv_segments=sj)
         o_n, l_n = merge_ref(o_acc, l_acc, o_j.astype(jnp.float32), l_j)
         return (o_n, l_n), None
 
@@ -88,16 +102,19 @@ def chunked_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
     return o.astype(q.dtype), lse
 
 
-def chunked_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
-                scale=None, delta=None, block_kv=DEFAULT_BLOCK_KV,
-                block_q=None, prune=True):
+def chunked_bwd(q, k, v, o, lse, do, *, mask=None, causal=False,
+                rel_offset=0, window=0, scale=None, delta=None,
+                block_kv=DEFAULT_BLOCK_KV, block_q=None, prune=True,
+                q_segments=None, kv_segments=None):
     """FA2 backward from saved (o, lse), blocked over KV chunks.
     Returns (dq, dk, dv); dk/dv are zeros on statically-masked chunks."""
     del block_q
+    mask = as_spec(mask, causal=causal, window=window,
+                   rel_offset=rel_offset)
     B, Tq, Hq, _ = q.shape
     Tk, Hkv = k.shape[1], k.shape[2]
     bc = _pick_block(Tk, block_kv)
-    lo, hi = _valid_span(Tq, Tk, bc, causal, rel_offset, window, prune)
+    lo, hi = _valid_span(Tq, Tk, bc, mask, prune)
     if hi < lo:                                  # statically fully masked
         return (jnp.zeros_like(q), jnp.zeros_like(k), jnp.zeros_like(v))
     if delta is None:
@@ -107,20 +124,22 @@ def chunked_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
     sl = slice(lo * bc, (hi + 1) * bc)
     if nv == 1:
         dq, dk_s, dv_s = chunk_attn_bwd_ref(
-            q, k[:, sl], v[:, sl], o, lse, do, causal=causal,
-            q_offset=rel_offset, kv_offset=lo * bc, window=window,
-            scale=scale, delta=delta)
+            q, k[:, sl], v[:, sl], o, lse, do, mask=mask, kv_offset=lo * bc,
+            scale=scale, delta=delta, q_segments=q_segments,
+            kv_segments=None if kv_segments is None else
+            jnp.asarray(kv_segments)[:, sl])
         dk = jnp.zeros_like(k).at[:, sl].set(dk_s)
         dv = jnp.zeros_like(v).at[:, sl].set(dv_s)
         return dq, dk, dv
     blocks = (_blocked(k[:, sl], nv, bc), _blocked(v[:, sl], nv, bc),
-              (lo + jnp.arange(nv, dtype=jnp.int32)) * bc)
+              (lo + jnp.arange(nv, dtype=jnp.int32)) * bc,
+              _seg_chunks(kv_segments, sl, nv, bc))
 
     def body(dq_acc, blk):
-        kj, vj, off = blk
+        kj, vj, off, sj = blk
         dq_j, dk_j, dv_j = chunk_attn_bwd_ref(
-            q, kj, vj, o, lse, do, causal=causal, q_offset=rel_offset,
-            kv_offset=off, window=window, scale=scale, delta=delta)
+            q, kj, vj, o, lse, do, mask=mask, kv_offset=off, scale=scale,
+            delta=delta, q_segments=q_segments, kv_segments=sj)
         return dq_acc + dq_j.astype(jnp.float32), (dk_j, dv_j)
 
     dq, (dk_b, dv_b) = lax.scan(body, jnp.zeros(q.shape, jnp.float32),

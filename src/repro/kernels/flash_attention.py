@@ -7,14 +7,22 @@ aligned matmul dims (MXU-native). Validated on CPU with ``interpret=True``
 against ``ref.py`` (tests/test_kernels.py).
 
 Chunk semantics match ``repro.core.attention.chunk_attn``: partial attention
-with a *static* relative offset (see DESIGN.md §2 — in the ring/balanced
-schedules every step's mask depends only on the static chunk distance, so no
-scalar prefetch is required).
+under a static :class:`repro.core.mask.MaskSpec` (see DESIGN.md §2 — in the
+ring/balanced schedules every step's mask depends only on the static chunk
+distance, so no scalar prefetch is required). Document (packed-sequence)
+masking is supported two ways:
+
+  * dynamic ``q_segments``/``kv_segments`` (B, T) int32 arrays enter the
+    kernels as narrow ``(1, block)`` blocks next to their q/kv tiles and
+    are compared elementwise inside the mask;
+  * a static ``mask.boundaries`` layout needs no arrays at all — segment
+    IDs become trace-time iota comparisons AND the grid pruning below drops
+    cross-document blocks entirely.
 
 Block-sparse grid pruning (README §Block-sparse kernel pruning). Because
-``(causal, rel_offset, window)`` are static, the valid KV-block range of
-every Q block — and its transpose for the dkv kernel — is computed at trace
-time by ``block_sparse.kv_block_bounds`` / ``q_block_bounds``:
+the MaskSpec is static, the valid KV-block range of every Q block — and its
+transpose for the dkv kernel — is computed at trace time by
+``block_sparse.kv_block_bounds`` / ``q_block_bounds``:
 
   * the sequential grid dimension is **shrunk** to ``max_i count(i)`` (the
     widest row of the trapezoid), not the dense ``nk``;
@@ -23,7 +31,8 @@ time by ``block_sparse.kv_block_bounds`` / ``q_block_bounds``:
     steps revisit an already-resident block (no extra DMA) and skip compute
     under ``pl.when``;
   * blocks the mask cannot touch (``interior_kv_bounds``) take a mask-free
-    fast path — only diagonal/window-edge tiles pay ``_pos_mask`` + where.
+    fast path — only diagonal/window-edge/document-boundary tiles pay the
+    position mask + where.
 
 The backward follows FA2: ``delta = rowsum(do ⊙ o)`` precomputed, then a
 dq-kernel (grid over q blocks, sequential kv) and a dkv-kernel (grid over kv
@@ -46,6 +55,7 @@ from repro import compat
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.mask import MaskSpec
 from repro.kernels.block_sparse import (interior_kv_bounds, kv_block_bounds,
                                         kv_profile, pick_block,
                                         q_block_bounds, q_profile)
@@ -54,90 +64,106 @@ NEG_INF = -1e30
 LANES = 128  # TPU lane width; stat scratch is lane-replicated
 
 
-def _pos_mask(i, j, br, bc, rel_offset, causal, window):
+def _pos_mask(i, j, br, bc, mask: MaskSpec, q_seg=None, kv_seg=None):
     """(br, bc) boolean attend-mask for q block i, kv block j (static args
-    except the traced program ids i, j)."""
-    qp = rel_offset + i * br + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
-    kp = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
-    m = None
-    if causal:
-        m = kp <= qp
-    if window and window > 0:
-        w = qp - kp < window
-        m = w if m is None else m & w
-    return m
+    except the traced program ids i, j and the segment vectors)."""
+    qp = (mask.q_offset + i * br
+          + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0))
+    kp = (mask.kv_offset + j * bc
+          + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1))
+    qs = None if q_seg is None else q_seg[:, None]
+    ks = None if kv_seg is None else kv_seg[None, :]
+    return mask.allow(qp, kp, qs, ks)
 
 
-def _masked(causal, window) -> bool:
-    return bool(causal) or bool(window and window > 0)
-
-
-def _apply_mask(s, i, j, rel_offset, causal, window, prune):
+def _apply_mask(s, i, j, mask: MaskSpec, prune, q_seg=None, kv_seg=None):
     """Mask score tile ``s`` for block (i, j). With pruning, interior blocks
     (mask provably all-True) skip the iota/compare/where entirely via a
     runtime branch — only edge tiles pay for ``_pos_mask``."""
     br, bc = s.shape
 
-    def _mask(x):
-        return jnp.where(_pos_mask(i, j, br, bc, rel_offset, causal, window),
+    def _m(x):
+        return jnp.where(_pos_mask(i, j, br, bc, mask, q_seg, kv_seg),
                          x, NEG_INF)
 
     if not prune:
-        return _mask(s)
-    lo_f, hi_f = interior_kv_bounds(i, br=br, bc=bc, nk=2 ** 30,
-                                    causal=causal, rel_offset=rel_offset,
-                                    window=window)
-    return jax.lax.cond((j < lo_f) | (j > hi_f), _mask, lambda x: x, s)
+        return _m(s)
+    lo_f, hi_f = interior_kv_bounds(i, br=br, bc=bc, nk=2 ** 30, mask=mask)
+    return jax.lax.cond((j < lo_f) | (j > hi_f), _m, lambda x: x, s)
 
 
-def _row_span(i, br, bc, nk, causal, rel_offset, window, prune):
+def _row_span(i, br, bc, nk, mask, prune):
     """(first block, executed count) of the sequential sweep for row ``i``."""
-    if not (prune and _masked(causal, window)):
+    if not (prune and mask.prunable):
         return 0, nk
-    lo, hi = kv_block_bounds(i, br=br, bc=bc, nk=nk, causal=causal,
-                             rel_offset=rel_offset, window=window)
+    lo, hi = kv_block_bounds(i, br=br, bc=bc, nk=nk, mask=mask)
     return lo, jnp.maximum(hi - lo + 1, 0)
 
 
-def _kv_index(i, jj, br, bc, nk, causal, rel_offset, window, prune):
+def _kv_index(i, jj, br, bc, nk, mask, prune):
     """Index-map remap: pruned step jj of q-row i → real KV block. Steps
     past the row's range revisit the last valid block (no new DMA)."""
-    if not (prune and _masked(causal, window)):
+    if not (prune and mask.prunable):
         return jj
-    lo, hi = kv_block_bounds(i, br=br, bc=bc, nk=nk, causal=causal,
-                             rel_offset=rel_offset, window=window)
+    lo, hi = kv_block_bounds(i, br=br, bc=bc, nk=nk, mask=mask)
     return jnp.clip(lo + jj, 0, jnp.maximum(hi, 0))
 
 
-def _q_row_span(j, br, bc, nq, causal, rel_offset, window, prune):
+def _q_row_span(j, br, bc, nq, mask, prune):
     """Transpose of :func:`_row_span` for the dkv orientation: (first q
     block, executed count) of the sequential sweep for kv row ``j``."""
-    if not (prune and _masked(causal, window)):
+    if not (prune and mask.prunable):
         return 0, nq
-    lo, hi = q_block_bounds(j, br=br, bc=bc, nq=nq, causal=causal,
-                            rel_offset=rel_offset, window=window)
+    lo, hi = q_block_bounds(j, br=br, bc=bc, nq=nq, mask=mask)
     return lo, jnp.maximum(hi - lo + 1, 0)
 
 
-def _q_index(j, ii, br, bc, nq, causal, rel_offset, window, prune):
+def _q_index(j, ii, br, bc, nq, mask, prune):
     """Transpose of :func:`_kv_index`: pruned step ii of kv-row j → real Q
     block, clamped to revisit the row's last valid block."""
-    if not (prune and _masked(causal, window)):
+    if not (prune and mask.prunable):
         return ii
-    lo, hi = q_block_bounds(j, br=br, bc=bc, nq=nq, causal=causal,
-                            rel_offset=rel_offset, window=window)
+    lo, hi = q_block_bounds(j, br=br, bc=bc, nq=nq, mask=mask)
     return jnp.clip(lo + ii, 0, jnp.maximum(hi, 0))
+
+
+def _check_segs(mask: MaskSpec, q_segments, kv_segments) -> bool:
+    """True iff segment operands ride this launch; a half-supplied pair or
+    a dynamic-document spec without one raises up front (not deep in the
+    Pallas setup)."""
+    if (q_segments is None) != (kv_segments is None):
+        raise ValueError("q_segments and kv_segments must be passed "
+                         "together")
+    if mask.needs_segments and q_segments is None:
+        raise ValueError("document mask without boundaries needs "
+                         "q_segments/kv_segments")
+    return q_segments is not None
+
+
+def _seg_specs(br, bc, kv_block, *, dkv=False, q_block=None):
+    """BlockSpecs of the (B, T) segment-ID arrays for each grid
+    orientation: narrow (1, block) tiles riding next to their q/kv tiles."""
+    if not dkv:
+        return [pl.BlockSpec((1, br), lambda b, h, i, j: (b, i)),
+                pl.BlockSpec((1, bc),
+                             lambda b, h, i, j: (b, kv_block(i, j)))]
+    return [pl.BlockSpec((1, br), lambda b, h, j, i: (b, q_block(j, i))),
+            pl.BlockSpec((1, bc), lambda b, h, j, i: (b, j))]
 
 
 # ---------------------------------------------------------------- forward
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
-                acc_ref, m_ref, l_ref,
-                *, scale, causal, rel_offset, window, nk, prune):
+def _fwd_kernel(*refs, scale, mask, nk, prune, has_segs):
+    if has_segs:
+        (q_ref, k_ref, v_ref, qs_ref, ks_ref,
+         o_ref, lse_ref, acc_ref, m_ref, l_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = refs
+        qs_ref = ks_ref = None
     i, jj = pl.program_id(2), pl.program_id(3)
     br, bc = q_ref.shape[2], k_ref.shape[2]
-    lo, count = _row_span(i, br, bc, nk, causal, rel_offset, window, prune)
+    lo, count = _row_span(i, br, bc, nk, mask, prune)
     j = lo + jj
 
     @pl.when(jj == 0)
@@ -153,8 +179,10 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         v = v_ref[0, 0].astype(jnp.float32)
 
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-        if _masked(causal, window):
-            s = _apply_mask(s, i, j, rel_offset, causal, window, prune)
+        if mask.needs_mask:
+            q_seg = None if qs_ref is None else qs_ref[0]
+            kv_seg = None if ks_ref is None else ks_ref[0]
+            s = _apply_mask(s, i, j, mask, prune, q_seg, kv_seg)
 
         m_prev = m_ref[:, 0]                             # (br,)
         m_cur = jnp.max(s, axis=1)
@@ -178,11 +206,13 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
                                   jnp.log(l_safe))
 
 
-def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
-                   block_q=128, block_kv=128, interpret=False, prune=True):
+def flash_fwd_bhtd(q, k, v, *, scale, mask: MaskSpec, block_q=128,
+                   block_kv=128, interpret=False, prune=True,
+                   q_segments=None, kv_segments=None):
     """q,k: (B,Hq/Hkv,T,Dk); v: (B,Hkv,Tk,Dv) -> o (B,Hq,Tq,Dv), lse.
-    Dv may differ from Dk (MLA). ``prune=False`` forces the dense sweep
-    (benchmark baseline / differential testing)."""
+    Dv may differ from Dk (MLA). ``q_segments``/``kv_segments`` are (B, T)
+    int32 document IDs (document kind). ``prune=False`` forces the dense
+    sweep (benchmark baseline / differential testing)."""
     B, Hq, Tq, D = q.shape
     Hkv, Tk = k.shape[1], k.shape[2]
     Dv = v.shape[3]
@@ -190,11 +220,11 @@ def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
     br = pick_block(Tq, block_q)      # non-dividing hints shrink to a divisor
     bc = pick_block(Tk, block_kv)
     nq, nk = Tq // br, Tk // bc
+    has_segs = _check_segs(mask, q_segments, kv_segments)
 
     seq = nk
-    if prune and _masked(causal, window):
-        prof = kv_profile(nq=nq, nk=nk, br=br, bc=bc, causal=causal,
-                          rel_offset=rel_offset, window=window)
+    if prune and mask.prunable:
+        prof = kv_profile(nq=nq, nk=nk, br=br, bc=bc, mask=mask)
         seq = prof.seq_grid
         if seq == 0:                      # statically fully masked chunk
             return (jnp.zeros((B, Hq, Tq, Dv), q.dtype),
@@ -202,21 +232,27 @@ def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
     grid = (B, Hq, nq, seq)
 
     def kv_block(i, j):
-        return _kv_index(i, j, br, bc, nk, causal, rel_offset, window, prune)
+        return _kv_index(i, j, br, bc, nk, mask, prune)
 
     kernel = functools.partial(
-        _fwd_kernel, scale=scale, causal=causal, rel_offset=rel_offset,
-        window=window, nk=nk, prune=prune)
+        _fwd_kernel, scale=scale, mask=mask, nk=nk, prune=prune,
+        has_segs=has_segs)
+    in_specs = [
+        pl.BlockSpec((1, 1, br, D), lambda b, h, i, j: (b, h, i, 0)),
+        pl.BlockSpec((1, 1, bc, D),
+                     lambda b, h, i, j: (b, h // g, kv_block(i, j), 0)),
+        pl.BlockSpec((1, 1, bc, Dv),
+                     lambda b, h, i, j: (b, h // g, kv_block(i, j), 0)),
+    ]
+    operands = [q, k, v]
+    if has_segs:
+        in_specs += _seg_specs(br, bc, kv_block)
+        operands += [jnp.asarray(q_segments, jnp.int32),
+                     jnp.asarray(kv_segments, jnp.int32)]
     o, lse = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, br, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bc, D),
-                         lambda b, h, i, j: (b, h // g, kv_block(i, j), 0)),
-            pl.BlockSpec((1, 1, bc, Dv),
-                         lambda b, h, i, j: (b, h // g, kv_block(i, j), 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, br, Dv), lambda b, h, i, j: (b, h, i, 0)),
             pl.BlockSpec((1, 1, br), lambda b, h, i, j: (b, h, i)),
@@ -234,18 +270,24 @@ def flash_fwd_bhtd(q, k, v, *, scale, causal, rel_offset, window,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)
     return o, lse
 
 
 # ---------------------------------------------------------------- backward
 
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-               acc_ref, *, scale, causal, rel_offset, window, nk, prune):
+def _dq_kernel(*refs, scale, mask, nk, prune, has_segs):
+    if has_segs:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qs_ref, ks_ref,
+         dq_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dq_ref, acc_ref) = refs
+        qs_ref = ks_ref = None
     i, jj = pl.program_id(2), pl.program_id(3)
     br, bc = q_ref.shape[2], k_ref.shape[2]
-    lo, count = _row_span(i, br, bc, nk, causal, rel_offset, window, prune)
+    lo, count = _row_span(i, br, bc, nk, mask, prune)
     j = lo + jj
 
     @pl.when(jj == 0)
@@ -262,8 +304,10 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         delta = delta_ref[0, 0]
 
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-        if _masked(causal, window):
-            s = _apply_mask(s, i, j, rel_offset, causal, window, prune)
+        if mask.needs_mask:
+            q_seg = None if qs_ref is None else qs_ref[0]
+            kv_seg = None if ks_ref is None else ks_ref[0]
+            s = _apply_mask(s, i, j, mask, prune, q_seg, kv_seg)
         p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0,
                       jnp.exp(s - lse[:, None]))
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
@@ -275,13 +319,17 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
 
 
-def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                dk_ref, dv_ref, dk_acc, dv_acc,
-                *, scale, causal, rel_offset, window, nq, prune):
+def _dkv_kernel(*refs, scale, mask, nq, prune, has_segs):
+    if has_segs:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qs_ref, ks_ref,
+         dk_ref, dv_ref, dk_acc, dv_acc) = refs
+    else:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dk_ref, dv_ref, dk_acc, dv_acc) = refs
+        qs_ref = ks_ref = None
     j, ii = pl.program_id(2), pl.program_id(3)       # kv block j, q step ii
     br, bc = q_ref.shape[2], k_ref.shape[2]
-    lo_q, count = _q_row_span(j, br, bc, nq, causal, rel_offset, window,
-                              prune)
+    lo_q, count = _q_row_span(j, br, bc, nq, mask, prune)
     i = lo_q + ii
 
     @pl.when(ii == 0)
@@ -299,8 +347,10 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         delta = delta_ref[0, 0]
 
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-        if _masked(causal, window):
-            s = _apply_mask(s, i, j, rel_offset, causal, window, prune)
+        if mask.needs_mask:
+            q_seg = None if qs_ref is None else qs_ref[0]
+            kv_seg = None if ks_ref is None else ks_ref[0]
+            s = _apply_mask(s, i, j, mask, prune, q_seg, kv_seg)
         p = jnp.where(lse[:, None] <= NEG_INF / 2, 0.0,
                       jnp.exp(s - lse[:, None]))
         dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
@@ -314,9 +364,9 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
+def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, mask: MaskSpec,
                    block_q=128, block_kv=128, interpret=False, delta=None,
-                   prune=True):
+                   prune=True, q_segments=None, kv_segments=None):
     """Backward from saved (o, lse). Layout (B,H,T,D). Returns dq, dk, dv
     (dk/dv summed over the GQA group). ``delta`` (B,H,Tq) may be passed
     precomputed (distributed helper path)."""
@@ -327,6 +377,7 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
     br = pick_block(Tq, block_q)      # non-dividing hints shrink to a divisor
     bc = pick_block(Tk, block_kv)
     nq, nk = Tq // br, Tk // bc
+    has_segs = _check_segs(mask, q_segments, kv_segments)
 
     if delta is None:
         delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
@@ -334,20 +385,23 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
     delta = delta.astype(jnp.float32)
     lse = lse.astype(jnp.float32)
 
-    pruned = prune and _masked(causal, window)
+    pruned = prune and mask.prunable
     seq_kv, seq_q = nk, nq
     if pruned:
-        seq_kv = kv_profile(nq=nq, nk=nk, br=br, bc=bc, causal=causal,
-                            rel_offset=rel_offset, window=window).seq_grid
-        seq_q = q_profile(nq=nq, nk=nk, br=br, bc=bc, causal=causal,
-                          rel_offset=rel_offset, window=window).seq_grid
+        seq_kv = kv_profile(nq=nq, nk=nk, br=br, bc=bc, mask=mask).seq_grid
+        seq_q = q_profile(nq=nq, nk=nk, br=br, bc=bc, mask=mask).seq_grid
     if pruned and (seq_kv == 0 or seq_q == 0):   # statically fully masked
         return (jnp.zeros(q.shape, q.dtype),
                 jnp.zeros((B, Hkv, Tk, D), k.dtype),
                 jnp.zeros((B, Hkv, Tk, Dv), v.dtype))
 
+    seg_ops = []
+    if has_segs:
+        seg_ops = [jnp.asarray(q_segments, jnp.int32),
+                   jnp.asarray(kv_segments, jnp.int32)]
+
     def kv_block(i, j):
-        return _kv_index(i, j, br, bc, nk, causal, rel_offset, window, prune)
+        return _kv_index(i, j, br, bc, nk, mask, prune)
 
     q_spec = pl.BlockSpec((1, 1, br, D), lambda b, h, i, j: (b, h, i, 0))
     kv_spec = pl.BlockSpec(
@@ -357,12 +411,14 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
     do_spec = pl.BlockSpec((1, 1, br, Dv), lambda b, h, i, j: (b, h, i, 0))
     stat_spec = pl.BlockSpec((1, 1, br), lambda b, h, i, j: (b, h, i))
 
+    in_specs = [q_spec, kv_spec, v_spec, do_spec, stat_spec, stat_spec]
+    if has_segs:
+        in_specs += _seg_specs(br, bc, kv_block)
     dq = pl.pallas_call(
-        functools.partial(_dq_kernel, scale=scale, causal=causal,
-                          rel_offset=rel_offset, window=window, nk=nk,
-                          prune=prune),
+        functools.partial(_dq_kernel, scale=scale, mask=mask, nk=nk,
+                          prune=prune, has_segs=has_segs),
         grid=(B, Hq, nq, seq_kv),
-        in_specs=[q_spec, kv_spec, v_spec, do_spec, stat_spec, stat_spec],
+        in_specs=in_specs,
         out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((br, D), jnp.float32)],
@@ -370,12 +426,12 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, *seg_ops)
 
     # dkv: grid over kv blocks, sequential over the valid q blocks. Output
     # per *query* head, then group-summed below (GQA).
     def q_block(j, i):
-        return _q_index(j, i, br, bc, nq, causal, rel_offset, window, prune)
+        return _q_index(j, i, br, bc, nq, mask, prune)
 
     q_spec2 = pl.BlockSpec((1, 1, br, D),
                            lambda b, h, j, i: (b, h, q_block(j, i), 0))
@@ -387,13 +443,15 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
     v_out2 = pl.BlockSpec((1, 1, bc, Dv), lambda b, h, j, i: (b, h, j, 0))
     stat_spec2 = pl.BlockSpec((1, 1, br),
                               lambda b, h, j, i: (b, h, q_block(j, i)))
+    in_specs2 = [q_spec2, kv_spec2, v_spec2, do_spec2, stat_spec2,
+                 stat_spec2]
+    if has_segs:
+        in_specs2 += _seg_specs(br, bc, kv_block, dkv=True, q_block=q_block)
     dk_h, dv_h = pl.pallas_call(
-        functools.partial(_dkv_kernel, scale=scale, causal=causal,
-                          rel_offset=rel_offset, window=window, nq=nq,
-                          prune=prune),
+        functools.partial(_dkv_kernel, scale=scale, mask=mask, nq=nq,
+                          prune=prune, has_segs=has_segs),
         grid=(B, Hq, nk, seq_q),
-        in_specs=[q_spec2, kv_spec2, v_spec2, do_spec2, stat_spec2,
-                  stat_spec2],
+        in_specs=in_specs2,
         out_specs=[k_out2, v_out2],
         out_shape=[jax.ShapeDtypeStruct((B, Hq, Tk, D), k.dtype),
                    jax.ShapeDtypeStruct((B, Hq, Tk, Dv), v.dtype)],
@@ -403,7 +461,7 @@ def flash_bwd_bhtd(q, k, v, o, lse, do, *, scale, causal, rel_offset, window,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, *seg_ops)
     if g > 1:
         dk_h = dk_h.reshape(B, Hkv, g, Tk, D).sum(axis=2)
         dv_h = dv_h.reshape(B, Hkv, g, Tk, Dv).sum(axis=2)

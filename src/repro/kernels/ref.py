@@ -9,42 +9,72 @@ chunk with absolute position offsets, return the attention output **and the
 log-sum-exp** of the (masked) scores so partial results from different KV
 chunks can be merged exactly (FlashAttention-2 online-softmax algebra,
 re-associated).
+
+Masking is declarative: ``mask`` is a :class:`repro.core.mask.MaskSpec`
+(full / causal / sliding_window / prefix_lm / document); per-token segment
+IDs for document masking arrive as ``q_segments``/``kv_segments`` arrays of
+shape (B, Tq)/(B, Tk). The pre-MaskSpec ``causal``/``q_offset``/
+``kv_offset``/``window`` kwargs still work at this oracle level (they build
+the equivalent spec); ``q_offset``/``kv_offset`` passed *alongside* a spec
+shift it — that is how the chunked scan walks its KV window with a traced
+offset.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import mask as mk
+from repro.core.mask import MaskSpec
+
 NEG_INF = -1e30  # large-negative instead of -inf: keeps grads NaN-free
 
 
-def _mask(q_pos, kv_pos, causal: bool, window: int):
-    """Boolean mask (Tq, Tk): True = attend."""
-    m = None
-    if causal:
-        m = kv_pos[None, :] <= q_pos[:, None]
-    if window and window > 0:
-        w = q_pos[:, None] - kv_pos[None, :] < window
-        m = w if m is None else (m & w)
-    return m
+def _allow(spec: MaskSpec, Tq, Tk, q_offset, kv_offset, q_segments,
+           kv_segments):
+    """Attend-mask (Tq, Tk) or (B, Tq, Tk), or None when nothing is masked.
+    ``q_offset``/``kv_offset`` (possibly traced) shift the spec's chunk
+    positions."""
+    if not spec.needs_mask:
+        return None
+    q_pos = spec.q_offset + q_offset + jnp.arange(Tq)
+    kv_pos = spec.kv_offset + kv_offset + jnp.arange(Tk)
+    qs = ks = None
+    if spec.document and q_segments is not None and kv_segments is not None:
+        qs = jnp.asarray(q_segments)[:, :, None]       # (B, Tq, 1)
+        ks = jnp.asarray(kv_segments)[:, None, :]      # (B, 1, Tk)
+    return spec.allow(q_pos[:, None], kv_pos[None, :], qs, ks)
 
 
-def chunk_attn_ref(q, k, v, *, causal: bool = False, q_offset: int = 0,
-                   kv_offset: int = 0, window: int = 0, scale: float | None = None):
+def _apply(s, m):
+    """Apply attend-mask ``m`` to scores ``s`` (B, H, Tq, Tk)."""
+    if m is None:
+        return s
+    m = m[None, None] if m.ndim == 2 else m[:, None]
+    return jnp.where(m, s, NEG_INF)
+
+
+def chunk_attn_ref(q, k, v, *, mask: MaskSpec | None = None,
+                   causal: bool = False, q_offset=0, kv_offset=0,
+                   window: int = 0, scale: float | None = None,
+                   q_segments=None, kv_segments=None):
     """Partial attention over one (q-chunk, kv-chunk) pair.
 
     Args:
       q: (B, Tq, Hq, D); k, v: (B, Tk, Hkv, Dk/Dv). Hq % Hkv == 0 (GQA).
-      causal: apply causal mask using absolute positions.
-      q_offset/kv_offset: absolute position of element 0 of each chunk.
-      window: sliding-window size (0 = unlimited). Paper Appendix F.
+      mask: declarative MaskSpec (preferred). Legacy ``causal``/``window``
+        kwargs build the equivalent spec when ``mask`` is None.
+      q_offset/kv_offset: extra absolute-position shift of each chunk
+        (added to the spec's own offsets; may be traced).
       scale: score scale; default 1/sqrt(Dk).
+      q_segments/kv_segments: (B, Tq)/(B, Tk) int32 document IDs.
 
     Returns:
       o:   (B, Tq, Hq, Dv) — softmax(scores) @ v over *this chunk only*
       lse: (B, Tq, Hq)     — log-sum-exp of masked scores (NEG_INF if all
                              masked; o is 0 there).
     """
+    spec = mk.as_spec(mask, causal=causal, window=window)
     B, Tq, Hq, D = q.shape
     Tk, Hkv = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -57,11 +87,8 @@ def chunk_attn_ref(q, k, v, *, causal: bool = False, q_offset: int = 0,
         kf = jnp.repeat(kf, g, axis=2)
         vf = jnp.repeat(vf, g, axis=2)
     s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
-    q_pos = q_offset + jnp.arange(Tq)
-    kv_pos = kv_offset + jnp.arange(Tk)
-    m = _mask(q_pos, kv_pos, causal, window)
-    if m is not None:
-        s = jnp.where(m[None, None], s, NEG_INF)
+    s = _apply(s, _allow(spec, Tq, Tk, q_offset, kv_offset, q_segments,
+                         kv_segments))
     mx = jnp.max(s, axis=-1)                         # (B,H,Tq)
     mx_safe = jnp.maximum(mx, NEG_INF / 2)
     p = jnp.exp(s - mx_safe[..., None])
@@ -89,15 +116,22 @@ def merge_ref(o1, lse1, o2, lse2):
     return o.astype(o1.dtype), lse
 
 
-def full_attn_ref(q, k, v, *, causal: bool = True, window: int = 0,
-                  scale: float | None = None):
-    """Monolithic softmax attention — the end-to-end oracle."""
-    o, _ = chunk_attn_ref(q, k, v, causal=causal, window=window, scale=scale)
+def full_attn_ref(q, k, v, *, mask: MaskSpec | None = None,
+                  causal: bool = True, window: int = 0,
+                  scale: float | None = None, segments=None):
+    """Monolithic softmax attention — the end-to-end oracle. ``segments``
+    (B, T) applies to both sides (self-attention)."""
+    if mask is None:
+        mask = MaskSpec(causal=bool(causal), window=int(window or 0))
+    o, _ = chunk_attn_ref(q, k, v, mask=mask, scale=scale,
+                          q_segments=segments, kv_segments=segments)
     return o
 
 
-def chunk_attn_bwd_ref(q, k, v, o, lse, do, *, causal=False, q_offset=0,
-                       kv_offset=0, window=0, scale=None, delta=None):
+def chunk_attn_bwd_ref(q, k, v, o, lse, do, *, mask: MaskSpec | None = None,
+                       causal=False, q_offset=0, kv_offset=0, window=0,
+                       scale=None, delta=None, q_segments=None,
+                       kv_segments=None):
     """Reference backward for one chunk given saved (o, lse): FA2 bwd math.
 
     ``delta = rowsum(o ⊙ do)`` (B,T,H) may be precomputed and passed (the
@@ -105,6 +139,7 @@ def chunk_attn_bwd_ref(q, k, v, o, lse, do, *, causal=False, q_offset=0,
     a factor-D of communication). Returns (dq, dk, dv). Note dk/dv are for
     *this* kv chunk; the distributed layer routes them back to the owner.
     """
+    spec = mk.as_spec(mask, causal=causal, window=window)
     B, Tq, Hq, D = q.shape
     Tk, Hkv = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -115,11 +150,8 @@ def chunk_attn_bwd_ref(q, k, v, o, lse, do, *, causal=False, q_offset=0,
     kr = jnp.repeat(kf, g, axis=2) if g > 1 else kf
     vr = jnp.repeat(vf, g, axis=2) if g > 1 else vf
     s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr) * scale
-    q_pos = q_offset + jnp.arange(Tq)
-    kv_pos = kv_offset + jnp.arange(Tk)
-    m = _mask(q_pos, kv_pos, causal, window)
-    if m is not None:
-        s = jnp.where(m[None, None], s, NEG_INF)
+    s = _apply(s, _allow(spec, Tq, Tk, q_offset, kv_offset, q_segments,
+                         kv_segments))
     # p = exp(s - lse): rows with lse == NEG_INF contribute 0
     lse_b = lse.transpose(0, 2, 1)[..., None]        # (B,H,Tq,1)
     p = jnp.where(lse_b <= NEG_INF / 2, 0.0, jnp.exp(s - lse_b))

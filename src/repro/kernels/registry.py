@@ -18,10 +18,14 @@ Registered backends (see README §Backend registry):
                            isolation. NOT exact (never resolves via
                            fallback; must be requested explicitly).
 
-``resolve(impl, platform)`` walks each backend's fallback chain when the
-requested backend can't run (wrong platform, unsupported mask/dtype) and
-logs the downgrade — requesting ``pallas`` on CPU runs ``pallas-interpret``
-(or ``chunked-lax``) instead of crashing.
+Capabilities are **mask-kind sets**: each backend declares which
+:class:`repro.core.mask.MaskSpec` kinds it can serve (``causal``,
+``sliding_window``, ``prefix_lm``, ``document``), and
+``resolve(impl, platform, mask=spec)`` matches the spec's required kinds
+against them, walking each backend's fallback chain when the requested
+backend can't run (wrong platform, unsupported mask kind, wrong dtype) and
+logging the downgrade — requesting ``pallas`` on CPU runs
+``pallas-interpret`` (or ``chunked-lax``) instead of crashing.
 
 Backend names are normalized (``pallas_interpret`` == ``pallas-interpret``)
 so the pre-registry spelling keeps working.
@@ -30,32 +34,36 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, FrozenSet, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.mask import KINDS, MaskSpec
 
 log = logging.getLogger(__name__)
 
 ALL_PLATFORMS = ("cpu", "gpu", "tpu")
 ALL_DTYPES = ("float32", "bfloat16", "float16")
+ALL_MASK_KINDS = frozenset(k for k in KINDS if k != "full")
 
 
 @dataclasses.dataclass(frozen=True)
 class BackendSpec:
     """One attention implementation plus its capability envelope.
 
-    ``fwd(q, k, v, *, causal, rel_offset, window, scale) -> (o, lse)``
-    ``bwd(q, k, v, o, lse, do, *, causal, rel_offset, window, scale, delta)
-        -> (dq, dk, dv)``
+    ``fwd(q, k, v, *, mask, scale, q_segments, kv_segments) -> (o, lse)``
+    ``bwd(q, k, v, o, lse, do, *, mask, scale, delta, q_segments,
+        kv_segments) -> (dq, dk, dv)``
+
+    (``mask`` is a static MaskSpec; tunable backends additionally take
+    ``block_q``/``block_kv`` hints.)
     """
     name: str
     fwd: Callable
     bwd: Callable
     # capability flags
-    causal: bool = True            # supports causal masking
-    window: bool = True            # supports sliding-window masking
-    rel_offset: bool = True        # supports static q/kv position offset
+    mask_kinds: FrozenSet[str] = ALL_MASK_KINDS  # MaskSpec kinds served
     dtypes: Tuple[str, ...] = ALL_DTYPES
     platforms: Tuple[str, ...] = ALL_PLATFORMS
     exact: bool = True             # numerically exact (vs stub)
@@ -66,18 +74,37 @@ class BackendSpec:
     fallback: Tuple[str, ...] = ()  # tried in order when this can't run
     description: str = ""
 
-    def unsupported_reason(self, *, platform: str, causal: bool = False,
-                           window: int = 0, rel_offset: int = 0,
+    def __post_init__(self):
+        unknown = frozenset(self.mask_kinds) - ALL_MASK_KINDS
+        if unknown:
+            raise ValueError(f"unknown mask kinds {sorted(unknown)}; "
+                             f"valid: {sorted(ALL_MASK_KINDS)}")
+        object.__setattr__(self, "mask_kinds", frozenset(self.mask_kinds))
+
+    # legacy capability views (pre-MaskSpec flag names)
+    @property
+    def causal(self) -> bool:
+        return "causal" in self.mask_kinds
+
+    @property
+    def window(self) -> bool:
+        return "sliding_window" in self.mask_kinds
+
+    @property
+    def rel_offset(self) -> bool:
+        return True    # every backend handles static chunk offsets
+
+    def unsupported_reason(self, *, platform: str,
+                           mask: Optional[MaskSpec] = None,
                            dtype=None) -> Optional[str]:
         """None if this backend can serve the request, else why not."""
         if platform not in self.platforms:
             return f"platform {platform!r} not in {self.platforms}"
-        if causal and not self.causal:
-            return "causal masking unsupported"
-        if window and not self.window:
-            return "sliding-window masking unsupported"
-        if rel_offset and not self.rel_offset:
-            return "rel_offset unsupported"
+        if mask is not None:
+            missing = mask.kinds - self.mask_kinds
+            if missing:
+                return (f"mask kind(s) {sorted(missing)} unsupported "
+                        f"(has {sorted(self.mask_kinds)})")
         if dtype is not None and jnp.dtype(dtype).name not in self.dtypes:
             return f"dtype {jnp.dtype(dtype).name} not in {self.dtypes}"
         return None
@@ -125,17 +152,16 @@ def current_platform() -> str:
 
 
 def resolve(impl: Optional[str] = None, platform: Optional[str] = None, *,
-            causal: bool = False, window: int = 0, rel_offset: int = 0,
-            dtype=None) -> BackendSpec:
+            mask: Optional[MaskSpec] = None, dtype=None) -> BackendSpec:
     """Return a runnable backend for the request, walking fallbacks.
 
-    ``impl=None`` uses the process default. A downgrade (requested backend
-    can't serve the request) is logged once per (requested, resolved,
-    platform) triple; an empty/cyclic fallback chain raises."""
+    ``impl=None`` uses the process default; ``mask`` is the MaskSpec the
+    call site will pass. A downgrade (requested backend can't serve the
+    request) is logged once per (requested, resolved, platform) triple; an
+    empty/cyclic fallback chain raises."""
     platform = platform or current_platform()
     want = get(impl if impl is not None else default_name())
-    caps = dict(platform=platform, causal=causal, window=window,
-                rel_offset=rel_offset, dtype=dtype)
+    caps = dict(platform=platform, mask=mask, dtype=dtype)
     reason = want.unsupported_reason(**caps)
     if reason is None:
         return want
@@ -160,26 +186,26 @@ def resolve(impl: Optional[str] = None, platform: Optional[str] = None, *,
         queue.extend(cand.fallback)
     raise ValueError(
         f"no runnable attention backend for impl={want.name!r} on "
-        f"{platform!r} (causal={causal}, window={window}): {reason}; "
-        f"tried {tried}")
+        f"{platform!r} (mask={mask!r}): {reason}; tried {tried}")
 
 
 # ==========================================================================
 # Built-in backends
 # ==========================================================================
 
-def _ref_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None):
+def _ref_fwd(q, k, v, *, mask, scale=None, q_segments=None,
+             kv_segments=None):
     from repro.kernels.ref import chunk_attn_ref
-    return chunk_attn_ref(q, k, v, causal=causal, q_offset=rel_offset,
-                          kv_offset=0, window=window, scale=scale)
+    return chunk_attn_ref(q, k, v, mask=mask, scale=scale,
+                          q_segments=q_segments, kv_segments=kv_segments)
 
 
-def _ref_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
-             scale=None, delta=None):
+def _ref_bwd(q, k, v, o, lse, do, *, mask, scale=None, delta=None,
+             q_segments=None, kv_segments=None):
     from repro.kernels.ref import chunk_attn_bwd_ref
-    return chunk_attn_bwd_ref(q, k, v, o, lse, do, causal=causal,
-                              q_offset=rel_offset, kv_offset=0,
-                              window=window, scale=scale, delta=delta)
+    return chunk_attn_bwd_ref(q, k, v, o, lse, do, mask=mask, scale=scale,
+                              delta=delta, q_segments=q_segments,
+                              kv_segments=kv_segments)
 
 
 def _chunked_fwd(q, k, v, **kw):
@@ -204,27 +230,29 @@ def block_tuning_kw(block_q, block_kv):
 
 
 def _pallas_fwd(interpret):
-    def fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None,
+    def fwd(q, k, v, *, mask, scale=None, q_segments=None, kv_segments=None,
             block_q=None, block_kv=None):
         from repro.kernels import ops
-        return ops.flash_fwd(q, k, v, causal=causal, rel_offset=rel_offset,
-                             window=window, scale=scale, interpret=interpret,
+        return ops.flash_fwd(q, k, v, mask=mask, scale=scale,
+                             interpret=interpret, q_segments=q_segments,
+                             kv_segments=kv_segments,
                              **block_tuning_kw(block_q, block_kv))
     return fwd
 
 
 def _pallas_bwd(interpret):
-    def bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
-            scale=None, delta=None, block_q=None, block_kv=None):
+    def bwd(q, k, v, o, lse, do, *, mask, scale=None, delta=None,
+            q_segments=None, kv_segments=None, block_q=None, block_kv=None):
         from repro.kernels import ops
-        return ops.flash_bwd(q, k, v, o, lse, do, causal=causal,
-                             rel_offset=rel_offset, window=window,
-                             scale=scale, interpret=interpret, delta=delta,
+        return ops.flash_bwd(q, k, v, o, lse, do, mask=mask, scale=scale,
+                             interpret=interpret, delta=delta,
+                             q_segments=q_segments, kv_segments=kv_segments,
                              **block_tuning_kw(block_q, block_kv))
     return bwd
 
 
-def _null_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None):
+def _null_fwd(q, k, v, *, mask=None, scale=None, q_segments=None,
+              kv_segments=None):
     # dry-run cost-isolation stub: shape-correct, data-dependent (so XLA
     # cannot fold it away), but O(T) instead of O(T²). The kernel's ideal
     # FLOPs/bytes are added analytically (analysis/roofline.attention_sites).
@@ -236,8 +264,8 @@ def _null_fwd(q, k, v, *, causal=False, rel_offset=0, window=0, scale=None):
     return o, lse
 
 
-def _null_bwd(q, k, v, o, lse, do, *, causal=False, rel_offset=0, window=0,
-              scale=None, delta=None):
+def _null_bwd(q, k, v, o, lse, do, *, mask=None, scale=None, delta=None,
+              q_segments=None, kv_segments=None):
     s_do = jnp.mean(do.astype(jnp.float32))
     dq = (q.astype(jnp.float32) * 0.0 + s_do).astype(q.dtype)
     dk = (k.astype(jnp.float32) * 0.0 + s_do).astype(k.dtype)

@@ -21,15 +21,18 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import mask as mk
 from repro.core.config import ModelConfig, ParallelConfig
 from repro.core.dist_attention import (DistAttnSpec, dist_attn_bwd,
                                        dist_attn_fwd, dist_decode_attn,
                                        dist_flash_attn)
+from repro.core.mask import MaskSpec
 from repro.core.remat import remat_aware
 from repro.core.attention import chunk_attn
 from repro.models import layers as L
@@ -75,53 +78,63 @@ def _zigzag_ok(cfg: ModelConfig) -> bool:
 
 
 def _attn_spec(cfg: ModelConfig, rt: Runtime, *, causal=True, window=None,
-               scale=None) -> DistAttnSpec:
+               scale=None, document=False) -> DistAttnSpec:
     w = cfg.attn.window if window is None else window
     sched = rt.par.schedule
     if sched == "zigzag" and not _zigzag_ok(cfg):
         sched = "balanced"                      # graceful fallback
+    mask = MaskSpec(causal=causal, window=int(w or 0), document=document)
     return DistAttnSpec(
         axis=rt.par.seq_axis, axis_size=rt.seq_size,
         schedule=sched if (causal and not w) else "ring",
-        causal=causal, window=w, scale=scale, impl=rt.impl)
+        mask=mask, scale=scale, impl=rt.impl)
 
 
 # ==========================================================================
 # Layer builders (stage functions feed the remat-aware combinator)
 # ==========================================================================
 
-def _dense_stages(cfg, rt, is_mla):
-    """Stage functions take x = (h, cos, sin): custom_vjp functions must
-    not close over traced values, so the rope tables travel in the input
-    pytree."""
-    spec = _attn_spec(cfg, rt,
-                      scale=L.mla_scale(cfg) if is_mla else None)
+def _dense_stages(cfg, rt, is_mla, document=False):
+    """Stage functions take x = (h, cos, sin, seg): custom_vjp functions
+    must not close over traced values, so the rope tables — and the packed-
+    sequence segment IDs (``seg``; None when the batch is unpacked) —
+    travel in the input pytree."""
+    spec = _attn_spec(cfg, rt, scale=L.mla_scale(cfg) if is_mla else None,
+                      document=document)
     batch_axes = rt.par.batch_axes
 
     def pre(p, x):
-        h, cos, sin = x
+        h, cos, sin, seg = x
         if is_mla:
-            return L.mla_qkv(p["attn"], h, cfg, cos, sin)
-        return L.attn_qkv(p["attn"], h, cfg, cos, sin)
+            return L.mla_qkv(p["attn"], h, cfg, cos, sin) + (seg,)
+        return L.attn_qkv(p["attn"], h, cfg, cos, sin) + (seg,)
 
     def attn_fwd(qkv):
-        return dist_attn_fwd(*qkv, mesh=rt.mesh, spec=spec,
-                             batch_axes=batch_axes)
+        q, k, v, seg = qkv
+        return dist_attn_fwd(q, k, v, mesh=rt.mesh, spec=spec,
+                             batch_axes=batch_axes, segments=seg)
 
     def attn_bwd(qkv, o, lse, do):
-        return dist_attn_bwd(*qkv, o, lse, do, mesh=rt.mesh, spec=spec,
-                             batch_axes=batch_axes)
+        q, k, v, seg = qkv
+        dq, dk, dv = dist_attn_bwd(q, k, v, o, lse, do, mesh=rt.mesh,
+                                   spec=spec, batch_axes=batch_axes,
+                                   segments=seg)
+        dseg = None if seg is None else np.zeros(seg.shape,
+                                                 jax.dtypes.float0)
+        return dq, dk, dv, dseg
 
     def attn_diff(qkv):
-        return dist_flash_attn(*qkv, rt.mesh, spec, batch_axes)
+        q, k, v, seg = qkv
+        return dist_flash_attn(q, k, v, rt.mesh, spec, batch_axes, seg)
 
     return pre, attn_fwd, attn_bwd, attn_diff
 
 
 def build_dense_layer(cfg, rt, *, is_mla=False, use_moe=False,
-                      d_ff=None):
-    """layer(params, (h, cos, sin)) -> (h', aux)."""
-    pre, attn_fwd, attn_bwd, attn_diff = _dense_stages(cfg, rt, is_mla)
+                      d_ff=None, document=False):
+    """layer(params, (h, cos, sin, seg)) -> (h', aux)."""
+    pre, attn_fwd, attn_bwd, attn_diff = _dense_stages(cfg, rt, is_mla,
+                                                       document)
 
     def post(p, x, o):
         h = x[0]
@@ -165,10 +178,10 @@ def _stack(key, n, make):
                         *[make(k) for k in jax.random.split(key, max(n, 1))])
 
 
-def _scan_layers(layer_fn, h, stacked, rt, cos=None, sin=None):
+def _scan_layers(layer_fn, h, stacked, rt, cos=None, sin=None, seg=None):
     def body(carry, lp):
         h, aux = carry
-        h2, aux2 = layer_fn(lp, (h, cos, sin))
+        h2, aux2 = layer_fn(lp, (h, cos, sin, seg))
         return (h2, aux + aux2), None
     (h, aux), _ = xscan(body, (h, jnp.float32(0)), stacked)
     return h, aux
@@ -262,20 +275,23 @@ class DecoderLM:
         return h @ w.astype(h.dtype)
 
     # ------------------------------------------------------------ train
-    def _backbone(self, p, h, cos, sin):
-        """Shared trunk: returns (h, aux)."""
+    def _backbone(self, p, h, cos, sin, seg=None):
+        """Shared trunk: returns (h, aux). ``seg`` = packed-sequence
+        document IDs (B, T) or None."""
         cfg, rt = self.cfg, self.rt
         at = cfg.arch_type
+        doc = seg is not None
         if at in ("dense", "vlm"):
-            layer = build_dense_layer(cfg, rt)
-            return _scan_layers(layer, h, p["layers"], rt, cos, sin)
+            layer = build_dense_layer(cfg, rt, document=doc)
+            return _scan_layers(layer, h, p["layers"], rt, cos, sin, seg)
         if at == "moe":
             is_mla = cfg.attn.is_mla
             dl = build_dense_layer(cfg, rt, is_mla=is_mla,
-                                   d_ff=cfg.moe.d_dense_ff)
-            ml = build_dense_layer(cfg, rt, is_mla=is_mla, use_moe=True)
-            h, a1 = _scan_layers(dl, h, p["dense_layers"], rt, cos, sin)
-            h, a2 = _scan_layers(ml, h, p["moe_layers"], rt, cos, sin)
+                                   d_ff=cfg.moe.d_dense_ff, document=doc)
+            ml = build_dense_layer(cfg, rt, is_mla=is_mla, use_moe=True,
+                                   document=doc)
+            h, a1 = _scan_layers(dl, h, p["dense_layers"], rt, cos, sin, seg)
+            h, a2 = _scan_layers(ml, h, p["moe_layers"], rt, cos, sin, seg)
             return h, a1 + a2
         if at == "ssm":
             layer = self._ssm_layer()
@@ -306,7 +322,7 @@ class DecoderLM:
         scfg = self._shared_cfg()
         layer = build_dense_layer(scfg, rt)
         x2 = jnp.concatenate([h, emb0], axis=-1)
-        y2, _ = layer(p, (x2, cos, sin))
+        y2, _ = layer(p, (x2, cos, sin, None))
         return h + (y2 @ p["down"]).astype(h.dtype)
 
     def _hybrid_backbone(self, p, h, cos, sin):
@@ -339,6 +355,15 @@ class DecoderLM:
                    else cfg.attn.head_dim)
             cos, sin = L.rope_tables(pos, dim, cfg.attn.rope_theta)
         labels = batch["labels"]
+        seg = batch.get("segment_ids")      # packed-sequence document IDs
+        if seg is not None:
+            if cfg.arch_type not in ("dense", "moe"):
+                raise ValueError(
+                    f"packed (segment_ids) training is supported for "
+                    f"dense/moe decoders, not {cfg.arch_type!r}")
+            if cfg.mtp_depth:
+                raise ValueError("packed training does not compose with "
+                                 "MTP (the t+2 roll crosses documents)")
         if cfg.arch_type == "vlm":      # image positions carry no loss
             pad = jnp.full(batch["image_embeds"].shape[:2], -100,
                            labels.dtype)
@@ -346,15 +371,18 @@ class DecoderLM:
         if rt.par.schedule == "zigzag" and _zigzag_ok(cfg) \
                 and rt.seq_size > 1:
             # zigzag relayout (beyond-paper, see core/dist_attention.py):
-            # one global gather after the embedding; rope tables and labels
-            # follow. Loss is positionwise so no inverse permutation needed.
+            # one global gather after the embedding; rope tables, labels
+            # and segment IDs follow. Loss is positionwise so no inverse
+            # permutation needed.
             from repro.core.dist_attention import zigzag_perm
             perm = zigzag_perm(T, rt.seq_size)
             h = h[:, perm]
             labels = labels[:, perm]
             cos, sin = cos[perm], sin[perm]
+            if seg is not None:
+                seg = seg[:, perm]
             h = constrain(h, rt.mesh, act_spec(rt.par))
-        h, aux = self._backbone(p, h, cos, sin)
+        h, aux = self._backbone(p, h, cos, sin, seg)
         logits = self._head(p, h)
         ce = L.cross_entropy(logits, labels)
         total = ce + aux
@@ -380,7 +408,7 @@ class DecoderLM:
         h2 = constrain(h2, rt.mesh, act_spec(rt.par))
         layer = build_dense_layer(cfg, rt, is_mla=cfg.attn.is_mla,
                                   use_moe=True)
-        h2, _aux = layer(mp["layer"], (h2, cos, sin))
+        h2, _aux = layer(mp["layer"], (h2, cos, sin, None))
         h2 = L.rms_norm(h2, mp["ln_f"], cfg.norm_eps)
         logits = h2 @ p["embed"].T.astype(h2.dtype)
         labels = jnp.roll(batch["labels"], -1, axis=1)
@@ -433,12 +461,11 @@ class DecoderLM:
         last = T - 1
         if rt.par.schedule == "zigzag" and _zigzag_ok(cfg) \
                 and rt.seq_size > 1:
-            import numpy as _np
             from repro.core.dist_attention import zigzag_perm
             perm = zigzag_perm(T, rt.seq_size)
             h = h[:, perm]
             cos, sin = cos[perm], sin[perm]
-            last = int(_np.nonzero(perm == T - 1)[0][0])
+            last = int(np.nonzero(perm == T - 1)[0][0])
             h = constrain(h, rt.mesh, act_spec(rt.par))
         at = cfg.arch_type
         caches = {}
@@ -747,7 +774,7 @@ class EncDecLM:
 
         def layer(lp, h):
             q, k, v = L.attn_qkv(lp["attn"], h, cfg, cos, sin)
-            o, _ = chunk_attn(q, k, v, causal=False, impl=rt.impl)
+            o, _ = chunk_attn(q, k, v, mask=mk.full(), impl=rt.impl)
             h2 = L.attn_out(lp["attn"], h, o, cfg)
             return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps)
 
@@ -792,11 +819,11 @@ class EncDecLM:
             return q, k, v
 
         def cross_fwd(qkv):
-            return chunk_attn(*qkv, causal=False, impl=rt.impl)
+            return chunk_attn(*qkv, mask=mk.full(), impl=rt.impl)
 
         def cross_bwd(qkv, o, lse, do):
             from repro.core.attention import chunk_attn_bwd
-            return chunk_attn_bwd(*qkv, o, lse, do, causal=False,
+            return chunk_attn_bwd(*qkv, o, lse, do, mask=mk.full(),
                                   impl=rt.impl)
 
         def post_cross(lp, x, o):
@@ -817,7 +844,7 @@ class EncDecLM:
                                    rt.par.batch_axes)
             x = post_self(lp, x, o)
             qkv = pre_cross(lp, x)
-            o2, _ = chunk_attn(*qkv, causal=False, impl=rt.impl)
+            o2, _ = chunk_attn(*qkv, mask=mk.full(), impl=rt.impl)
             return post_cross(lp, x, o2)
         return jax.checkpoint(plain) if rt.par.remat == "hf" else plain
 
@@ -864,7 +891,7 @@ class EncDecLM:
             qc = (hn @ c["wq"]).reshape(B, T, a.n_heads, a.head_dim)
             ek = (enc @ c["wk"]).reshape(B, F, a.n_heads, a.head_dim)
             ev = (enc @ c["wv"]).reshape(B, F, a.n_heads, a.head_dim)
-            o2, _ = chunk_attn(qc, ek, ev, causal=False, impl=rt.impl)
+            o2, _ = chunk_attn(qc, ek, ev, mask=mk.full(), impl=rt.impl)
             h3 = h2 + (o2.reshape(B, T, -1) @ c["wo"]).astype(h2.dtype)
             h4 = L.mlp_apply(lp["mlp"], h3, cfg.norm_eps)
             return h4, (k, v, ek, ev)
@@ -894,7 +921,7 @@ class EncDecLM:
             c = lp["cross"]
             hn = L.rms_norm(h2, c["ln"], cfg.norm_eps)
             qc = (hn @ c["wq"]).reshape(B, 1, a.n_heads, a.head_dim)
-            o2, _ = chunk_attn(qc, ek, ev, causal=False, impl=rt.impl)
+            o2, _ = chunk_attn(qc, ek, ev, mask=mk.full(), impl=rt.impl)
             h3 = h2 + (o2.reshape(B, 1, -1) @ c["wo"]).astype(h2.dtype)
             h4 = L.mlp_apply(lp["mlp"], h3, cfg.norm_eps)
             return h4, (ck, cv)

@@ -4,6 +4,11 @@
     (params, opt_state, batch) -> (params, opt_state, metrics)
 with FSDP parameter/optimizer shardings over (pod, data) and DISTFLASHATTN
 sequence parallelism over ``model`` inside the model forward.
+
+Packed-sequence batches flow through unchanged: when the pipeline emits a
+``segment_ids`` entry (``ShapeSpec.docs > 1``) it is sharded like the
+tokens and the model masks cross-document attention (MaskSpec kind
+``document``); the step factories are batch-schema agnostic.
 """
 from __future__ import annotations
 

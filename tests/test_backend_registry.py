@@ -7,19 +7,25 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import mask as mk
 from repro.core.attention import (chunk_attn, chunk_attn_bwd, empty_partial,
                                   merge)
+from repro.core.mask import MaskSpec
 from repro.kernels import registry
 from repro.kernels.ref import chunk_attn_bwd_ref, chunk_attn_ref
 
 EXACT_BACKENDS = [n for n in registry.names() if registry.get(n).exact]
 
-# mask regimes from the ISSUE: causal / non-causal / rel_offset / window
+# one MaskSpec per declarative kind (plus offsets): every registered exact
+# backend must serve the full kind set
 MASK_CASES = {
-    "causal":      dict(causal=True, rel_offset=0, window=0),
-    "non-causal":  dict(causal=False, rel_offset=0, window=0),
-    "rel-offset":  dict(causal=True, rel_offset=96, window=0),
-    "window":      dict(causal=True, rel_offset=96, window=40),
+    "causal":      mk.causal(),
+    "non-causal":  mk.full(),
+    "rel-offset":  mk.causal(rel_offset=96),
+    "window":      mk.sliding_window(40, rel_offset=96),
+    "prefix-lm":   mk.prefix_lm(24),
+    "document":    mk.document(boundaries=(0, 40, 100, 180)),
+    "doc-window":  mk.document(boundaries=(0, 40, 100, 180), window=64),
 }
 
 
@@ -37,20 +43,18 @@ def _mk(seed=0, B=1, Tq=64, Tk=256, Hq=4, Hkv=2, D=32, dtype=jnp.float32):
 @pytest.mark.parametrize("mask", MASK_CASES, ids=list(MASK_CASES))
 @pytest.mark.parametrize("backend", EXACT_BACKENDS)
 def test_backend_matches_ref(backend, mask):
-    """Every registered exact backend × every mask regime agrees with the
+    """Every registered exact backend × every MaskSpec kind agrees with the
     oracle within fp32 tolerance, forward and backward. ``pallas`` resolves
     through its CPU fallback chain here — that path must stay exact too."""
-    kw = MASK_CASES[mask]
+    kw = dict(mask=MASK_CASES[mask])
     q, k, v, do = _mk()
-    o_r, l_r = chunk_attn_ref(q, k, v, causal=kw["causal"],
-                              q_offset=kw["rel_offset"], window=kw["window"])
+    o_r, l_r = chunk_attn_ref(q, k, v, **kw)
     o_b, l_b = chunk_attn(q, k, v, impl=backend, **kw)
     np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r), atol=1e-5)
     m = (l_r > -1e29) | (l_b > -1e29)
     np.testing.assert_allclose(np.asarray(jnp.where(m, l_b, 0)),
                                np.asarray(jnp.where(m, l_r, 0)), atol=1e-4)
-    g_r = chunk_attn_bwd_ref(q, k, v, o_r, l_r, do, causal=kw["causal"],
-                             q_offset=kw["rel_offset"], window=kw["window"])
+    g_r = chunk_attn_bwd_ref(q, k, v, o_r, l_r, do, **kw)
     g_b = chunk_attn_bwd(q, k, v, o_b, l_b, do, impl=backend, **kw)
     for a, b in zip(g_b, g_r):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
@@ -62,8 +66,9 @@ def test_backend_gqa_and_asymmetric_dv(backend):
     """GQA grouping and MLA-style Dk != Dv shapes survive every backend."""
     q, k, _, _ = _mk(seed=3, Hq=4, Hkv=2, D=48)
     v = jax.random.normal(jax.random.PRNGKey(9), (1, 256, 2, 24))
-    o_r, l_r = chunk_attn_ref(q, k, v, causal=True, scale=0.2)
-    o_b, l_b = chunk_attn(q, k, v, causal=True, scale=0.2, impl=backend)
+    o_r, l_r = chunk_attn_ref(q, k, v, mask=mk.causal(), scale=0.2)
+    o_b, l_b = chunk_attn(q, k, v, mask=mk.causal(), scale=0.2,
+                          impl=backend)
     np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r), atol=1e-5)
 
 
@@ -79,8 +84,8 @@ def test_chunked_lax_block_picking_and_odd_lengths():
     q, _, _, do = _mk(seed=5)
     k = jax.random.normal(jax.random.PRNGKey(6), (1, 257, 2, 32))
     v = jax.random.normal(jax.random.PRNGKey(7), (1, 257, 2, 32))
-    o_r, l_r = chunk_attn_ref(q, k, v, causal=True, q_offset=200)
-    o_b, l_b = chunk_attn(q, k, v, causal=True, rel_offset=200,
+    o_r, l_r = chunk_attn_ref(q, k, v, mask=mk.causal(200))
+    o_b, l_b = chunk_attn(q, k, v, mask=mk.causal(200),
                           impl="chunked-lax")
     np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r), atol=1e-5)
 
@@ -180,6 +185,44 @@ def test_null_backend_is_marked_inexact_and_never_a_fallback():
 
 def test_capability_flags_reported():
     spec = registry.get("chunked-lax")
-    assert spec.causal and spec.window and spec.rel_offset
+    assert spec.mask_kinds == frozenset(
+        {"causal", "sliding_window", "prefix_lm", "document"})
+    assert spec.causal and spec.window and spec.rel_offset  # legacy views
     assert "cpu" in spec.platforms and "tpu" in spec.platforms
     assert registry.get("pallas").platforms == ("tpu",)
+
+
+def test_resolve_matches_on_mask_kinds():
+    """resolve() falls back when a backend lacks a required mask kind."""
+    limited = registry.BackendSpec(
+        name="no-docs-test", fwd=lambda *a, **k: None,
+        bwd=lambda *a, **k: None,
+        mask_kinds=frozenset({"causal", "sliding_window"}),
+        fallback=("ref",))
+    registry.register(limited, overwrite=True)
+    try:
+        got = registry.resolve("no-docs-test", platform="cpu",
+                               mask=mk.document())
+        assert got.name == "ref"
+        assert registry.resolve("no-docs-test", platform="cpu",
+                                mask=mk.causal()).name == "no-docs-test"
+        reason = limited.unsupported_reason(platform="cpu",
+                                            mask=mk.prefix_lm(8))
+        assert "prefix_lm" in reason
+    finally:
+        registry._REGISTRY.pop("no-docs-test", None)
+
+
+def test_legacy_shim_warns_and_matches():
+    """The deprecated kwarg triple still works through chunk_attn (one
+    DeprecationWarning per process) and produces the same MaskSpec path."""
+    q, k, v, _ = _mk(seed=8)
+    mk._DEPRECATION_WARNED.clear()
+    with pytest.warns(DeprecationWarning):
+        o_l, _ = chunk_attn(q, k, v, causal=True, rel_offset=96, window=40,
+                            impl="ref")
+    o_m, _ = chunk_attn(q, k, v, mask=mk.sliding_window(40, rel_offset=96),
+                        impl="ref")
+    np.testing.assert_allclose(np.asarray(o_l), np.asarray(o_m))
+    with pytest.raises(ValueError, match="not both"):
+        chunk_attn(q, k, v, mask=mk.causal(), causal=True)

@@ -7,6 +7,7 @@ import pytest
 def test_schedules_match_oracle(subproc):
     out = subproc("""
 import jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd, dist_flash_attn
 from repro.kernels.ref import full_attn_ref
 mesh = jax.make_mesh((2,4), ("data","model"))
@@ -15,7 +16,7 @@ ks = jax.random.split(jax.random.PRNGKey(0),3)
 q = jax.random.normal(ks[0],(B,N,H,D)); k = jax.random.normal(ks[1],(B,N,Hkv,D)); v = jax.random.normal(ks[2],(B,N,Hkv,D))
 o_ref = full_attn_ref(q,k,v,causal=True)
 for sched in ["balanced","ring","rsa"]:
-    spec = DistAttnSpec(axis="model", axis_size=4, schedule=sched, causal=True)
+    spec = DistAttnSpec(axis="model", axis_size=4, schedule=sched, mask=mk.causal())
     o,_ = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=("data",)))(q,k,v)
     err = float(jnp.abs(o-o_ref).max())
     assert err < 2e-5, (sched, err)
@@ -23,7 +24,7 @@ for sched in ["balanced","ring","rsa"]:
 # grads via custom_vjp (balanced) vs autodiff oracle
 def loss_ref(q,k,v): return jnp.sum(full_attn_ref(q,k,v,causal=True).astype(jnp.float32)**2)
 g_ref = jax.grad(loss_ref,(0,1,2))(q,k,v)
-spec = DistAttnSpec(axis="model", axis_size=4, schedule="balanced", causal=True)
+spec = DistAttnSpec(axis="model", axis_size=4, schedule="balanced", mask=mk.causal())
 def loss_d(q,k,v):
     o,_ = dist_flash_attn(q,k,v,mesh,spec,("data",))
     return jnp.sum(o.astype(jnp.float32)**2)
@@ -38,6 +39,7 @@ print("OK grads")
 def test_window_and_bidirectional(subproc):
     out = subproc("""
 import jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
 from repro.kernels.ref import full_attn_ref
 mesh = jax.make_mesh((1,8), ("data","model"))
@@ -46,12 +48,12 @@ ks = jax.random.split(jax.random.PRNGKey(1),3)
 q,k,v = (jax.random.normal(kk,(B,N,H,D)) for kk in ks)
 for window in [10, 40, 200]:
     o_ref = full_attn_ref(q,k,v,causal=True,window=window)
-    spec = DistAttnSpec(axis="model", axis_size=8, schedule="ring", causal=True, window=window)
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule="ring", mask=mk.sliding_window(window))
     o,_ = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=("data",)))(q,k,v)
     assert float(jnp.abs(o-o_ref).max()) < 2e-5, window
     print("OK window", window)
 o_ref = full_attn_ref(q,k,v,causal=False)
-spec = DistAttnSpec(axis="model", axis_size=8, schedule="ring", causal=False)
+spec = DistAttnSpec(axis="model", axis_size=8, schedule="ring", mask=mk.full())
 o,_ = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=("data",)))(q,k,v)
 assert float(jnp.abs(o-o_ref).max()) < 2e-5
 print("OK bidir")
@@ -63,6 +65,7 @@ def test_odd_p_schedule(subproc):
     """Odd worker counts (paper: zero idle when P odd) stay exact."""
     out = subproc("""
 import jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
 from repro.kernels.ref import full_attn_ref
 mesh = jax.make_mesh((1,7), ("data","model"))
@@ -70,7 +73,7 @@ B,N,H,D = 2,7*16,2,16
 ks = jax.random.split(jax.random.PRNGKey(2),3)
 q,k,v = (jax.random.normal(kk,(B,N,H,D)) for kk in ks)
 o_ref = full_attn_ref(q,k,v,causal=True)
-spec = DistAttnSpec(axis="model", axis_size=7, schedule="balanced", causal=True)
+spec = DistAttnSpec(axis="model", axis_size=7, schedule="balanced", mask=mk.causal())
 o,_ = jax.jit(lambda q,k,v: dist_attn_fwd(q,k,v,mesh=mesh,spec=spec,batch_axes=("data",)))(q,k,v)
 assert float(jnp.abs(o-o_ref).max()) < 2e-5
 print("OK P=7 balanced")
@@ -84,6 +87,7 @@ def test_block_tuning_hints_through_schedules(subproc):
     backward, with and without a sliding window."""
     out = subproc("""
 import jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import DistAttnSpec, dist_flash_attn
 from repro.kernels.ref import full_attn_ref
 mesh = jax.make_mesh((1,4), ("data","model"))
@@ -91,8 +95,9 @@ B,N,H,D = 1,256,2,16
 ks = jax.random.split(jax.random.PRNGKey(5),3)
 q,k,v = (jax.random.normal(kk,(B,N,H,D)) for kk in ks)
 for sched, window in [("balanced",0), ("ring",40)]:
-    spec = DistAttnSpec(axis="model", axis_size=4, schedule=sched, causal=True,
-                        window=window, impl="chunked-lax", block_q=32, block_kv=32)
+    spec = DistAttnSpec(axis="model", axis_size=4, schedule=sched,
+                        mask=mk.MaskSpec(causal=True, window=window),
+                        impl="chunked-lax", block_q=32, block_kv=32)
     o_ref = full_attn_ref(q,k,v,causal=True,window=window)
     def loss(q,k,v):
         o,_ = dist_flash_attn(q,k,v,mesh,spec,("data",))
@@ -165,6 +170,7 @@ def test_zigzag_and_ulysses(subproc):
     """Beyond-paper zigzag placement and the Ulysses baseline are exact."""
     out = subproc("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.core import mask as mk
 from repro.core.dist_attention import (DistAttnSpec, dist_attn_fwd,
                                        dist_flash_attn, zigzag_perm)
 from repro.kernels.ref import full_attn_ref
@@ -174,7 +180,7 @@ ks = jax.random.split(jax.random.PRNGKey(0),3)
 q = jax.random.normal(ks[0],(B,N,H,D)); k = jax.random.normal(ks[1],(B,N,Hkv,D)); v = jax.random.normal(ks[2],(B,N,Hkv,D))
 perm = zigzag_perm(N, 8)
 o_ref = full_attn_ref(q,k,v,causal=True)
-spec = DistAttnSpec(axis="model", axis_size=8, schedule="zigzag", causal=True)
+spec = DistAttnSpec(axis="model", axis_size=8, schedule="zigzag", mask=mk.causal())
 o,_ = jax.jit(lambda a,b,c: dist_attn_fwd(a,b,c,mesh=mesh,spec=spec,batch_axes=None))(q[:,perm],k[:,perm],v[:,perm])
 assert float(jnp.abs(o - o_ref[:,perm]).max()) < 2e-5
 print("OK zigzag fwd")
@@ -189,7 +195,7 @@ for a,b in zip(gz,gr):
 print("OK zigzag bwd")
 # ulysses (divisible heads)
 q8 = jax.random.normal(ks[0],(B,N,8,D)); k8 = jax.random.normal(ks[1],(B,N,8,D)); v8 = jax.random.normal(ks[2],(B,N,8,D))
-specu = DistAttnSpec(axis="model", axis_size=8, schedule="ulysses", causal=True)
+specu = DistAttnSpec(axis="model", axis_size=8, schedule="ulysses", mask=mk.causal())
 ou,_ = jax.jit(lambda a,b,c: dist_attn_fwd(a,b,c,mesh=mesh,spec=specu,batch_axes=None))(q8,k8,v8)
 assert float(jnp.abs(ou - full_attn_ref(q8,k8,v8,causal=True)).max()) < 2e-5
 print("OK ulysses")
@@ -212,6 +218,7 @@ def test_cross_schedule_golden(subproc, P):
     distributed schedules."""
     out = subproc(f"""
 import jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
 from repro.kernels.ref import full_attn_ref
 P = {P}
@@ -227,7 +234,7 @@ outs = {{}}
 for sched, impl in [("balanced", None), ("ring", None),
                     ("balanced", "chunked-lax")]:
     spec = DistAttnSpec(axis="model", axis_size=P, schedule=sched,
-                        causal=True, impl=impl)
+                        mask=mk.causal(), impl=impl)
     o, _ = jax.jit(lambda a, b, c: dist_attn_fwd(
         a, b, c, mesh=mesh, spec=spec, batch_axes=None))(q, k, v)
     err = float(jnp.abs(o - o_single).max())
@@ -269,3 +276,173 @@ assert d < 5e-5, d
 print("OK latent ring", d)
 """)
     assert "OK" in out
+
+
+# ------------------------------------------------------- MaskSpec era tests
+
+def test_spec_validation_and_legacy_shim():
+    """Satellite: schedule typos raise at spec construction (no silent ring
+    fallthrough), schedule-capability mismatches raise, and the deprecated
+    causal/window kwargs still map onto a MaskSpec (with a warning)."""
+    import warnings
+
+    import pytest as pt
+
+    from repro.core import mask as mk
+    from repro.core import dist_attention as da
+
+    with pt.raises(ValueError, match="unknown schedule"):
+        da.DistAttnSpec(schedule="blanced")
+    with pt.raises(ValueError, match="unknown schedule"):
+        da.DistAttnSpec(schedule="rsa ")
+    with pt.raises(ValueError, match="causal full-window"):
+        da.DistAttnSpec(axis_size=8, schedule="balanced",
+                        mask=mk.sliding_window(64))
+    with pt.raises(ValueError, match="causal full-window"):
+        da.DistAttnSpec(axis_size=8, schedule="zigzag", mask=mk.full())
+    with pt.raises(ValueError, match="prefix_lm"):
+        da.DistAttnSpec(axis_size=8, schedule="ring", mask=mk.prefix_lm(64))
+    with pt.raises(ValueError, match="boundaries"):
+        da.DistAttnSpec(axis_size=8, schedule="ring",
+                        mask=mk.document(boundaries=(0, 64)))
+    with pt.raises(ValueError, match="not both"):
+        da.DistAttnSpec(schedule="ring", mask=mk.causal(), causal=True)
+    # baselines are fwd-only for absolute-coordinate masks: their backward
+    # (the ring) must raise instead of silently mis-masking
+    spec_b = da.DistAttnSpec(axis_size=8, schedule="ulysses",
+                             mask=mk.document(boundaries=(0, 64)))
+    with pt.raises(ValueError, match="boundaries"):
+        da._bwd_local(spec_b, *([None] * 6))
+    spec_p = da.DistAttnSpec(axis_size=8, schedule="ulysses",
+                             mask=mk.prefix_lm(8))
+    with pt.raises(ValueError, match="prefix_lm"):
+        da._bwd_local(spec_p, *([None] * 6))
+    # rsa must demand segments for a dynamic-segment document mask, like
+    # every other schedule does (via the backends)
+    spec_r = da.DistAttnSpec(axis_size=8, schedule="rsa", mask=mk.document())
+    with pt.raises(ValueError, match="segments"):
+        da._fwd_local(spec_r, None, None, None, None)
+    mk._DEPRECATION_WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spec = da.DistAttnSpec(axis_size=8, schedule="ring", causal=True,
+                               window=40)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert spec.mask == mk.sliding_window(40)
+    # default stays causal/full — and balanced accepts it
+    assert da.DistAttnSpec(axis_size=8).mask == mk.causal()
+
+
+def test_document_mask_all_schedules(subproc):
+    """ACCEPTANCE: packed-sequence (document) masking is differentially
+    exact vs the oracle across ring / balanced / zigzag (and the ulysses /
+    rsa baselines), forward and backward, with segment IDs traveling the
+    ring alongside KV. Boundaries intentionally do not align with shards."""
+    out = subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import mask as mk
+from repro.core.dist_attention import (DistAttnSpec, dist_attn_fwd,
+                                       dist_flash_attn, zigzag_perm)
+from repro.kernels.ref import full_attn_ref
+mesh = jax.make_mesh((1,8), ("data","model"))
+B,N,H,Hkv,D = 2,512,4,2,32
+ks = jax.random.split(jax.random.PRNGKey(0),3)
+q = jax.random.normal(ks[0],(B,N,H,D)); k = jax.random.normal(ks[1],(B,N,Hkv,D)); v = jax.random.normal(ks[2],(B,N,Hkv,D))
+bnd = mk.doc_boundaries(N, 5)
+seg = jnp.asarray(np.tile(mk.segments_from_boundaries(N, bnd), (B,1)))
+o_ref = full_attn_ref(q,k,v, mask=mk.document(), segments=seg)
+perm = zigzag_perm(N, 8); inv = np.argsort(perm)
+for sched in ["ring","balanced","zigzag","rsa"]:
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=mk.document())
+    if sched == "zigzag":
+        o,_ = jax.jit(lambda a,b,c,s: dist_attn_fwd(a,b,c,mesh=mesh,spec=spec,batch_axes=None,segments=s))(q[:,perm],k[:,perm],v[:,perm],seg[:,perm])
+        err = float(jnp.abs(o - o_ref[:,perm]).max())
+    else:
+        o,_ = jax.jit(lambda a,b,c,s: dist_attn_fwd(a,b,c,mesh=mesh,spec=spec,batch_axes=None,segments=s))(q,k,v,seg)
+        err = float(jnp.abs(o - o_ref).max())
+    assert err < 2e-5, (sched, err)
+    print("OK doc fwd", sched, err)
+# ulysses (divisible heads)
+q8 = jax.random.normal(ks[0],(B,N,8,D))
+specu = DistAttnSpec(axis="model", axis_size=8, schedule="ulysses", mask=mk.document())
+ou,_ = jax.jit(lambda a,s: dist_attn_fwd(a,a,a,mesh=mesh,spec=specu,batch_axes=None,segments=s))(q8,seg)
+erru = float(jnp.abs(ou - full_attn_ref(q8,q8,q8, mask=mk.document(), segments=seg)).max())
+assert erru < 2e-5, erru
+print("OK doc fwd ulysses", erru)
+# grads via the seg-aware custom_vjp
+g_ref = jax.grad(lambda a,b,c: jnp.sum(full_attn_ref(a,b,c, mask=mk.document(), segments=seg).astype(jnp.float32)**2),(0,1,2))(q,k,v)
+for sched in ["ring","balanced","zigzag"]:
+    spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=mk.document())
+    if sched == "zigzag":
+        def loss(a,b,c):
+            o,_ = dist_flash_attn(a,b,c,mesh,spec,None,seg[:,perm])
+            return jnp.sum(o.astype(jnp.float32)**2)
+        g = jax.jit(jax.grad(loss,(0,1,2)))(q[:,perm],k[:,perm],v[:,perm])
+        err = max(float(jnp.abs(a[:,inv]-b).max()) for a,b in zip(g,g_ref))
+    else:
+        def loss(a,b,c):
+            o,_ = dist_flash_attn(a,b,c,mesh,spec,None,seg)
+            return jnp.sum(o.astype(jnp.float32)**2)
+        g = jax.jit(jax.grad(loss,(0,1,2)))(q,k,v)
+        err = max(float(jnp.abs(a-b).max()) for a,b in zip(g,g_ref))
+    assert err < 5e-5, (sched, err)
+    print("OK doc bwd", sched, err)
+""")
+    assert out.count("OK") == 8
+
+
+def test_windowed_decode_vs_bruteforce(subproc):
+    """Satellite: windowed dist_decode_attn against a brute-force oracle —
+    window sizes from sub-shard to beyond-context, on 1D and 2D sequence
+    sharding."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from repro.core import mask as mk
+from repro.core.dist_attention import dist_decode_attn
+from repro.kernels.ref import chunk_attn_ref
+mesh = jax.make_mesh((2,4), ("data","model"))
+B,N,H,Hkv,D = 2,256,4,2,32
+ks = jax.random.split(jax.random.PRNGKey(3),6)
+k = jax.random.normal(ks[1],(B,N,Hkv,D)); v = jax.random.normal(ks[2],(B,N,Hkv,D))
+qd = jax.random.normal(ks[3],(B,1,H,D))
+k1 = jax.random.normal(ks[4],(B,1,Hkv,D)); v1 = jax.random.normal(ks[5],(B,1,Hkv,D))
+kf = jnp.concatenate([k,k1],1); vf = jnp.concatenate([v,v1],1)
+for axes, bspec in [(("model",),("data",)), (("data","model"),None)]:
+    for window in [1, 7, 64, 100, 257, 10_000]:
+        # brute force: the new token sits at absolute position N; the
+        # window keeps keys with position > N - window
+        o_ref,_ = chunk_attn_ref(qd, kf, vf, mask=mk.MaskSpec(window=window, q_offset=N))
+        o = jax.jit(lambda *a: dist_decode_attn(*a, mesh=mesh, seq_axes=axes,
+                    batch_axes=bspec, window=window))(qd,k,v,k1,v1)
+        err = float(jnp.abs(o-o_ref).max())
+        assert err < 2e-5, (axes, window, err)
+    print("OK windowed decode", axes)
+""")
+    assert out.count("OK") == 2
+
+
+def test_ulysses_head_divisibility_error_paths(subproc):
+    """Satellite: the ulysses ValueError fires for indivisible Hq, for
+    indivisible Hkv (GQA), and inside jit tracing — and never fires when
+    both divide P."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from repro.core import mask as mk
+from repro.core.dist_attention import DistAttnSpec, dist_attn_fwd
+mesh = jax.make_mesh((1,4), ("data","model"))
+B,N,D = 1,128,16
+spec = DistAttnSpec(axis="model", axis_size=4, schedule="ulysses", mask=mk.causal())
+def run(Hq, Hkv):
+    q = jax.random.normal(jax.random.PRNGKey(0),(B,N,Hq,D))
+    kv = jax.random.normal(jax.random.PRNGKey(1),(B,N,Hkv,D))
+    return dist_attn_fwd(q,kv,kv,mesh=mesh,spec=spec,batch_axes=None)
+for Hq, Hkv, ok in [(8,4,True), (6,4,False), (8,2,False), (3,3,False)]:
+    try:
+        jax.jit(lambda: run(Hq,Hkv))()
+        assert ok, (Hq,Hkv)
+        print("OK ulysses runs", Hq, Hkv)
+    except ValueError as e:
+        assert not ok and "heads % P" in str(e), (Hq,Hkv,e)
+        print("OK ulysses raises", Hq, Hkv)
+""", devices=4)
+    assert out.count("OK") == 4

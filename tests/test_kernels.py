@@ -197,11 +197,89 @@ def test_pruned_flash_compiles_on_tpu(case):
 def test_pruned_grid_is_smaller_where_mask_allows():
     """The windowed regimes actually shrink the sequential grid dimension
     (not just skip compute): seq_grid < nk."""
+    from repro.core.mask import MaskSpec
     from repro.kernels.block_sparse import kv_profile
-    p = kv_profile(nq=8, nk=8, br=128, bc=128, causal=False,
-                   rel_offset=1024, window=512)
+    p = kv_profile(nq=8, nk=8, br=128, bc=128,
+                   mask=MaskSpec(window=512, q_offset=1024))
     assert 0 < p.seq_grid < 8
     assert p.executed_steps < p.launched_steps < p.full_steps
+
+
+# --------------------------------------------- MaskSpec kinds in the kernels
+
+@pytest.mark.parametrize("kind", ["document-boundaries", "document-segments",
+                                  "document-window", "prefix-lm"])
+def test_mask_kinds_flash_vs_ref(kind):
+    """The new MaskSpec kinds (document / prefix_lm) are exact vs the
+    oracle in the Pallas kernels (interpret), pruned AND dense, fwd + bwd,
+    with GQA."""
+    import numpy as np
+    from repro.core import mask as mk
+    B, Tq, Tk, Hq, Hkv, D = 2, 192, 192, 4, 2, 32
+    q, k, v, do = _mk(B, Tq, Tk, Hq, Hkv, D, jnp.float32, seed=11)
+    bnd = mk.doc_boundaries(Tk, 4)
+    seg = jnp.asarray(np.tile(mk.segments_from_boundaries(Tk, bnd), (B, 1)))
+    segs = {}
+    if kind == "document-boundaries":
+        mask = mk.document(boundaries=bnd)
+    elif kind == "document-segments":
+        mask = mk.document()
+        segs = dict(q_segments=seg, kv_segments=seg)
+    elif kind == "document-window":
+        mask = mk.document(boundaries=bnd, window=48)
+    else:
+        mask = mk.prefix_lm(70)
+    o_r, lse_r = chunk_attn_ref(q, k, v, mask=mask, **segs)
+    kw = dict(mask=mask, block_q=64, block_kv=64, interpret=True, **segs)
+    o_p, lse_p = ops.flash_fwd(q, k, v, **kw)
+    o_d, lse_d = ops.flash_fwd(q, k, v, prune=False, **kw)
+    assert jnp.allclose(o_r, o_p, atol=1e-5, rtol=1e-5), kind
+    m = (lse_r > -1e29) | (lse_p > -1e29)
+    assert jnp.allclose(jnp.where(m, lse_r, 0), jnp.where(m, lse_p, 0),
+                        atol=1e-4, rtol=1e-4)
+    assert jnp.allclose(o_p, o_d, atol=1e-6), "prune changed the result"
+    ref = chunk_attn_bwd_ref(q, k, v, o_r, lse_r, do, mask=mask, **segs)
+    pal = ops.flash_bwd(q, k, v, o_r, lse_r, do, **kw)
+    den = ops.flash_bwd(q, k, v, o_r, lse_r, do, prune=False, **kw)
+    for r, p_, d_ in zip(ref, pal, den):
+        assert jnp.allclose(r, p_, atol=2e-4, rtol=2e-4), kind
+        assert jnp.allclose(p_, d_, atol=1e-6), kind
+
+
+@pytest.mark.parametrize("kind", ["document-boundaries", "document-segments",
+                                  "document-window", "prefix-lm"])
+def test_mask_kinds_chunked_vs_ref(kind):
+    """Same MaskSpec-kind sweep through the chunked-lax scan."""
+    import numpy as np
+    from repro.core import mask as mk
+    from repro.kernels.chunked import chunked_bwd, chunked_fwd
+    B, Tq, Tk, Hq, Hkv, D = 2, 128, 256, 4, 2, 32
+    q, k, v, do = _mk(B, Tq, Tk, Hq, Hkv, D, jnp.float32, seed=12)
+    bnd = mk.doc_boundaries(Tk, 4)
+    seg_k = jnp.asarray(np.tile(mk.segments_from_boundaries(Tk, bnd),
+                                (B, 1)))
+    seg_q = seg_k[:, :Tq]
+    segs = {}
+    if kind == "document-boundaries":
+        mask = mk.document(boundaries=bnd)
+    elif kind == "document-segments":
+        mask = mk.document()
+        segs = dict(q_segments=seg_q, kv_segments=seg_k)
+    elif kind == "document-window":
+        mask = mk.document(boundaries=bnd, window=48)
+    else:
+        mask = mk.prefix_lm(70)
+    o_r, lse_r = chunk_attn_ref(q, k, v, mask=mask, **segs)
+    o_c, lse_c = chunked_fwd(q, k, v, mask=mask, block_kv=64, **segs)
+    o_d, _ = chunked_fwd(q, k, v, mask=mask, block_kv=64, prune=False,
+                         **segs)
+    assert jnp.allclose(o_r, o_c, atol=1e-5, rtol=1e-5), kind
+    assert jnp.allclose(o_c, o_d, atol=1e-6), kind
+    g_r = chunk_attn_bwd_ref(q, k, v, o_r, lse_r, do, mask=mask, **segs)
+    g_c = chunked_bwd(q, k, v, o_c, lse_c, do, mask=mask, block_kv=64,
+                      **segs)
+    for r, c_ in zip(g_r, g_c):
+        assert jnp.allclose(r, c_, atol=2e-4, rtol=2e-4), kind
 
 
 # ------------------------------------------------------ block tuning surface
@@ -209,22 +287,22 @@ def test_pruned_grid_is_smaller_where_mask_allows():
 def test_chunk_attn_block_hints_reach_tunable_backends():
     """block_q/block_kv flow through chunk_attn to tunable backends and
     stay exact; non-tunable backends silently drop the hints."""
+    from repro.core import mask as mkk
     from repro.core.attention import chunk_attn, chunk_attn_bwd
     q, k, v, do = _mk(1, 128, 256, 2, 2, 32, jnp.float32)
-    o_r, lse_r = chunk_attn_ref(q, k, v, causal=True, q_offset=128)
+    m = mkk.causal(rel_offset=128)
+    o_r, lse_r = chunk_attn_ref(q, k, v, mask=m)
     for impl in ("chunked-lax", "pallas-interpret", "ref"):
         # non-dividing hints (96 ∤ 128) must shrink to a divisor, not crash
-        o_nd, _ = chunk_attn(q, k, v, causal=True, rel_offset=128,
-                             impl=impl, block_q=96, block_kv=96)
+        o_nd, _ = chunk_attn(q, k, v, mask=m, impl=impl, block_q=96,
+                             block_kv=96)
         assert jnp.allclose(o_r, o_nd, atol=1e-5), impl
-        o_b, lse_b = chunk_attn(q, k, v, causal=True, rel_offset=128,
-                                impl=impl, block_q=64, block_kv=32)
+        o_b, lse_b = chunk_attn(q, k, v, mask=m, impl=impl, block_q=64,
+                                block_kv=32)
         assert jnp.allclose(o_r, o_b, atol=1e-5), impl
-        g_r = chunk_attn_bwd_ref(q, k, v, o_r, lse_r, do, causal=True,
-                                 q_offset=128)
-        g_b = chunk_attn_bwd(q, k, v, o_b, lse_b, do, causal=True,
-                             rel_offset=128, impl=impl, block_q=64,
-                             block_kv=32)
+        g_r = chunk_attn_bwd_ref(q, k, v, o_r, lse_r, do, mask=m)
+        g_b = chunk_attn_bwd(q, k, v, o_b, lse_b, do, mask=m, impl=impl,
+                             block_q=64, block_kv=32)
         for a, b in zip(g_r, g_b):
             assert jnp.allclose(a, b, atol=2e-4), impl
 
