@@ -186,12 +186,50 @@ print("RESULT balanced_33h ok_no_padding")
 
 # ------------------------------------------------- schedule-level tracking
 
+def bench_schedules_plans():
+    """Tracked static schedule-plan rows (BENCH_schedules.json): per
+    schedule × mask regime, the plan's executed/total ring steps, kernel
+    calls, and the cost-model predictions that drive schedule="auto" —
+    pure python, no devices.  The windowed rows are the step-skipping
+    acceptance surface: windowed balanced/zigzag must execute strictly
+    fewer steps than their causal plans."""
+    from repro.core import mask as mkm
+    from repro.core import schedule as spm
+
+    B, N, P, H, D = 1, 2048, 8, 8, 64
+    Tl = N // P
+    bnd = mkm.doc_boundaries(N, 8)
+    regimes = [
+        ("causal", mkm.causal(), False),
+        ("windowed", mkm.sliding_window(N // 8), False),
+        ("document", mkm.document(boundaries=bnd), False),
+        ("doc_dynamic", mkm.document(), True),
+    ]
+    for rname, m, dyn in regimes:
+        for sched in ("ring", "balanced", "zigzag"):
+            if not spm.plan_capable(sched, m):
+                continue
+            plan = spm.build_plan(sched, m, P, Tl)
+            cost = plan.cost(B=B, Hq=H, Hkv=H, Dqk=D, Dv=D, bpe=4,
+                             dynamic_seg=dyn)
+            t = cost.time_estimate()
+            row(f"schedules/plan_{sched}_{rname}", 0,
+                f"steps={plan.exec_steps}/{plan.total_steps} "
+                f"calls={plan.kernel_calls} "
+                f"pred_compute_s={t['compute_s']:.3e} "
+                f"pred_collective_s={t['collective_s']:.3e} "
+                f"pred_bound={t['bound']}")
+        auto = spm.choose_schedule(m, P, Tl=Tl, B=B, Hq=H, Hkv=H, Dqk=D,
+                                   Dv=D, bpe=4, dynamic_seg=dyn)
+        row(f"schedules/auto_{rname}", 0, f"resolved={auto}")
+
+
 def bench_schedules_wall():
     """Tracked schedule-level benchmark (BENCH_schedules.json): forward
     wall-clock of each sequence-parallel schedule on 8 host devices, for
-    the dense causal mask AND a packed (document) batch — so the perf
-    trajectory covers the schedules, not just the kernels, and the packed
-    path is tracked from its introduction."""
+    the dense causal mask, a packed (document) batch, the windowed regime
+    (plan step skipping — new ring steps matrix), and schedule="auto" —
+    so the perf trajectory covers the schedules, not just the kernels."""
     code = """
 import time, statistics, numpy as np, jax, jax.numpy as jnp
 from repro.core import mask as mk
@@ -203,6 +241,7 @@ q,k,v = (jax.random.normal(kk,(B,N,H,D),jnp.float32) for kk in ks)
 bnd = mk.doc_boundaries(N, 8)
 seg = jnp.asarray(np.tile(mk.segments_from_boundaries(N, bnd), (B,1)))
 perm = zigzag_perm(N, 8)
+win = mk.sliding_window(N // 8)
 def timeit(f, *a):
     jax.block_until_ready(f(*a))
     ts = []
@@ -210,7 +249,7 @@ def timeit(f, *a):
         t0 = time.perf_counter(); jax.block_until_ready(f(*a))
         ts.append(time.perf_counter() - t0)
     return statistics.median(ts) * 1e6
-for sched in ("ring","balanced","zigzag","ulysses","rsa"):
+for sched in ("auto","ring","balanced","zigzag","ulysses","rsa"):
     qq, kk_, vv, ss = (q[:,perm],k[:,perm],v[:,perm],seg[:,perm]) \\
         if sched == "zigzag" else (q,k,v,seg)
     spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=mk.causal())
@@ -221,6 +260,11 @@ for sched in ("ring","balanced","zigzag","ulysses","rsa"):
     fd = jax.jit(lambda a,b,c,s: dist_attn_fwd(a,b,c,mesh=mesh,spec=specd,batch_axes=None,segments=s)[0])
     usd = timeit(fd, qq, kk_, vv, ss)
     print(f"RESULT {sched}/document {usd:.0f}")
+    if sched != "rsa":   # rsa has no sliding-window path
+        specw = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=win)
+        fw = jax.jit(lambda a,b,c: dist_attn_fwd(a,b,c,mesh=mesh,spec=specw,batch_axes=None)[0])
+        usw = timeit(fw, qq, kk_, vv)
+        print(f"RESULT {sched}/windowed {usw:.0f}")
 """
     for line in _subproc(code).splitlines():
         if line.startswith("RESULT"):
@@ -301,13 +345,15 @@ BENCHES = {
     "table4": bench_table4_ulysses,
     "table2": bench_table2_max_seqlen,
     "appD": bench_appendixD_comm_volume,
+    "plans": bench_schedules_plans,
     "schedules": bench_schedules_wall,
     "roofline": bench_roofline_table,
 }
 
 # the subset tracked in BENCH_schedules.json (CI smoke + in-repo history):
-# deterministic derived rows + the schedule-level wall rows
-TRACKED = ("fig4", "appD", "table2", "schedules")
+# deterministic derived rows + static plan/step-count/cost rows + the
+# schedule-level wall rows
+TRACKED = ("fig4", "appD", "table2", "plans", "schedules")
 
 
 def main() -> None:

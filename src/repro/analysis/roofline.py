@@ -123,6 +123,20 @@ def model_flops(cfg, shape, *, chips: int) -> float:
     return total / chips
 
 
+def schedule_cost_terms(*, flops, comm_bytes):
+    """Two-term time model for a static schedule-plan cost
+    (core/schedule.PlanCost): kernel FLOPs against peak compute, hop-
+    weighted ring-link bytes against per-link ICI bandwidth.  This is what
+    ``DistAttnSpec(schedule="auto")`` ranks candidate schedules by — HBM
+    traffic is schedule-invariant at this granularity (every schedule
+    streams the same chunks) so the memory term is omitted."""
+    ct = flops / PEAK_FLOPS
+    kt = comm_bytes / ICI_BW
+    return {"compute_s": ct, "collective_s": kt,
+            "bound": "compute" if ct >= kt else "collective",
+            "step_s_lower_bound": max(ct, kt)}
+
+
 def roofline_terms(flops, bytes_accessed, coll_bytes):
     ct = flops / PEAK_FLOPS
     mt = bytes_accessed / HBM_BW

@@ -65,31 +65,54 @@ def _tuning_kw(be, block_q, block_kv):
     return registry.block_tuning_kw(block_q, block_kv)
 
 
+def _offset_kw(mask, q_offset, kv_offset):
+    """Reconcile the dynamic position operands via ``mk.fold_offsets``:
+    static ints fold into the (static) MaskSpec — pruning and the Pallas
+    kernels keep working — while traced values become backend kwargs that
+    only ``dynamic_offsets`` backends accept (resolve() falls back for
+    the others). Returns (mask, backend_kwargs, needs_dynamic)."""
+    if q_offset is None and kv_offset is None:
+        return mask, {}, False
+    mask, qo, ko, dyn = mk.fold_offsets(mask, q_offset, kv_offset)
+    return mask, (dict(q_offset=qo, kv_offset=ko) if dyn else {}), dyn
+
+
 def chunk_attn(q, k, v, *, mask: MaskSpec | None = None, causal=None,
                rel_offset=None, window=None, scale=None, impl=None,
                block_q=None, block_kv=None, q_segments=None,
-               kv_segments=None):
+               kv_segments=None, q_offset=None, kv_offset=None):
     """Partial attention under a static ``mask`` (MaskSpec).
     ``q_segments``/``kv_segments`` are (B, Tq)/(B, Tk) int32 document IDs
     (document kind). ``block_q``/``block_kv`` are optional tile-shape hints
-    for tunable backends. Returns (o, lse)."""
+    for tunable backends. ``q_offset``/``kv_offset`` are *dynamic position
+    operands* added to the mask's own offsets — python ints fold into the
+    spec; traced scalars (schedule steps whose chunk distance depends on
+    the device index) restrict resolution to ``dynamic_offsets`` backends.
+    Returns (o, lse)."""
     mask = _resolve_mask(mask, causal, rel_offset, window)
-    be = registry.resolve(impl, mask=mask, dtype=q.dtype)
+    mask, okw, dyn = _offset_kw(mask, q_offset, kv_offset)
+    be = registry.resolve(impl, mask=mask, dtype=q.dtype,
+                          dynamic_offsets=dyn)
     return be.fwd(q, k, v, mask=mask, scale=scale, q_segments=q_segments,
-                  kv_segments=kv_segments, **_tuning_kw(be, block_q, block_kv))
+                  kv_segments=kv_segments, **okw,
+                  **_tuning_kw(be, block_q, block_kv))
 
 
 def chunk_attn_bwd(q, k, v, o, lse, do, *, mask: MaskSpec | None = None,
                    causal=None, rel_offset=None, window=None, scale=None,
                    impl=None, delta=None, block_q=None, block_kv=None,
-                   q_segments=None, kv_segments=None):
+                   q_segments=None, kv_segments=None, q_offset=None,
+                   kv_offset=None):
     """FA2 backward for one chunk using the saved (o, lse) — no forward
     recompute. ``delta = rowsum(o⊙do)`` may be precomputed (the distributed
-    helper path ships delta instead of o). Returns (dq, dk, dv)."""
+    helper path ships delta instead of o). ``q_offset``/``kv_offset`` as in
+    :func:`chunk_attn`. Returns (dq, dk, dv)."""
     mask = _resolve_mask(mask, causal, rel_offset, window)
-    be = registry.resolve(impl, mask=mask, dtype=q.dtype)
+    mask, okw, dyn = _offset_kw(mask, q_offset, kv_offset)
+    be = registry.resolve(impl, mask=mask, dtype=q.dtype,
+                          dynamic_offsets=dyn)
     return be.bwd(q, k, v, o, lse, do, mask=mask, scale=scale, delta=delta,
-                  q_segments=q_segments, kv_segments=kv_segments,
+                  q_segments=q_segments, kv_segments=kv_segments, **okw,
                   **_tuning_kw(be, block_q, block_kv))
 
 

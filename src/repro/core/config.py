@@ -219,7 +219,10 @@ class ParallelConfig:
     seq_axis: str = "model"
     extra_seq_axes: Tuple[str, ...] = ()          # 2D sequence sharding
     fsdp_axes: Tuple[str, ...] = ("data",)
-    # balanced | ring | rsa | ulysses | zigzag (see core/dist_attention.py)
+    # auto | balanced | ring | rsa | ulysses | zigzag (core/dist_attention).
+    # "auto" defers to trace time: the schedule-plan cost model
+    # (core/schedule.choose_schedule) picks the cheapest capable schedule
+    # for each attention site's MaskSpec, P, and shapes.
     schedule: str = "balanced"
     remat: str = "remat_aware"                    # remat_aware | hf | none
 

@@ -1,37 +1,58 @@
 """DISTFLASHATTN — the paper's core contribution, as JAX shard_map code.
 
 Sequence-parallel exact attention over the ``model`` mesh axis (the paper's
-``P`` workers). Schedules (validated in ``DistAttnSpec.__post_init__`` —
-unknown names raise instead of silently running the ring):
+``P`` workers).  Since the schedule-plan IR rewrite, the ring / balanced /
+zigzag schedules (and the MLA latent ring) are **~30-line plan builders**
+in :mod:`repro.core.schedule`: each builds a static
+:class:`~repro.core.schedule.SchedulePlan` — per ring step, a declarative
+list of Work items (q/kv chunk sources, the step's static MaskSpec,
+validity predicates, result routing) — and one shared forward executor and
+one shared backward executor run any plan with the ppermute-prefetch
+overlap, traveling-``dkv`` accumulators, and segment-ID machinery
+implemented exactly once.  Schedules (validated in
+``DistAttnSpec.__post_init__`` — unknown names raise instead of silently
+running the ring):
 
 * ``balanced`` — the paper's load-balanced schedule (§3.2, Alg. 2):
   ``⌊P/2⌋`` ring steps; workers with unfinished causal work compute
   ``attn(q_p, kv_{p−t})`` while *helpers* (workers whose causal prefix is
   done) compute ``attn(q_{(h−t) mod P}, kv_h)`` on behalf of heavy workers
   and ship the partial ``(o, lse)`` back for a ``rescale`` merge. Idle
-  fraction ``1/(2P)`` (even P) / ``0`` (odd P). Causal-kind masks only
-  (document included).
+  fraction ``1/(2P)`` (even P) / ``0`` (odd P). Causal-kind masks
+  (document and — new with the plan IR — sliding windows, which truncate
+  the plan to its needed steps).
 * ``ring`` — vanilla DISTFLASHATTN (§3.1, Alg. 1): ``P−1`` steps, workers
   idle once their causal prefix is exhausted (idle fraction → 1/2). Also
   used for bidirectional encoders (where causal imbalance doesn't exist —
-  paper §F discussion) and for the sliding-window variant (Appendix F:
-  "change the end condition of the for loop").
-* ``zigzag`` — beyond-paper balanced placement, see the section below.
+  paper §F discussion); sliding windows truncate the ring tail
+  (Appendix F: "change the end condition of the for loop").
+* ``zigzag`` — beyond-paper balanced placement (2P half-chunks, device p
+  holds (p, 2P−1−p)): exact balance with only the KV ring.  Windowed
+  masks run through dynamic-offset step masks and skip the *middle* ring
+  steps (both sequence ends are local under the mirror placement).
+  Contract: global arrays are pre-permuted with :func:`zigzag_perm`.
 * ``ulysses`` — DeepSpeed-Ulysses head-parallel baseline (all-to-all);
   raises on head counts not divisible by P (paper §4.2/§4.6).
 * ``rsa`` — Ring Self-Attention baseline (Li et al., 2021): all-gathers
   K and V and materializes the full score matrix (no memory-efficient
   attention). Benchmark baseline only.
+* ``auto`` — pick the cheapest capable schedule for the (MaskSpec, P,
+  shapes) at trace time via the plans' static comm/compute cost model
+  (:func:`repro.core.schedule.choose_schedule`, wired into
+  ``analysis/roofline.py``).  Candidates: balanced, ring, and — when the
+  head counts divide P — ulysses.  zigzag is excluded (its global-layout
+  permutation is a caller contract) and rsa is benchmark-only.
 
 Masking is a declarative :class:`repro.core.mask.MaskSpec` carried by
-``DistAttnSpec.mask``; every schedule derives each step's spec statically
-(``mk.ring_step`` / ``mk.strict_causal_pair``). Packed-sequence (document)
-masking is first-class: the per-token ``segments`` array is sharded like
-the activations and **travels the ring alongside K/V**, so every step
-masks cross-document pairs exactly; the kernels prune what their static
-layout allows. Prefix-LM masks need absolute positions, which per-shard
-ring steps don't have — they are served by ``ulysses``/``rsa`` or a
-single-shard axis, and rejected elsewhere at spec-construction time.
+``DistAttnSpec.mask``; the plan builders derive each step's spec
+statically and **skip provably all-masked steps**.  Packed-sequence
+(document) masking is first-class: dynamic per-token ``segments`` travel
+the ring alongside K/V, while static ``document(boundaries=…)`` layouts
+need no arrays at all — the executor derives each chunk's segment IDs
+from the boundaries at trace time and the builders prune ring steps no
+document spans.  Prefix-LM masks need absolute positions on every chunk —
+they are served by ``ulysses``/``rsa`` or a single-shard axis, and
+rejected elsewhere at spec-construction time.
 
 Communication/computation overlap (§3.2, Eq. 3) is expressed in dataflow:
 the ``ppermute`` producing step ``t+1``'s chunk is issued *before* step
@@ -46,13 +67,15 @@ recomputed, and neither is its forward communication (§3.3).
 
 All functions here are *local* (per-shard) code meant to run inside
 ``jax.shard_map``; :func:`dist_flash_attn` is the user-facing wrapper that
-applies shard_map and registers the custom VJP.
+applies shard_map and registers the custom VJP.  The frozen seed
+implementations of the hand-written loops live in
+``core/legacy_schedules.py`` purely as differential-test references.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,8 +85,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import mask as mk
-from repro.core.attention import (chunk_attn, chunk_attn_bwd, empty_partial,
-                                  mask_partial, merge)
+from repro.core import schedule as sp
+from repro.core.attention import chunk_attn, chunk_attn_bwd
 from repro.core.mask import MaskSpec
 from repro.kernels.ref import NEG_INF
 
@@ -72,22 +95,24 @@ from repro.kernels.ref import NEG_INF
 # Schedule configuration
 # --------------------------------------------------------------------------
 
-SCHEDULES = ("balanced", "ring", "rsa", "ulysses", "zigzag")
+SCHEDULES = ("auto", "balanced", "ring", "rsa", "ulysses", "zigzag")
 
 
 @dataclasses.dataclass(frozen=True)
 class DistAttnSpec:
     """Static description of one distributed-attention call site.
 
-    ``schedule`` ∈ ``balanced | ring | rsa | ulysses | zigzag`` (validated —
-    a typo raises instead of silently running the ring schedule).
+    ``schedule`` ∈ ``auto | balanced | ring | rsa | ulysses | zigzag``
+    (validated — a typo raises instead of silently running the ring
+    schedule).  ``auto`` defers the choice to trace time, where the
+    shapes are known and the plans' cost model ranks the candidates.
     ``mask`` is the MaskSpec of the *whole* (unsharded) attention; the
-    schedules derive per-step specs from it. The pre-MaskSpec ``causal``/
-    ``window`` constructor kwargs remain as deprecated shims.
+    plan builders derive per-step specs from it. The pre-MaskSpec
+    ``causal``/``window`` constructor kwargs remain as deprecated shims.
     """
     axis: str = "model"            # sequence-parallel mesh axis
     axis_size: int = 1             # P
-    schedule: str = "balanced"     # balanced | ring | rsa | ulysses | zigzag
+    schedule: str = "balanced"     # see SCHEDULES
     mask: Optional[MaskSpec] = None
     # deprecated shims, mapped onto ``mask`` (default: causal, full window)
     causal: dataclasses.InitVar[Optional[bool]] = None
@@ -123,16 +148,11 @@ class DistAttnSpec:
             raise ValueError("DistAttnSpec.mask must be offset-free — the "
                              "schedules derive per-step offsets")
         if self.axis_size > 1:
-            if m.boundaries is not None and self.schedule != "ulysses":
-                raise ValueError(
-                    f"static document boundaries don't compose with the "
-                    f"{self.schedule!r} schedule's per-shard coordinates; "
-                    f"pass dynamic segments= arrays instead")
             if self.schedule in ("balanced", "zigzag") and \
-                    not (m.causal and not m.window and not m.prefix_len):
+                    not (m.causal and not m.prefix_len):
                 raise ValueError(
-                    f"{self.schedule!r} handles causal full-window masks "
-                    f"only (got {m.kind!r}); use ring/ulysses")
+                    f"{self.schedule!r} handles causal-kind masks only "
+                    f"(got {m.kind!r}); use ring/ulysses")
             # rsa/ulysses serve prefix_lm forward-only (absolute positions
             # exist there); their backward — the ring — rejects it below
             if m.prefix_len and self.schedule == "ring":
@@ -142,6 +162,11 @@ class DistAttnSpec:
                     "ulysses/rsa or a single-shard axis")
             if m.window and self.schedule == "rsa":
                 raise ValueError("rsa baseline has no sliding-window path")
+            if m.window and not m.causal and self.schedule == "ring":
+                raise ValueError(
+                    "a non-causal sliding window needs future-direction "
+                    "band steps the ring's strictly-past step masks can't "
+                    "express; use ulysses or a single-shard axis")
 
 
 def _tune(spec: DistAttnSpec) -> dict:
@@ -157,102 +182,21 @@ def _seg_kw(mask: MaskSpec, q_seg, kv_seg) -> dict:
     return dict(q_segments=q_seg, kv_segments=kv_seg)
 
 
-def _shift(x, axis, shift, size):
-    """ppermute by a fixed shift: device p receives from (p − shift) mod P."""
-    perm = [(i, (i + shift) % size) for i in range(size)]
-    return compat.tree_map(lambda a: lax.ppermute(a, axis, perm), x)
-
-
-def _ring_steps(spec: DistAttnSpec, chunk_len: int) -> int:
-    """Number of ring steps; truncated by the sliding window (Appendix F)."""
-    P_ = spec.axis_size
-    n = P_ - 1
-    w = spec.mask.window
-    if w and w > 0:
-        # step t covers query-key distances [(t-1)*Tc+1, (t+1)*Tc-1];
-        # it contributes only if the smallest distance is inside the window.
-        n = min(n, max(0, -(-(w - 1) // chunk_len)))
-    return n
+def resolve_schedule(spec: DistAttnSpec, q, k, v, seg=None) -> str:
+    """Concrete schedule for this call: ``auto`` ranks the capable
+    candidates by the static plan cost model (identical inputs in fwd and
+    bwd ⇒ identical choice)."""
+    if spec.schedule != "auto":
+        return spec.schedule
+    return sp.choose_schedule(
+        spec.mask, spec.axis_size, Tl=q.shape[1], B=q.shape[0],
+        Hq=q.shape[2], Hkv=k.shape[2], Dqk=q.shape[3], Dv=v.shape[3],
+        bpe=q.dtype.itemsize, dynamic_seg=seg is not None)
 
 
 # --------------------------------------------------------------------------
-# Forward schedules (local/per-shard code)
+# Bespoke baselines (not plan-based: different communication topology)
 # --------------------------------------------------------------------------
-
-def _fwd_ring(spec, q, k, v, seg=None):
-    """Vanilla ring (Alg. 1) — causal, bidirectional, windowed, document."""
-    p = lax.axis_index(spec.axis)
-    P_, Tc = spec.axis_size, q.shape[1]
-    m = spec.mask
-    o, s = chunk_attn(q, k, v, mask=m, **_seg_kw(m, seg, seg), **_tune(spec))
-    n = _ring_steps(spec, Tc)
-    if n == 0:
-        return o, s
-    kv = _shift((k, v), spec.axis, 1, P_)            # prefetch step 1
-    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
-    for t in range(1, n + 1):
-        if t < n:                                     # prefetch (overlap)
-            kv_next = _shift(kv, spec.axis, 1, P_)
-            seg_next = _shift(seg_r, spec.axis, 1, P_) \
-                if seg_r is not None else None
-        m_t = mk.ring_step(m, t * Tc)
-        o_t, s_t = chunk_attn(q, kv[0], kv[1], mask=m_t,
-                              **_seg_kw(m_t, seg, seg_r), **_tune(spec))
-        if m.causal:
-            o_t, s_t = mask_partial(p >= t, o_t, s_t)
-        o, s = merge(o, s, o_t, s_t)
-        if t < n:
-            kv, seg_r = kv_next, seg_next
-    return o, s
-
-
-def _fwd_balanced(spec, q, k, v, seg=None):
-    """Load-balanced schedule (Alg. 2). Causal-kind masks, full window."""
-    p = lax.axis_index(spec.axis)
-    P_, Tc = spec.axis_size, q.shape[1]
-    m = spec.mask
-    m_x = mk.strict_causal_pair(m)     # off-diagonal pairs: document only
-    o, s = chunk_attn(q, k, v, mask=m, **_seg_kw(m, seg, seg), **_tune(spec))
-    if P_ == 1:
-        return o, s
-    T = P_ // 2
-    kv = _shift((k, v), spec.axis, 1, P_)            # prefetch step 1
-    qb = _shift(q, spec.axis, 1, P_)
-    # one traveling segment chunk serves both sides: the helper's q chunk
-    # and the worker's kv chunk are the same remote device's tokens
-    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
-    for t in range(1, T + 1):
-        helpers = (t != T) or (P_ % 2 == 1)
-        if t < T:                                     # prefetch step t+1
-            kv_next = _shift(kv, spec.axis, 1, P_)
-            qb_next = _shift(qb, spec.axis, 1, P_)
-            seg_next = _shift(seg_r, spec.axis, 1, P_) \
-                if seg_r is not None else None
-        is_worker = p >= t
-        # one attn kernel per device per step: workers use (q_p, kv_{p−t}),
-        # helpers use (q_{(p−t) mod P}, kv_p). No positional mask — strictly
-        # causal pairs; document segments still apply.
-        q_sel = jnp.where(is_worker, q, qb)
-        k_sel = jnp.where(is_worker, kv[0], k)
-        v_sel = jnp.where(is_worker, kv[1], v)
-        skw = {}
-        if seg_r is not None and m.document:
-            skw = dict(q_segments=jnp.where(is_worker, seg, seg_r),
-                       kv_segments=jnp.where(is_worker, seg_r, seg))
-        o_t, s_t = chunk_attn(q_sel, k_sel, v_sel, mask=m_x, **skw,
-                              **_tune(spec))
-        o_w, s_w = mask_partial(is_worker, o_t, s_t)
-        o, s = merge(o, s, o_w, s_w)
-        if helpers:
-            # helper h computed for worker w=(h−t) mod P: route (o,lse) back
-            o_r, s_r = _shift((o_t, s_t), spec.axis, -t, P_)
-            o_r, s_r = mask_partial(p >= P_ - t, o_r, s_r)
-            o, s = merge(o, s, o_r, s_r)
-        if t < T:
-            kv, qb = kv_next, qb_next
-            seg_r = seg_next if seg_r is not None else None
-    return o, s
-
 
 def _fwd_ulysses(spec, q, k, v, seg=None):
     """DeepSpeed-Ulysses baseline (Jacobs et al., 2023): all-to-all the
@@ -321,118 +265,6 @@ def _fwd_rsa(spec, q, k, v, seg=None):
 
 
 # --------------------------------------------------------------------------
-# Backward schedules (explicit; used by remat-aware checkpointing)
-# --------------------------------------------------------------------------
-
-def _bwd_ring(spec, q, k, v, o, s, do, seg=None):
-    p = lax.axis_index(spec.axis)
-    P_, Tc = spec.axis_size, q.shape[1]
-    m = spec.mask
-    f32 = jnp.float32
-    delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)  # (B,T,H)
-    dq_l, dk_l, dv_l = chunk_attn_bwd(
-        q, k, v, o, s, do, mask=m, **_seg_kw(m, seg, seg), **_tune(spec))
-    dq = dq_l.astype(f32)
-    dkv_home = (dk_l.astype(f32), dv_l.astype(f32))
-    n = _ring_steps(spec, Tc)
-    if n == 0:
-        return dq.astype(q.dtype), dkv_home[0].astype(k.dtype), \
-            dkv_home[1].astype(v.dtype)
-    # containers: (k, v) data + (dk, dv) accumulators travel together
-    kv = _shift((k, v), spec.axis, 1, P_)
-    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
-    dkv = compat.tree_map(lambda a: jnp.zeros(a.shape, f32), kv)
-    for t in range(1, n + 1):
-        if t < n:                                     # prefetch data (overlap)
-            kv_nxt = _shift(kv, spec.axis, 1, P_)
-            seg_nxt = _shift(seg_r, spec.axis, 1, P_) \
-                if seg_r is not None else None
-        m_t = mk.ring_step(m, t * Tc)
-        dq_t, dk_t, dv_t = chunk_attn_bwd(
-            q, kv[0], kv[1], o, s, do, mask=m_t,
-            **_seg_kw(m_t, seg, seg_r), **_tune(spec), delta=delta)
-        valid = (p >= t) if m.causal else jnp.bool_(True)
-        w = valid.astype(f32)
-        dq = dq + dq_t.astype(f32) * w
-        dkv = (dkv[0] + dk_t.astype(f32) * w, dkv[1] + dv_t.astype(f32) * w)
-        if t < n:                                     # accumulators move late
-            kv, seg_r = kv_nxt, (seg_nxt if seg_r is not None else None)
-            dkv = _shift(dkv, spec.axis, 1, P_)
-    # route accumulated dkv home: container at p holds chunk (p−n) mod P
-    dkv = _shift(dkv, spec.axis, -n, P_)
-    dk = dkv_home[0] + dkv[0]
-    dv = dkv_home[1] + dkv[1]
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
-
-
-def _bwd_balanced(spec, q, k, v, o, s, do, seg=None):
-    p = lax.axis_index(spec.axis)
-    P_, Tc = spec.axis_size, q.shape[1]
-    m = spec.mask
-    m_x = mk.strict_causal_pair(m)
-    f32 = jnp.float32
-    dq_l, dk_l, dv_l = chunk_attn_bwd(q, k, v, o, s, do, mask=m,
-                                      **_seg_kw(m, seg, seg), **_tune(spec))
-    dq = dq_l.astype(f32)
-    dk_home = dk_l.astype(f32)
-    dv_home = dv_l.astype(f32)
-    if P_ == 1:
-        return dq.astype(q.dtype), dk_home.astype(k.dtype), \
-            dv_home.astype(v.dtype)
-    T = P_ // 2
-    delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)
-    # traveling containers (ring +1): kv side and q-bundle side
-    kv = _shift((k, v), spec.axis, 1, P_)
-    dkv = (jnp.zeros(k.shape, f32), jnp.zeros(v.shape, f32))
-    qb = _shift((q, do, s, delta), spec.axis, 1, P_)
-    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
-    dqb = jnp.zeros(q.shape, f32)
-    for t in range(1, T + 1):
-        helpers = (t != T) or (P_ % 2 == 1)
-        if t < T:                                     # prefetch data (overlap)
-            kv_nxt = _shift(kv, spec.axis, 1, P_)
-            qb_nxt = _shift(qb, spec.axis, 1, P_)
-            seg_nxt = _shift(seg_r, spec.axis, 1, P_) \
-                if seg_r is not None else None
-        is_worker = p >= t
-        q_sel = jnp.where(is_worker, q, qb[0])
-        do_sel = jnp.where(is_worker, do, qb[1])
-        s_sel = jnp.where(is_worker, s, qb[2])
-        k_sel = jnp.where(is_worker, kv[0], k)
-        v_sel = jnp.where(is_worker, kv[1], v)
-        o_unused = jnp.zeros_like(q_sel)  # delta passed explicitly
-        d_sel = jnp.where(is_worker, delta, qb[3])
-        skw = {}
-        if seg_r is not None and m.document:
-            skw = dict(q_segments=jnp.where(is_worker, seg, seg_r),
-                       kv_segments=jnp.where(is_worker, seg_r, seg))
-        dq_t, dk_t, dv_t = chunk_attn_bwd(
-            q_sel, k_sel, v_sel, o_unused, s_sel, do_sel, mask=m_x, **skw,
-            **_tune(spec), delta=d_sel)
-        w_w = is_worker.astype(f32)
-        dq = dq + dq_t.astype(f32) * w_w                 # worker: local dq
-        dkv = (dkv[0] + dk_t.astype(f32) * w_w,          # worker: traveling dkv
-               dkv[1] + dv_t.astype(f32) * w_w)
-        if helpers:
-            w_h = (p < t).astype(f32)
-            dqb = dqb + dq_t.astype(f32) * w_h           # helper: traveling dq
-            dk_home = dk_home + dk_t.astype(f32) * w_h   # helper: local dkv
-            dv_home = dv_home + dv_t.astype(f32) * w_h
-        if t < T:                                     # accumulators move late
-            kv, qb = kv_nxt, qb_nxt
-            seg_r = seg_nxt if seg_r is not None else None
-            dkv = _shift(dkv, spec.axis, 1, P_)
-            dqb = _shift(dqb, spec.axis, 1, P_)
-    # route containers home (container at p holds chunk (p−T) mod P)
-    dkv = _shift(dkv, spec.axis, -T, P_)
-    dqb = _shift(dqb, spec.axis, -T, P_)
-    dq = dq + dqb
-    dk = dk_home + dkv[0]
-    dv = dv_home + dkv[1]
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
-
-
-# --------------------------------------------------------------------------
 # Public API: explicit fwd/bwd + custom-VJP wrapper, shard_mapped
 # --------------------------------------------------------------------------
 
@@ -441,17 +273,14 @@ def _fwd_local(spec, q, k, v, seg=None):
         m = spec.mask
         return chunk_attn(q, k, v, mask=m, **_seg_kw(m, seg, seg),
                           **_tune(spec))
-    sched = spec.schedule              # validated in __post_init__
-    if sched == "balanced":
-        return _fwd_balanced(spec, q, k, v, seg)
-    if sched == "zigzag":
-        return _fwd_zigzag(spec, q, k, v, seg)
+    sched = resolve_schedule(spec, q, k, v, seg)
     if sched == "rsa":
         return _fwd_rsa(spec, q, k, v, seg)
     if sched == "ulysses":
         return _fwd_ulysses(spec, q, k, v, seg)
-    assert sched == "ring", sched
-    return _fwd_ring(spec, q, k, v, seg)
+    plan = sp.build_plan(sched, spec.mask, spec.axis_size, q.shape[1])
+    return sp.execute_fwd(plan, q, k, v, seg, axis=spec.axis,
+                          tune=_tune(spec))
 
 
 def _bwd_local(spec, q, k, v, o, s, do, seg=None):
@@ -459,22 +288,25 @@ def _bwd_local(spec, q, k, v, o, s, do, seg=None):
         m = spec.mask
         return chunk_attn_bwd(q, k, v, o, s, do, mask=m,
                               **_seg_kw(m, seg, seg), **_tune(spec))
-    sched = spec.schedule
-    if sched == "balanced":
-        return _bwd_balanced(spec, q, k, v, o, s, do, seg)
-    if sched == "zigzag":
-        return _bwd_zigzag(spec, q, k, v, o, s, do, seg)
-    # rsa / ulysses baselines reuse the exact ring backward — which cannot
-    # express absolute coordinates (prefix masks, static doc boundaries)
-    # in its per-shard chunks
-    if spec.mask.prefix_len:
-        raise ValueError("prefix_lm distributed backward needs axis_size"
-                         " == 1 (fwd-only baselines support it)")
-    if spec.mask.boundaries is not None:
-        raise ValueError("static document boundaries have no distributed "
-                         "backward (the ring sees per-shard coordinates); "
-                         "pass dynamic segments= instead")
-    return _bwd_ring(spec, q, k, v, o, s, do, seg)
+    sched = resolve_schedule(spec, q, k, v, seg)
+    if sched in ("rsa", "ulysses"):
+        # the baselines reuse the exact ring backward — which cannot
+        # express absolute coordinates (prefix masks) in its per-shard
+        # chunks; static document boundaries ARE expressible (the plan
+        # executor derives per-shard segment IDs from them)
+        if spec.mask.prefix_len:
+            raise ValueError("prefix_lm distributed backward needs "
+                             "axis_size == 1 (fwd-only baselines "
+                             "support it)")
+        if spec.mask.window and not spec.mask.causal:
+            raise ValueError("non-causal sliding-window distributed "
+                             "backward needs axis_size == 1 (the ring "
+                             "backward the baselines reuse can't see "
+                             "future-direction bands)")
+        sched = "ring"
+    plan = sp.build_plan(sched, spec.mask, spec.axis_size, q.shape[1])
+    return sp.execute_bwd(plan, q, k, v, o, s, do, seg, axis=spec.axis,
+                          tune=_tune(spec))
 
 
 def _specs(batch_axes, seq_axis):
@@ -641,7 +473,8 @@ def _merge_bh(o1, lse1, o2, lse2):
 
 
 def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
-                     seq_axes=("model",), batch_axes=("data",), window=0,
+                     seq_axes=("model",), batch_axes=("data",),
+                     mask: Optional[MaskSpec] = None, window=None,
                      scale=None, shard_len=None):
     """One-token decode against a sequence-sharded KV cache.
 
@@ -650,7 +483,32 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
     k/v are replicated across them. Exact lse-weighted combine across shards
     (distributed flash-decoding), then a final merge with the new token's
     self-attention.
+
+    ``mask`` is a :class:`~repro.core.mask.MaskSpec` of kind ``causal``
+    (attend the whole cache — the default) or ``sliding_window``; the new
+    token always sits at the end of the context, so those are the only
+    kinds decode can express.  The pre-MaskSpec ``window=`` kwarg remains
+    as a deprecated shim (one DeprecationWarning per process).
     """
+    if mask is None:
+        if window is not None:
+            mk.warn_legacy_once(
+                "dist_decode_attn(window=)",
+                "mask=repro.core.mask.{causal,sliding_window}(...)")
+        mask = mk.from_legacy(causal=True, window=window or 0)
+    elif window is not None:
+        raise ValueError("pass either mask= or the legacy window= kwarg, "
+                         "not both")
+    if mask.kinds - {"causal", "sliding_window"}:
+        raise ValueError(
+            f"dist_decode_attn serves causal/sliding_window masks only "
+            f"(got {mask.kind!r}) — the decode token is last, so other "
+            f"kinds have no decode meaning")
+    if mask.q_offset or mask.kv_offset:
+        raise ValueError("dist_decode_attn mask must be offset-free — "
+                         "decode positions are derived from the cache "
+                         "layout")
+    w = mask.window
     n = 1
     for ax in seq_axes:
         n *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
@@ -661,7 +519,7 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
     rep = P(b, None, None, None)
     shd = P(b, seq, None, None)
     fn = compat.shard_map(
-        partial(_decode_local, tuple(seq_axes), shard_len, window, scale),
+        partial(_decode_local, tuple(seq_axes), shard_len, w, scale),
         mesh=mesh,
         in_specs=(rep, shd, shd, rep, rep),
         out_specs=rep, check_vma=False)
@@ -669,26 +527,7 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
 
 
 # --------------------------------------------------------------------------
-# BEYOND-PAPER: zigzag placement (cf. striped/zigzag context parallelism).
-#
-# The paper balances causal load by shipping helper queries and partial
-# results (Alg. 2) — comm = kv ring + q ring + (o,lse) result sends, and in
-# the backward also dq/do containers. Zigzag placement achieves *exact*
-# balance with ONLY the kv ring: split the sequence into 2P chunks and give
-# device p chunks (p, 2P−1−p). At ring step t every device computes exactly
-# two (Tc×Tc) chunk pairs, all strictly causal (mask-free):
-#     p ≥ t:  (q_p  × kv_a)  and (q_b̄ × kv_a)
-#     p < t:  (q_b̄ × kv_a)  and (q_b̄ × kv_b̄)
-# where the received container holds kv chunks (r, 2P−1−r) = (a, b̄) of
-# r = (p−t) mod P, and b̄ denotes the device's own mirror chunk 2P−1−p.
-# Coverage: 2P(P−1) + 3P = P(2P+1) pairs = all causal chunk pairs, each
-# exactly once. The backward ships only (kv, dkv): dq stays local.
-# Document segments ride the kv ring exactly like K/V.
-#
-# Contract: global arrays (tokens AND segment IDs) are already
-# zigzag-permuted (models apply the permutation once after the embedding;
-# rope tables are permuted for free as trace-time constants — see
-# models/transformer.py).
+# Zigzag layout helpers + the MLA latent ring (plan-based)
 # --------------------------------------------------------------------------
 
 def zigzag_perm(T: int, P: int):
@@ -704,196 +543,20 @@ def zigzag_perm(T: int, P: int):
     return np.concatenate(order)
 
 
-def _fwd_zigzag(spec, q, k, v, seg=None):
-    p = lax.axis_index(spec.axis)
-    P_ = spec.axis_size
-    Tl = q.shape[1]
-    c = Tl // 2
-    m = spec.mask
-    m_x = mk.strict_causal_pair(m)
-    doc = seg is not None and m.document
-
-    def sk(qs, ks):
-        return dict(q_segments=qs, kv_segments=ks) if doc else {}
-
-    q_a, q_b = q[:, :c], q[:, c:]
-    k_a, k_b = k[:, :c], k[:, c:]
-    v_a, v_b = v[:, :c], v[:, c:]
-    s_a_, s_b_ = (seg[:, :c], seg[:, c:]) if seg is not None else (None, None)
-    # local step: a×a causal; b̄×a full; b̄×b̄ causal
-    o_a, s_a = chunk_attn(q_a, k_a, v_a, mask=m, **sk(s_a_, s_a_),
-                          **_tune(spec))
-    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, mask=m_x, **sk(s_b_, s_a_),
-                            **_tune(spec))
-    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, mask=m, **sk(s_b_, s_b_),
-                            **_tune(spec))
-    o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
-    if P_ == 1:
-        return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
-    kv = _shift((k, v), spec.axis, 1, P_)
-    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
-    for t in range(1, P_):
-        if t < P_ - 1:
-            kv_next = _shift(kv, spec.axis, 1, P_)
-            seg_next = _shift(seg_r, spec.axis, 1, P_) \
-                if seg_r is not None else None
-        ka_r, kb_r = kv[0][:, :c], kv[0][:, c:]
-        va_r, vb_r = kv[1][:, :c], kv[1][:, c:]
-        sa_r, sb_r = (seg_r[:, :c], seg_r[:, c:]) if seg_r is not None \
-            else (None, None)
-        w = p >= t
-        # pair 1 -> (q_a if worker else q_b) × kv_a
-        q1 = jnp.where(w, q_a, q_b)
-        s1q = jnp.where(w, s_a_, s_b_) if doc else None
-        o1, s1 = chunk_attn(q1, ka_r, va_r, mask=m_x, **sk(s1q, sa_r),
-                            **_tune(spec))
-        o1a, s1a = mask_partial(w, o1, s1)
-        o_a, s_a = merge(o_a, s_a, o1a, s1a)
-        o1b, s1b = mask_partial(~w, o1, s1)
-        o_b, s_b = merge(o_b, s_b, o1b, s1b)
-        # pair 2 -> q_b × (kv_a if worker else kv_b̄)
-        k2 = jnp.where(w, ka_r, kb_r)
-        v2 = jnp.where(w, va_r, vb_r)
-        s2k = jnp.where(w, sa_r, sb_r) if doc else None
-        o2, s2 = chunk_attn(q_b, k2, v2, mask=m_x, **sk(s_b_, s2k),
-                            **_tune(spec))
-        o_b, s_b = merge(o_b, s_b, o2, s2)
-        if t < P_ - 1:
-            kv, seg_r = kv_next, (seg_next if seg_r is not None else None)
-    return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
-
-
-def _bwd_zigzag(spec, q, k, v, o, s, do, seg=None):
-    p = lax.axis_index(spec.axis)
-    P_ = spec.axis_size
-    f32 = jnp.float32
-    Tl = q.shape[1]
-    c = Tl // 2
-    sl_a, sl_b = slice(0, c), slice(c, None)
-    m = spec.mask
-    m_x = mk.strict_causal_pair(m)
-    doc = seg is not None and m.document
-    delta = jnp.sum(o.astype(f32) * do.astype(f32), axis=-1)
-
-    def cb(qs, ks, vs, ss, dos, ds, mask, qseg=None, kseg=None):
-        skw = dict(q_segments=qseg, kv_segments=kseg) if doc else {}
-        return chunk_attn_bwd(qs, ks, vs, jnp.zeros_like(qs), ss, dos,
-                              mask=mask, **skw, **_tune(spec), delta=ds)
-
-    # local pairs
-    dq = jnp.zeros(q.shape, f32)
-    dk_h = jnp.zeros(k.shape, f32)
-    dv_h = jnp.zeros(v.shape, f32)
-    for (qs, ks, mask) in ((sl_a, sl_a, m), (sl_b, sl_a, m_x),
-                           (sl_b, sl_b, m)):
-        dq_t, dk_t, dv_t = cb(q[:, qs], k[:, ks], v[:, ks], s[:, qs],
-                              do[:, qs], delta[:, qs], mask,
-                              seg[:, qs] if doc else None,
-                              seg[:, ks] if doc else None)
-        dq = dq.at[:, qs].add(dq_t.astype(f32))
-        dk_h = dk_h.at[:, ks].add(dk_t.astype(f32))
-        dv_h = dv_h.at[:, ks].add(dv_t.astype(f32))
-    if P_ == 1:
-        return dq.astype(q.dtype), dk_h.astype(k.dtype), dv_h.astype(v.dtype)
-
-    q_a, q_b = q[:, sl_a], q[:, sl_b]
-    s_a, s_b = s[:, sl_a], s[:, sl_b]
-    do_a, do_b = do[:, sl_a], do[:, sl_b]
-    de_a, de_b = delta[:, sl_a], delta[:, sl_b]
-    sg_a, sg_b = (seg[:, sl_a], seg[:, sl_b]) if doc else (None, None)
-    kv = _shift((k, v), spec.axis, 1, P_)
-    seg_r = _shift(seg, spec.axis, 1, P_) if seg is not None else None
-    dkv = (jnp.zeros(k.shape, f32), jnp.zeros(v.shape, f32))
-    for t in range(1, P_):
-        if t < P_ - 1:
-            kv_nxt = _shift(kv, spec.axis, 1, P_)
-            seg_nxt = _shift(seg_r, spec.axis, 1, P_) \
-                if seg_r is not None else None
-        ka_r, kb_r = kv[0][:, :c], kv[0][:, c:]
-        va_r, vb_r = kv[1][:, :c], kv[1][:, c:]
-        sa_r, sb_r = (seg_r[:, :c], seg_r[:, c:]) if seg_r is not None \
-            else (None, None)
-        w = p >= t
-        wf = w.astype(f32)
-        # pair 1
-        q1 = jnp.where(w, q_a, q_b)
-        s1 = jnp.where(w, s_a, s_b)
-        do1 = jnp.where(w, do_a, do_b)
-        de1 = jnp.where(w, de_a, de_b)
-        sg1 = jnp.where(w, sg_a, sg_b) if doc else None
-        dq1, dk1, dv1 = cb(q1, ka_r, va_r, s1, do1, de1, m_x, sg1, sa_r)
-        dq = dq.at[:, sl_a].add(dq1.astype(f32) * wf)
-        dq = dq.at[:, sl_b].add(dq1.astype(f32) * (1 - wf))
-        dkv = (dkv[0].at[:, sl_a].add(dk1.astype(f32)),
-               dkv[1].at[:, sl_a].add(dv1.astype(f32)))
-        # pair 2
-        k2 = jnp.where(w, ka_r, kb_r)
-        v2 = jnp.where(w, va_r, vb_r)
-        sg2 = jnp.where(w, sa_r, sb_r) if doc else None
-        dq2, dk2, dv2 = cb(q_b, k2, v2, s_b, do_b, de_b, m_x, sg_b, sg2)
-        dq = dq.at[:, sl_b].add(dq2.astype(f32))
-        dkv = (dkv[0].at[:, sl_a].add(dk2.astype(f32) * wf),
-               dkv[1].at[:, sl_a].add(dv2.astype(f32) * wf))
-        dkv = (dkv[0].at[:, sl_b].add(dk2.astype(f32) * (1 - wf)),
-               dkv[1].at[:, sl_b].add(dv2.astype(f32) * (1 - wf)))
-        if t < P_ - 1:
-            kv, seg_r = kv_nxt, (seg_nxt if seg_r is not None else None)
-            dkv = _shift(dkv, spec.axis, 1, P_)
-    # containers at p hold chunk of (p − (P−1)) mod P = (p+1) mod P
-    dkv = _shift(dkv, spec.axis, -(P_ - 1), P_)
-    dk = dk_h + dkv[0]
-    dv = dv_h + dkv[1]
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
-
-
-# --------------------------------------------------------------------------
 # BEYOND-PAPER: MLA latent ring. For DeepSeek MLA the materialized per-head
 # K/V chunk is n_heads·(d_qk+d_v) wide (v3: 128·320 = 40960/token) while the
 # latent it is deterministically derived from is kv_lora+rope = 576/token —
 # a 71× comm reduction if the ring ships the latent and every worker
 # up-projects locally (recompute-over-communicate, the same trade the
 # paper's §3.3 makes for time). Composed with the zigzag placement the
-# schedule is also load-balanced with no helper sends.
-# --------------------------------------------------------------------------
+# schedule is also load-balanced with no helper sends.  Since the plan IR
+# rewrite this is the *same zigzag plan* run with a latent payload on the
+# KV ring (``execute_fwd(..., latent=...)``).
 
-def _fwd_zigzag_latent(spec, q, k, v, payload, w_up, expand):
-    """Zigzag forward shipping ``payload`` instead of (k, v);
-    ``expand(payload, w_up) -> (k, v)`` runs locally on every received
-    chunk. Local (k, v) are passed in pre-expanded."""
-    p = lax.axis_index(spec.axis)
-    P_ = spec.axis_size
-    Tl = q.shape[1]
-    c = Tl // 2
-    m = spec.mask
-    m_x = mk.strict_causal_pair(m)
-    q_a, q_b = q[:, :c], q[:, c:]
-    k_a, k_b = k[:, :c], k[:, c:]
-    v_a, v_b = v[:, :c], v[:, c:]
-    o_a, s_a = chunk_attn(q_a, k_a, v_a, mask=m, **_tune(spec))
-    o_b1, s_b1 = chunk_attn(q_b, k_a, v_a, mask=m_x, **_tune(spec))
-    o_b2, s_b2 = chunk_attn(q_b, k_b, v_b, mask=m, **_tune(spec))
-    o_b, s_b = merge(o_b1, s_b1, o_b2, s_b2)
-    if P_ == 1:
-        return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
-    pl = _shift(payload, spec.axis, 1, P_)
-    for t in range(1, P_):
-        pl_next = _shift(pl, spec.axis, 1, P_) if t < P_ - 1 else None
-        k_r, v_r = expand(pl, w_up)                  # local up-projection
-        ka_r, kb_r = k_r[:, :c], k_r[:, c:]
-        va_r, vb_r = v_r[:, :c], v_r[:, c:]
-        w = p >= t
-        q1 = jnp.where(w, q_a, q_b)
-        o1, s1 = chunk_attn(q1, ka_r, va_r, mask=m_x, **_tune(spec))
-        o1a, s1a = mask_partial(w, o1, s1)
-        o_a, s_a = merge(o_a, s_a, o1a, s1a)
-        o1b, s1b = mask_partial(~w, o1, s1)
-        o_b, s_b = merge(o_b, s_b, o1b, s1b)
-        k2 = jnp.where(w, ka_r, kb_r)
-        v2 = jnp.where(w, va_r, vb_r)
-        o2, s2 = chunk_attn(q_b, k2, v2, mask=m_x, **_tune(spec))
-        o_b, s_b = merge(o_b, s_b, o2, s2)
-        pl = pl_next
-    return jnp.concatenate([o_a, o_b], 1), jnp.concatenate([s_a, s_b], 1)
+def _fwd_latent_local(spec, expand, q, k, v, payload, w_up):
+    plan = sp.build_plan("zigzag", spec.mask, spec.axis_size, q.shape[1])
+    return sp.execute_fwd(plan, q, k, v, None, axis=spec.axis,
+                          tune=_tune(spec), latent=(payload, w_up, expand))
 
 
 def dist_attn_fwd_latent(q, k, v, payload, w_up, expand, *, mesh, spec,
@@ -910,7 +573,7 @@ def dist_attn_fwd_latent(q, k, v, payload, w_up, expand, *, mesh, spec,
     lse_s = P(b, spec.axis, None)
     w_s = compat.tree_map(lambda a: P(*(None,) * a.ndim), w_up)
     fn = compat.shard_map(
-        partial(_fwd_zigzag_latent, spec, expand=expand), mesh=mesh,
+        partial(_fwd_latent_local, spec, expand), mesh=mesh,
         in_specs=(qkv_s, qkv_s, qkv_s, pl_s, w_s),
         out_specs=(qkv_s, lse_s), check_vma=False)
     return fn(q, k, v, payload, w_up)

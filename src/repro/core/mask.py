@@ -185,6 +185,14 @@ class MaskSpec:
             hi = jnp.where(p < b, jnp.int32(b - 1), hi)
         return hi
 
+    def segment_index(self, p: int) -> int:
+        """Segment index of absolute position ``p`` (python int, static
+        ``boundaries`` only) — host-side counterpart of :meth:`segment_of`,
+        used by the schedule planner's static step pruning."""
+        assert self.boundaries is not None
+        import bisect
+        return bisect.bisect_right(self.boundaries, int(p)) - 1
+
     def segment_of(self, pos):
         """Segment index of absolute position array ``pos`` (static
         boundaries only) — the trace-time stand-in for segment-ID arrays."""
@@ -285,18 +293,76 @@ def as_spec(mask: Optional[MaskSpec], causal=False, window=0,
     return mask
 
 
+def fold_offsets(mask: MaskSpec, q_offset, kv_offset):
+    """Reconcile dynamic position operands with the static spec: python
+    ints fold into the MaskSpec's own offsets (static pruning and the
+    Pallas kernels keep working); traced values pass through untouched.
+    Returns ``(mask, q_offset, kv_offset, dynamic)``.  Shared by
+    ``chunk_attn`` and the chunked-lax backend so the fold semantics live
+    in one place."""
+    qo = 0 if q_offset is None else q_offset
+    ko = 0 if kv_offset is None else kv_offset
+    if isinstance(qo, int) and isinstance(ko, int):
+        if qo or ko:
+            mask = mask.replace(q_offset=mask.q_offset + qo,
+                                kv_offset=mask.kv_offset + ko)
+        return mask, 0, 0, False
+    return mask, qo, ko, True
+
+
 def ring_step(mask: MaskSpec, rel: int) -> MaskSpec:
     """Per-step spec for a ring schedule receiving a strictly-past KV chunk
     at distance ``rel`` (> 0): the causal constraint is statically
-    satisfied, so it is dropped; window / document constraints remain."""
-    return mask.replace(causal=False, q_offset=rel, kv_offset=0)
+    satisfied, so it is dropped; window / document constraints remain.
+    Static ``boundaries`` are stripped (they are absolute coordinates,
+    meaningless under per-step relative offsets) — the schedule executor
+    derives per-shard segment arrays from them instead."""
+    return mask.replace(causal=False, q_offset=rel, kv_offset=0,
+                        boundaries=None)
 
 
 def strict_causal_pair(mask: MaskSpec) -> MaskSpec:
     """Per-step spec for a (q-chunk, kv-chunk) pair the schedule proves
     strictly causal (balanced/zigzag off-diagonal pairs): only the
-    document constraint survives; positions are irrelevant."""
-    return mask.replace(causal=False, window=0, q_offset=0, kv_offset=0)
+    document constraint survives; positions are irrelevant (``boundaries``
+    stripped, as in :func:`ring_step`)."""
+    return mask.replace(causal=False, window=0, q_offset=0, kv_offset=0,
+                        boundaries=None)
+
+
+def offdiag_step(mask: MaskSpec) -> MaskSpec:
+    """Per-step spec for a strictly-causal pair whose *chunk distance
+    varies per device* (zigzag mirror-chunk pairs): the causal constraint
+    is statically satisfied and dropped, the window band survives, and the
+    positions come from dynamic ``q_offset``/``kv_offset`` operands at
+    execution time (so the spec's own offsets stay 0)."""
+    return mask.replace(causal=False, q_offset=0, kv_offset=0,
+                        boundaries=None)
+
+
+def chunk_pair_needed(mask: MaskSpec, q_lo: int, q_hi: int,
+                      k_lo: int, k_hi: int) -> bool:
+    """Static feasibility of one (q-chunk, kv-chunk) token-range pair:
+    could *any* ``(qp, kp)`` with ``qp ∈ [q_lo, q_hi]``, ``kp ∈ [k_lo,
+    k_hi]`` attend under ``mask`` (absolute positions)?  Conservative —
+    ``False`` only when the pair is provably all-masked, which is what
+    lets the schedule planner drop steps/work items statically.  Dynamic
+    segment arrays are unknowable here and never cause pruning; static
+    ``boundaries`` do."""
+    if mask.prefix_len:
+        return True                      # prefix relaxes; never prune
+    if mask.causal and k_lo > q_hi:
+        return False                     # strictly future chunk
+    if mask.window and mask.window > 0:
+        min_dist = max(q_lo - k_hi, 0)   # closest reachable pair
+        if min_dist >= mask.window:
+            return False                 # whole pair beyond the band
+    if mask.document and mask.boundaries is not None:
+        # same-document pair exists iff the segment ranges intersect
+        if (mask.segment_index(q_hi) < mask.segment_index(k_lo)
+                or mask.segment_index(k_hi) < mask.segment_index(q_lo)):
+            return False
+    return True
 
 
 def doc_boundaries(T: int, n_docs: int) -> Tuple[int, ...]:

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.mask import MaskSpec, as_spec
+from repro.core.mask import MaskSpec, as_spec, fold_offsets
 from repro.kernels.block_sparse import kv_block_bounds
 from repro.kernels.block_sparse import pick_block as _pick_block
 from repro.kernels.ref import (NEG_INF, chunk_attn_bwd_ref, chunk_attn_ref,
@@ -58,18 +58,23 @@ def _seg_chunks(seg, sl, nv, bc):
 
 def chunked_fwd(q, k, v, *, mask=None, causal=False, rel_offset=0, window=0,
                 scale=None, block_kv=DEFAULT_BLOCK_KV, block_q=None,
-                prune=True, q_segments=None, kv_segments=None):
+                prune=True, q_segments=None, kv_segments=None,
+                q_offset=0, kv_offset=0):
     """Partial attention, chunk_attn semantics: returns (o, lse).
     ``block_q`` is accepted for tuning-surface uniformity with the Pallas
-    backend (queries are not blocked here)."""
+    backend (queries are not blocked here). ``q_offset``/``kv_offset`` are
+    extra position operands (ints fold into the mask; traced values ride
+    through to the reference kernel and disable static pruning)."""
     del block_q
     mask = as_spec(mask, causal=causal, window=window,
                    rel_offset=rel_offset)
+    mask, q_offset, kv_offset, dyn = fold_offsets(mask, q_offset, kv_offset)
     B, Tq, Hq, _ = q.shape
     Tk = k.shape[1]
     Dv = v.shape[-1]
     bc = _pick_block(Tk, block_kv)
-    lo, hi = _valid_span(Tq, Tk, bc, mask, prune)
+    # traced offsets leave the band location unknown: no static pruning
+    lo, hi = _valid_span(Tq, Tk, bc, mask, prune and not dyn)
     if hi < lo:                                  # statically fully masked
         return (jnp.zeros((B, Tq, Hq, Dv), q.dtype),
                 jnp.full((B, Tq, Hq), NEG_INF, jnp.float32))
@@ -77,7 +82,8 @@ def chunked_fwd(q, k, v, *, mask=None, causal=False, rel_offset=0, window=0,
     if nv == 1:
         return chunk_attn_ref(q, k[:, lo * bc:(lo + 1) * bc],
                               v[:, lo * bc:(lo + 1) * bc], mask=mask,
-                              kv_offset=lo * bc, scale=scale,
+                              q_offset=q_offset,
+                              kv_offset=kv_offset + lo * bc, scale=scale,
                               q_segments=q_segments,
                               kv_segments=None if kv_segments is None else
                               jnp.asarray(kv_segments)[:,
@@ -90,7 +96,8 @@ def chunked_fwd(q, k, v, *, mask=None, causal=False, rel_offset=0, window=0,
     def body(carry, blk):
         o_acc, l_acc = carry
         kj, vj, off, sj = blk
-        o_j, l_j = chunk_attn_ref(q, kj, vj, mask=mask, kv_offset=off,
+        o_j, l_j = chunk_attn_ref(q, kj, vj, mask=mask, q_offset=q_offset,
+                                  kv_offset=kv_offset + off,
                                   scale=scale, q_segments=q_segments,
                                   kv_segments=sj)
         o_n, l_n = merge_ref(o_acc, l_acc, o_j.astype(jnp.float32), l_j)
@@ -105,16 +112,17 @@ def chunked_fwd(q, k, v, *, mask=None, causal=False, rel_offset=0, window=0,
 def chunked_bwd(q, k, v, o, lse, do, *, mask=None, causal=False,
                 rel_offset=0, window=0, scale=None, delta=None,
                 block_kv=DEFAULT_BLOCK_KV, block_q=None, prune=True,
-                q_segments=None, kv_segments=None):
+                q_segments=None, kv_segments=None, q_offset=0, kv_offset=0):
     """FA2 backward from saved (o, lse), blocked over KV chunks.
     Returns (dq, dk, dv); dk/dv are zeros on statically-masked chunks."""
     del block_q
     mask = as_spec(mask, causal=causal, window=window,
                    rel_offset=rel_offset)
+    mask, q_offset, kv_offset, dyn = fold_offsets(mask, q_offset, kv_offset)
     B, Tq, Hq, _ = q.shape
     Tk, Hkv = k.shape[1], k.shape[2]
     bc = _pick_block(Tk, block_kv)
-    lo, hi = _valid_span(Tq, Tk, bc, mask, prune)
+    lo, hi = _valid_span(Tq, Tk, bc, mask, prune and not dyn)
     if hi < lo:                                  # statically fully masked
         return (jnp.zeros_like(q), jnp.zeros_like(k), jnp.zeros_like(v))
     if delta is None:
@@ -124,7 +132,8 @@ def chunked_bwd(q, k, v, o, lse, do, *, mask=None, causal=False,
     sl = slice(lo * bc, (hi + 1) * bc)
     if nv == 1:
         dq, dk_s, dv_s = chunk_attn_bwd_ref(
-            q, k[:, sl], v[:, sl], o, lse, do, mask=mask, kv_offset=lo * bc,
+            q, k[:, sl], v[:, sl], o, lse, do, mask=mask, q_offset=q_offset,
+            kv_offset=kv_offset + lo * bc,
             scale=scale, delta=delta, q_segments=q_segments,
             kv_segments=None if kv_segments is None else
             jnp.asarray(kv_segments)[:, sl])
@@ -138,7 +147,8 @@ def chunked_bwd(q, k, v, o, lse, do, *, mask=None, causal=False,
     def body(dq_acc, blk):
         kj, vj, off, sj = blk
         dq_j, dk_j, dv_j = chunk_attn_bwd_ref(
-            q, kj, vj, o, lse, do, mask=mask, kv_offset=off, scale=scale,
+            q, kj, vj, o, lse, do, mask=mask, q_offset=q_offset,
+            kv_offset=kv_offset + off, scale=scale,
             delta=delta, q_segments=q_segments, kv_segments=sj)
         return dq_acc + dq_j.astype(jnp.float32), (dk_j, dv_j)
 

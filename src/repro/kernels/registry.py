@@ -71,6 +71,11 @@ class BackendSpec:
     # chunk_attn only forwards the hints to backends with this flag set, so
     # schedules can pick block shapes per step without knowing the backend
     tunable_blocks: bool = False
+    # accepts *traced* q_offset/kv_offset position operands (fwd/bwd take
+    # them as kwargs). Needed by schedule steps whose chunk distance
+    # depends on the device index (zigzag window bands); static int offsets
+    # are folded into the MaskSpec and never reach the backend.
+    dynamic_offsets: bool = False
     fallback: Tuple[str, ...] = ()  # tried in order when this can't run
     description: str = ""
 
@@ -96,7 +101,8 @@ class BackendSpec:
 
     def unsupported_reason(self, *, platform: str,
                            mask: Optional[MaskSpec] = None,
-                           dtype=None) -> Optional[str]:
+                           dtype=None,
+                           dynamic_offsets: bool = False) -> Optional[str]:
         """None if this backend can serve the request, else why not."""
         if platform not in self.platforms:
             return f"platform {platform!r} not in {self.platforms}"
@@ -107,6 +113,8 @@ class BackendSpec:
                         f"(has {sorted(self.mask_kinds)})")
         if dtype is not None and jnp.dtype(dtype).name not in self.dtypes:
             return f"dtype {jnp.dtype(dtype).name} not in {self.dtypes}"
+        if dynamic_offsets and not self.dynamic_offsets:
+            return "traced q_offset/kv_offset operands unsupported"
         return None
 
 
@@ -152,16 +160,19 @@ def current_platform() -> str:
 
 
 def resolve(impl: Optional[str] = None, platform: Optional[str] = None, *,
-            mask: Optional[MaskSpec] = None, dtype=None) -> BackendSpec:
+            mask: Optional[MaskSpec] = None, dtype=None,
+            dynamic_offsets: bool = False) -> BackendSpec:
     """Return a runnable backend for the request, walking fallbacks.
 
     ``impl=None`` uses the process default; ``mask`` is the MaskSpec the
-    call site will pass. A downgrade (requested backend can't serve the
-    request) is logged once per (requested, resolved, platform) triple; an
-    empty/cyclic fallback chain raises."""
+    call site will pass; ``dynamic_offsets`` marks a call that carries
+    traced position-offset operands. A downgrade (requested backend can't
+    serve the request) is logged once per (requested, resolved, platform)
+    triple; an empty/cyclic fallback chain raises."""
     platform = platform or current_platform()
     want = get(impl if impl is not None else default_name())
-    caps = dict(platform=platform, mask=mask, dtype=dtype)
+    caps = dict(platform=platform, mask=mask, dtype=dtype,
+                dynamic_offsets=dynamic_offsets)
     reason = want.unsupported_reason(**caps)
     if reason is None:
         return want
@@ -194,16 +205,18 @@ def resolve(impl: Optional[str] = None, platform: Optional[str] = None, *,
 # ==========================================================================
 
 def _ref_fwd(q, k, v, *, mask, scale=None, q_segments=None,
-             kv_segments=None):
+             kv_segments=None, q_offset=0, kv_offset=0):
     from repro.kernels.ref import chunk_attn_ref
     return chunk_attn_ref(q, k, v, mask=mask, scale=scale,
+                          q_offset=q_offset, kv_offset=kv_offset,
                           q_segments=q_segments, kv_segments=kv_segments)
 
 
 def _ref_bwd(q, k, v, o, lse, do, *, mask, scale=None, delta=None,
-             q_segments=None, kv_segments=None):
+             q_segments=None, kv_segments=None, q_offset=0, kv_offset=0):
     from repro.kernels.ref import chunk_attn_bwd_ref
     return chunk_attn_bwd_ref(q, k, v, o, lse, do, mask=mask, scale=scale,
+                              q_offset=q_offset, kv_offset=kv_offset,
                               delta=delta, q_segments=q_segments,
                               kv_segments=kv_segments)
 
@@ -275,11 +288,12 @@ def _null_bwd(q, k, v, o, lse, do, *, mask=None, scale=None, delta=None,
 
 register(BackendSpec(
     name="ref", fwd=_ref_fwd, bwd=_ref_bwd,
+    dynamic_offsets=True,
     description="pure-jnp oracle; full score matrix"))
 
 register(BackendSpec(
     name="chunked-lax", fwd=_chunked_fwd, bwd=_chunked_bwd,
-    tunable_blocks=True,
+    tunable_blocks=True, dynamic_offsets=True,
     fallback=("ref",),
     description="lax.scan-blocked online softmax; Pallas-free"))
 

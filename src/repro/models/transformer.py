@@ -84,10 +84,22 @@ def _attn_spec(cfg: ModelConfig, rt: Runtime, *, causal=True, window=None,
     if sched == "zigzag" and not _zigzag_ok(cfg):
         sched = "balanced"                      # graceful fallback
     mask = MaskSpec(causal=causal, window=int(w or 0), document=document)
+    if sched != "auto":                          # auto defers to the plans
+        if not causal and sched not in ("ulysses", "rsa"):
+            # bidirectional encoders; a non-causal *window* has future-
+            # direction bands only absolute-position schedules can see
+            sched = "ulysses" if w else "ring"
+        elif causal and w and sched not in ("balanced", "ring", "ulysses"):
+            sched = "balanced"                   # windowed plans truncate
     return DistAttnSpec(
-        axis=rt.par.seq_axis, axis_size=rt.seq_size,
-        schedule=sched if (causal and not w) else "ring",
+        axis=rt.par.seq_axis, axis_size=rt.seq_size, schedule=sched,
         mask=mask, scale=scale, impl=rt.impl)
+
+
+def _decode_mask(window) -> MaskSpec:
+    """Decode-time mask: the new token is last, so the only kinds are the
+    whole cache (causal) or a sliding window."""
+    return mk.sliding_window(int(window)) if window else mk.causal()
 
 
 # ==========================================================================
@@ -542,7 +554,7 @@ class DecoderLM:
             o = dist_decode_attn(q, ck, cv, k, v, mesh=rt.mesh,
                                  seq_axes=rt.par.seq_axes,
                                  batch_axes=rt.par.batch_axes,
-                                 window=a.window)
+                                 mask=_decode_mask(a.window))
             ck = _cache_write(ck, k, pos, rt)
             cv = _cache_write(cv, v, pos, rt)
             h2 = L.attn_out(lp["attn"], h, o, cfg)
@@ -632,7 +644,7 @@ class DecoderLM:
         o_lat = dist_decode_attn(
             q_full, ck[:, :, None, :], ck[:, :, None, :c], new, new[..., :c],
             mesh=rt.mesh, seq_axes=rt.par.seq_axes,
-            batch_axes=rt.par.batch_axes, window=a.window,
+            batch_axes=rt.par.batch_axes, mask=_decode_mask(a.window),
             scale=L.mla_scale(cfg))                          # (B,1,nh,c)
         o = jnp.einsum("bthc,chv->bthv", o_lat.astype(jnp.float32),
                        w_uv.astype(jnp.float32)).astype(h.dtype)
@@ -663,7 +675,8 @@ class DecoderLM:
             q, k, v = L.attn_qkv(p["shared"]["attn"], x2, scfg, cos, sin)
             o = dist_decode_attn(q, sk, sv, k, v, mesh=rt.mesh,
                                  seq_axes=rt.par.seq_axes,
-                                 batch_axes=rt.par.batch_axes)
+                                 batch_axes=rt.par.batch_axes,
+                                 mask=_decode_mask(0))
             sk = _cache_write(sk, k, pos, rt)
             sv = _cache_write(sv, v, pos, rt)
             y2 = L.attn_out(p["shared"]["attn"], x2, o, scfg)
@@ -914,7 +927,7 @@ class EncDecLM:
             o = dist_decode_attn(q, ck, cv, k, v, mesh=rt.mesh,
                                  seq_axes=rt.par.seq_axes,
                                  batch_axes=rt.par.batch_axes,
-                                 window=a.window)
+                                 mask=_decode_mask(a.window))
             ck = _cache_write(ck, k, pos, rt)
             cv = _cache_write(cv, v, pos, rt)
             h2 = L.attn_out(lp["attn"], h, o, cfg)

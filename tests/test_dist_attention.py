@@ -283,7 +283,10 @@ print("OK latent ring", d)
 def test_spec_validation_and_legacy_shim():
     """Satellite: schedule typos raise at spec construction (no silent ring
     fallthrough), schedule-capability mismatches raise, and the deprecated
-    causal/window kwargs still map onto a MaskSpec (with a warning)."""
+    causal/window kwargs still map onto a MaskSpec (with a warning).
+    Plan-IR era: balanced/zigzag accept sliding windows (plans truncate)
+    and the ring family accepts static document boundaries (executors
+    derive per-shard segment IDs) — those constructions must NOT raise."""
     import warnings
 
     import pytest as pt
@@ -295,24 +298,32 @@ def test_spec_validation_and_legacy_shim():
         da.DistAttnSpec(schedule="blanced")
     with pt.raises(ValueError, match="unknown schedule"):
         da.DistAttnSpec(schedule="rsa ")
-    with pt.raises(ValueError, match="causal full-window"):
-        da.DistAttnSpec(axis_size=8, schedule="balanced",
-                        mask=mk.sliding_window(64))
-    with pt.raises(ValueError, match="causal full-window"):
+    with pt.raises(ValueError, match="causal-kind"):
         da.DistAttnSpec(axis_size=8, schedule="zigzag", mask=mk.full())
+    with pt.raises(ValueError, match="causal-kind"):
+        da.DistAttnSpec(axis_size=8, schedule="balanced",
+                        mask=mk.prefix_lm(64))
     with pt.raises(ValueError, match="prefix_lm"):
         da.DistAttnSpec(axis_size=8, schedule="ring", mask=mk.prefix_lm(64))
-    with pt.raises(ValueError, match="boundaries"):
+    with pt.raises(ValueError, match="sliding-window"):
+        da.DistAttnSpec(axis_size=8, schedule="rsa",
+                        mask=mk.sliding_window(64))
+    # a non-causal band has future-direction pairs no ring step can see
+    with pt.raises(ValueError, match="future-direction"):
         da.DistAttnSpec(axis_size=8, schedule="ring",
-                        mask=mk.document(boundaries=(0, 64)))
+                        mask=mk.sliding_window(64, causal=False))
     with pt.raises(ValueError, match="not both"):
         da.DistAttnSpec(schedule="ring", mask=mk.causal(), causal=True)
-    # baselines are fwd-only for absolute-coordinate masks: their backward
-    # (the ring) must raise instead of silently mis-masking
-    spec_b = da.DistAttnSpec(axis_size=8, schedule="ulysses",
-                             mask=mk.document(boundaries=(0, 64)))
-    with pt.raises(ValueError, match="boundaries"):
-        da._bwd_local(spec_b, *([None] * 6))
+    # plan-era capability widenings: these construct fine now
+    da.DistAttnSpec(axis_size=8, schedule="balanced",
+                    mask=mk.sliding_window(64))
+    da.DistAttnSpec(axis_size=8, schedule="zigzag",
+                    mask=mk.sliding_window(64))
+    da.DistAttnSpec(axis_size=8, schedule="ring",
+                    mask=mk.document(boundaries=(0, 64)))
+    da.DistAttnSpec(axis_size=8, schedule="auto", mask=mk.prefix_lm(8))
+    # prefix_lm has no distributed backward anywhere (the baselines reuse
+    # the ring backward, which can't see absolute positions)
     spec_p = da.DistAttnSpec(axis_size=8, schedule="ulysses",
                              mask=mk.prefix_lm(8))
     with pt.raises(ValueError, match="prefix_lm"):
@@ -331,6 +342,26 @@ def test_spec_validation_and_legacy_shim():
     assert spec.mask == mk.sliding_window(40)
     # default stays causal/full — and balanced accepts it
     assert da.DistAttnSpec(axis_size=8).mask == mk.causal()
+    # the decode entry point's window= kwarg is a deprecated shim too
+    mk._DEPRECATION_WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import jax
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        import jax.numpy as jnp
+        z4 = jnp.zeros((1, 1, 2, 8))
+        zc = jnp.zeros((1, 4, 2, 8))
+        da.dist_decode_attn(z4, zc, zc, z4, z4, mesh=mesh,
+                            seq_axes=("model",), batch_axes=None, window=2)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    with pt.raises(ValueError, match="not both"):
+        da.dist_decode_attn(z4, zc, zc, z4, z4, mesh=mesh,
+                            seq_axes=("model",), batch_axes=None,
+                            mask=mk.causal(), window=2)
+    with pt.raises(ValueError, match="causal/sliding_window"):
+        da.dist_decode_attn(z4, zc, zc, z4, z4, mesh=mesh,
+                            seq_axes=("model",), batch_axes=None,
+                            mask=mk.document())
 
 
 def test_document_mask_all_schedules(subproc):
