@@ -41,8 +41,8 @@ def main():
             print(f"step {i:3d}  loss {float(m['loss']):.4f}")
 
     print("\ngenerating…")
-    eng = Engine(model, params)
-    toks, _ = eng.generate(ds.batch(0), n_tokens=8)
+    eng = Engine(model, params)                  # paged continuous batching
+    toks = eng.generate(ds.batch(0), n_tokens=8)
     print("greedy continuation of request 0:", [int(t) for t in toks[0]])
 
 

@@ -195,6 +195,39 @@ def _decode_attn_site(*, B, S, seq_shards, H, hd_qk, hd_v, Hkv, window,
     return flops, bytes_
 
 
+def paged_decode_terms(cfg, *, batch, mean_len, block_size, bpe=2):
+    """Roofline terms of ONE paged flash-decode step (all layers) at mean
+    in-flight context length ``mean_len``: kernel FLOPs, HBM bytes of the
+    block-table gather (KV streamed in whole blocks — the read-side cost of
+    paging is the partial last block, reported as ``block_waste``), plus
+    the table/q/o traffic.  Feeds the serving bench's predicted tok/s bound
+    next to its measured numbers."""
+    a = cfg.attn
+    if a is None:
+        return None
+    is_mla = a.is_mla
+    if is_mla:
+        hd_qk = a.kv_lora_rank + a.qk_rope_head_dim
+        hd_v = a.kv_lora_rank
+        Hkv = 1
+    else:
+        hd_qk = hd_v = a.head_dim
+        Hkv = a.n_kv_heads
+    H = a.n_heads
+    L_ = cfg.n_layers
+    w = min(a.window, mean_len) if a.window else mean_len
+    blocks = -(-w // block_size)
+    toks_read = blocks * block_size
+    flops = L_ * 2 * batch * w * H * (hd_qk + hd_v)
+    kv_bytes = L_ * batch * toks_read * Hkv * (hd_qk + hd_v) * bpe
+    table_bytes = L_ * batch * blocks * 4
+    qo_bytes = L_ * batch * H * (hd_qk + hd_v) * bpe
+    terms = roofline_terms(flops, kv_bytes + table_bytes + qo_bytes, 0.0)
+    terms["block_waste"] = toks_read / max(w, 1) - 1.0
+    terms["tok_s_bound"] = batch / max(terms["step_s_lower_bound"], 1e-12)
+    return terms
+
+
 def attention_analytic(cfg, shape, *, seq_shards, batch_shards):
     """Total analytic kernel (flops, bytes) per chip for all attention
     sites of one (arch × shape)."""

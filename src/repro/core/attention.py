@@ -116,6 +116,25 @@ def chunk_attn_bwd(q, k, v, o, lse, do, *, mask: MaskSpec | None = None,
                   **_tuning_kw(be, block_q, block_kv))
 
 
+def paged_decode_attn(q, k_pool, v_pool, block_table, lengths, *,
+                      mask: MaskSpec | None = None, scale=None, impl=None):
+    """One-token decode attention through a paged KV cache (serving).
+
+    ``q``: (B, 1, Hq, Dq); ``k_pool``/``v_pool``: (N, block_size, Hkv, D)
+    block pools; ``block_table``: (B, nb) int32 block ids per request;
+    ``lengths``: (B,) int32 attendable context lengths (the new token's
+    K/V must already be written — serve/cache.py's write-then-attend
+    contract). ``mask`` is a causal/sliding_window MaskSpec (the decode
+    token is last, so those are the only kinds with decode meaning);
+    resolution requires the backend's ``paged`` capability and walks the
+    usual fallback chain (``pallas`` on CPU runs ``pallas-interpret`` /
+    ``chunked-lax``). Returns o (B, 1, Hq, Dv)."""
+    mask = mk.causal() if mask is None else mask
+    be = registry.resolve(impl, mask=mask, dtype=q.dtype, paged=True)
+    return be.paged_fwd(q, k_pool, v_pool, block_table, lengths, mask=mask,
+                        scale=scale)
+
+
 merge = merge_ref  # (o1, lse1, o2, lse2) -> (o, lse)
 
 

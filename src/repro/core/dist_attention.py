@@ -410,10 +410,14 @@ def dist_flash_attn(q, k, v, mesh, spec, batch_axes=("data",),
 # Decode-time distributed attention (flash-decoding over sequence shards)
 # --------------------------------------------------------------------------
 
-def _decode_local(seq_axes, shard_len, window, scale, q, kc, vc, k1, v1):
+def _decode_local(seq_axes, shard_len, window, scale, has_pos, q, kc, vc,
+                  k1, v1, pos=None):
     """q: (B,1,Hq,D) replicated over seq axes; kc/vc: (B,S_loc,Hkv,Dk/Dv)
     local cache shards; k1/v1: (B,1,...) the new token's k/v (replicated).
-    Total context = S_global cached + 1 new token at position S_global."""
+    ``pos`` (B,) — per-request valid-context lengths: request b's new token
+    sits at position pos[b] and only cache slots < pos[b] are attendable
+    (window measured from pos[b]). Without ``pos`` (legacy), the whole
+    cache is context: S_global cached + 1 new token at position S_global."""
     # linearized shard index over (possibly multiple) sequence axes
     idx = jnp.int32(0)
     for ax in seq_axes:
@@ -431,11 +435,19 @@ def _decode_local(seq_axes, shard_len, window, scale, q, kc, vc, k1, v1):
     kf = jnp.repeat(kc, g, axis=2) if g > 1 else kc
     vf = jnp.repeat(vc, g, axis=2) if g > 1 else vc
     s_loc = jnp.einsum("bqhd,bkhd->bhqk", qf, kf.astype(jnp.float32)) * sc
-    if window and window > 0:
-        # new token position = S_total; attendable cache: pos > S_total−window
-        kpos = offset + jnp.arange(shard_len)
-        ok = kpos[None, None, None, :] > S_total - window
+    kpos = (offset + jnp.arange(shard_len))[None, None, None, :]
+    if has_pos:
+        # per-request masking: slot j attendable iff j < pos_b (and inside
+        # the sliding window measured from the new token at pos_b)
+        pb = pos[:, None, None, None]
+        ok = kpos < pb
+        if window and window > 0:
+            ok = ok & (kpos > pb - window)
         s_loc = jnp.where(ok, s_loc, NEG_INF)
+    elif window and window > 0:
+        # legacy: new token position = S_total; attendable cache slots are
+        # those with pos > S_total − window
+        s_loc = jnp.where(kpos > S_total - window, s_loc, NEG_INF)
     m_loc = jnp.max(s_loc, axis=-1)                      # (B,H,1)
     m_glb = lax.pmax(m_loc, seq_axes)
     m_safe = jnp.maximum(m_glb, NEG_INF / 2)
@@ -475,7 +487,7 @@ def _merge_bh(o1, lse1, o2, lse2):
 def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
                      seq_axes=("model",), batch_axes=("data",),
                      mask: Optional[MaskSpec] = None, window=None,
-                     scale=None, shard_len=None):
+                     scale=None, shard_len=None, pos=None):
     """One-token decode against a sequence-sharded KV cache.
 
     The cache's sequence dim is sharded over ``seq_axes`` (supports the 2D
@@ -489,6 +501,14 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
     token always sits at the end of the context, so those are the only
     kinds decode can express.  The pre-MaskSpec ``window=`` kwarg remains
     as a deprecated shim (one DeprecationWarning per process).
+
+    ``pos`` (B,) int32 — per-request valid-context lengths (continuous
+    batching admits requests at different times, so each batch row has its
+    own position): cache slots ≥ pos[b] are masked for request b and the
+    sliding window is measured from pos[b].  ``pos=None`` keeps the legacy
+    whole-cache semantics; a scalar ``pos`` is broadcast over the batch
+    with a one-shot DeprecationWarning (it silently mis-masks mixed-length
+    batches).
     """
     if mask is None:
         if window is not None:
@@ -518,12 +538,24 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
     seq = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
     rep = P(b, None, None, None)
     shd = P(b, seq, None, None)
+    in_specs = [rep, shd, shd, rep, rep]
+    args = [q, k_cache, v_cache, k_new, v_new]
+    if pos is not None:
+        pos = jnp.asarray(pos)
+        if pos.ndim == 0:
+            mk.warn_legacy_once(
+                "dist_decode_attn(pos=<scalar>)",
+                "a (B,) per-request position vector")
+            pos = jnp.broadcast_to(pos, (q.shape[0],))
+        in_specs.append(P(b))
+        args.append(pos)
     fn = compat.shard_map(
-        partial(_decode_local, tuple(seq_axes), shard_len, w, scale),
+        partial(_decode_local, tuple(seq_axes), shard_len, w, scale,
+                pos is not None),
         mesh=mesh,
-        in_specs=(rep, shd, shd, rep, rep),
+        in_specs=tuple(in_specs),
         out_specs=rep, check_vma=False)
-    return fn(q, k_cache, v_cache, k_new, v_new)
+    return fn(*args)
 
 
 # --------------------------------------------------------------------------

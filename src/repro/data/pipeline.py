@@ -78,10 +78,10 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec, par: ParallelConfig,
                 shard["segment_ids"] = tok
         return batch, shard
 
-    # ---- decode: one token + cache of T context
+    # ---- decode: one token + per-request positions + cache of T context
     batch = {"token": sds((B, 1), jnp.int32),
-             "pos": sds((), jnp.int32)}
-    shard = {"token": rep2, "pos": P()}
+             "pos": sds((B,), jnp.int32)}
+    shard = {"token": rep2, "pos": P(_bs(par))}
     cache, cshard = cache_specs(cfg, shape, par)
     return {**batch, "cache": cache}, {**shard, "cache": cshard}
 

@@ -76,6 +76,12 @@ class BackendSpec:
     # depends on the device index (zigzag window bands); static int offsets
     # are folded into the MaskSpec and never reach the backend.
     dynamic_offsets: bool = False
+    # paged flash-decode entry point (serving): block-table-gathering
+    # one-token decode attention with signature
+    # ``paged_fwd(q, k_pool, v_pool, block_table, lengths, *, mask, scale)
+    # -> o``; None = backend has no paged path (resolve(paged=True) walks
+    # the fallback chain past it).
+    paged_fwd: Optional[Callable] = None
     fallback: Tuple[str, ...] = ()  # tried in order when this can't run
     description: str = ""
 
@@ -99,10 +105,16 @@ class BackendSpec:
     def rel_offset(self) -> bool:
         return True    # every backend handles static chunk offsets
 
+    @property
+    def paged(self) -> bool:
+        """Capability flag: serves block-table (paged KV cache) decode."""
+        return self.paged_fwd is not None
+
     def unsupported_reason(self, *, platform: str,
                            mask: Optional[MaskSpec] = None,
                            dtype=None,
-                           dynamic_offsets: bool = False) -> Optional[str]:
+                           dynamic_offsets: bool = False,
+                           paged: bool = False) -> Optional[str]:
         """None if this backend can serve the request, else why not."""
         if platform not in self.platforms:
             return f"platform {platform!r} not in {self.platforms}"
@@ -115,6 +127,8 @@ class BackendSpec:
             return f"dtype {jnp.dtype(dtype).name} not in {self.dtypes}"
         if dynamic_offsets and not self.dynamic_offsets:
             return "traced q_offset/kv_offset operands unsupported"
+        if paged and not self.paged:
+            return "no paged (block-table) decode path"
         return None
 
 
@@ -161,18 +175,20 @@ def current_platform() -> str:
 
 def resolve(impl: Optional[str] = None, platform: Optional[str] = None, *,
             mask: Optional[MaskSpec] = None, dtype=None,
-            dynamic_offsets: bool = False) -> BackendSpec:
+            dynamic_offsets: bool = False,
+            paged: bool = False) -> BackendSpec:
     """Return a runnable backend for the request, walking fallbacks.
 
     ``impl=None`` uses the process default; ``mask`` is the MaskSpec the
     call site will pass; ``dynamic_offsets`` marks a call that carries
-    traced position-offset operands. A downgrade (requested backend can't
+    traced position-offset operands; ``paged=True`` requires the backend's
+    block-table decode path. A downgrade (requested backend can't
     serve the request) is logged once per (requested, resolved, platform)
     triple; an empty/cyclic fallback chain raises."""
     platform = platform or current_platform()
     want = get(impl if impl is not None else default_name())
     caps = dict(platform=platform, mask=mask, dtype=dtype,
-                dynamic_offsets=dynamic_offsets)
+                dynamic_offsets=dynamic_offsets, paged=paged)
     reason = want.unsupported_reason(**caps)
     if reason is None:
         return want
@@ -264,6 +280,27 @@ def _pallas_bwd(interpret):
     return bwd
 
 
+def _paged_ref(q, k_pool, v_pool, block_table, lengths, *, mask, scale=None):
+    from repro.kernels.paged import paged_attn_ref
+    return paged_attn_ref(q, k_pool, v_pool, block_table, lengths,
+                          mask=mask, scale=scale)
+
+
+def _paged_chunked(q, k_pool, v_pool, block_table, lengths, *, mask,
+                   scale=None):
+    from repro.kernels.paged import paged_attn_chunked
+    return paged_attn_chunked(q, k_pool, v_pool, block_table, lengths,
+                              mask=mask, scale=scale)
+
+
+def _paged_pallas(interpret):
+    def fwd(q, k_pool, v_pool, block_table, lengths, *, mask, scale=None):
+        from repro.kernels.paged import paged_attn_pallas
+        return paged_attn_pallas(q, k_pool, v_pool, block_table, lengths,
+                                 mask=mask, scale=scale, interpret=interpret)
+    return fwd
+
+
 def _null_fwd(q, k, v, *, mask=None, scale=None, q_segments=None,
               kv_segments=None):
     # dry-run cost-isolation stub: shape-correct, data-dependent (so XLA
@@ -288,26 +325,26 @@ def _null_bwd(q, k, v, o, lse, do, *, mask=None, scale=None, delta=None,
 
 register(BackendSpec(
     name="ref", fwd=_ref_fwd, bwd=_ref_bwd,
-    dynamic_offsets=True,
+    dynamic_offsets=True, paged_fwd=_paged_ref,
     description="pure-jnp oracle; full score matrix"))
 
 register(BackendSpec(
     name="chunked-lax", fwd=_chunked_fwd, bwd=_chunked_bwd,
-    tunable_blocks=True, dynamic_offsets=True,
+    tunable_blocks=True, dynamic_offsets=True, paged_fwd=_paged_chunked,
     fallback=("ref",),
     description="lax.scan-blocked online softmax; Pallas-free"))
 
 register(BackendSpec(
     name="pallas", fwd=_pallas_fwd(False), bwd=_pallas_bwd(False),
     platforms=("tpu",), dtypes=("float32", "bfloat16"),
-    tunable_blocks=True,
+    tunable_blocks=True, paged_fwd=_paged_pallas(False),
     fallback=("pallas-interpret", "chunked-lax", "ref"),
     description="compiled Pallas TPU FlashAttention-2 kernel"))
 
 register(BackendSpec(
     name="pallas-interpret", fwd=_pallas_fwd(True), bwd=_pallas_bwd(True),
     dtypes=("float32", "bfloat16"),
-    tunable_blocks=True,
+    tunable_blocks=True, paged_fwd=_paged_pallas(True),
     fallback=("chunked-lax", "ref"),
     description="Pallas kernel body under the interpreter (validation)"))
 

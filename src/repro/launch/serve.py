@@ -1,8 +1,10 @@
-"""Serving driver: prefill a batch of synthetic prompts and decode N tokens
-through the sequence-sharded KV cache.
+"""Serving driver: continuous-batching paged-KV serving of synthetic
+prompts (default), or the legacy fixed-slot dense-cache engine
+(``--fixed-slot``) for A/B comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-        --prompt-len 128 --gen 16 --batch 4 [--window 64]
+        --prompt-len 128 --gen 16 --batch 4 [--window 64] \
+        [--block-size 16 --n-blocks 128] [--fixed-slot]
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ from repro.data.pipeline import SyntheticTokens
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models.transformer import Runtime, build_model
 from repro.parallel.sharding import make_parallel_config
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, FixedSlotEngine
 
 
 def main(argv=None):
@@ -32,6 +34,11 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mesh", default="local")
     ap.add_argument("--seq-shards", type=int, default=1)
+    ap.add_argument("--fixed-slot", action="store_true",
+                    help="legacy dense-cache engine instead of paged")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="paged pool size (0 = sized to the workload)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -48,15 +55,28 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     batch = SyntheticTokens(cfg, shape, par, mesh).batch(0)
 
-    eng = Engine(model, params)
-    t0 = time.time()
-    toks, logits = eng.generate(batch, args.gen,
-                                rng=jax.random.PRNGKey(1),
-                                temperature=args.temperature)
-    dt = time.time() - t0
+    if args.fixed_slot:
+        eng = FixedSlotEngine(model, params)
+        t0 = time.time()
+        toks, _ = eng.generate(batch, args.gen, rng=jax.random.PRNGKey(1),
+                               temperature=args.temperature)
+        dt = time.time() - t0
+        tag = "fixed-slot"
+    else:
+        blocks_per_req = -(-(args.prompt_len + args.gen) // args.block_size)
+        n_blocks = args.n_blocks or args.batch * blocks_per_req + 2
+        eng = Engine(model, params, max_batch=args.batch,
+                     block_size=args.block_size, n_blocks=n_blocks)
+        t0 = time.time()
+        toks = eng.generate(batch, args.gen, rng=jax.random.PRNGKey(1),
+                            temperature=args.temperature)
+        dt = time.time() - t0
+        tag = (f"paged bs={args.block_size} pool={n_blocks} "
+               f"steps={eng.stats['steps']} "
+               f"preempt={eng.stats['n_preemptions']}")
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"generated={args.gen} tokens in {dt:.2f}s "
-          f"({args.gen * args.batch / dt:.1f} tok/s)")
+          f"({args.gen * args.batch / dt:.1f} tok/s) [{tag}]")
     print("sampled token ids (first request):",
           [int(t) for t in toks[0][:16]])
     return 0

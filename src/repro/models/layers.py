@@ -51,12 +51,18 @@ def rope_tables(positions, dim, theta=10_000.0):
 
 
 def apply_rope(x, cos, sin):
-    """x: (B,T,H,D); cos/sin: (T, D/2). Rotates pairs (x[2i], x[2i+1])."""
+    """x: (B,T,H,D); cos/sin: (T, D/2) shared tables, or (B, T, D/2)
+    per-request tables (decode with per-request positions).
+    Rotates pairs (x[2i], x[2i+1])."""
     xf = x.astype(jnp.float32)
     x1 = xf[..., 0::2]
     x2 = xf[..., 1::2]
-    c = cos[None, :, None, :]
-    s = sin[None, :, None, :]
+    if cos.ndim == 3:                    # (B, T, D/2) per-request positions
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    else:
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
     r1 = x1 * c - x2 * s
     r2 = x2 * c + x1 * s
     out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)

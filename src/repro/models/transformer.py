@@ -34,7 +34,7 @@ from repro.core.dist_attention import (DistAttnSpec, dist_attn_bwd,
                                        dist_flash_attn)
 from repro.core.mask import MaskSpec
 from repro.core.remat import remat_aware
-from repro.core.attention import chunk_attn
+from repro.core.attention import chunk_attn, paged_decode_attn
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
@@ -100,6 +100,29 @@ def _decode_mask(window) -> MaskSpec:
     """Decode-time mask: the new token is last, so the only kinds are the
     whole cache (causal) or a sliding window."""
     return mk.sliding_window(int(window)) if window else mk.causal()
+
+
+def _norm_pos(pos, B):
+    """Per-request decode positions: (B,) int32.  A scalar (the pre-paged
+    shared position — it silently mis-masks mixed-length batches once
+    requests are admitted at different times) broadcasts with a one-shot
+    DeprecationWarning."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        mk.warn_legacy_once('decode(batch={"pos": <scalar>})',
+                            'a (B,) per-request position vector')
+        pos = jnp.broadcast_to(pos, (B,))
+    return pos.astype(jnp.int32)
+
+
+def _decode_rope(pos, dim, theta):
+    """Per-request rope tables for the decode token: (B, 1, dim/2)."""
+    cos, sin = L.rope_tables(pos, dim, theta)
+    return cos[:, None], sin[:, None]
+
+
+def _is_paged(cache) -> bool:
+    return isinstance(cache, dict) and "block_table" in cache
 
 
 # ==========================================================================
@@ -515,19 +538,32 @@ class DecoderLM:
 
     # -------------------------------------------------------------- decode
     def decode(self, p, cache, batch):
-        """One decode step: batch = {"token": (B,1) int32, "pos": scalar}."""
+        """One decode step: batch = {"token": (B,1) int32, "pos": (B,)}.
+
+        ``pos`` holds each request's current context length (its new token's
+        position); a scalar is a deprecated broadcast shim.  ``cache`` is
+        either the dense contiguous cache from :meth:`prefill` or a *paged
+        view* (``k_pool``/``v_pool`` or ``ckv_pool`` block pools +
+        ``block_table`` — see serve/cache.py), in which case the new
+        token's K/V is scattered into the request's current block and
+        attention gathers through the block table."""
         cfg, rt = self.cfg, self.rt
         at = cfg.arch_type
         tok = batch["token"]
-        pos = batch["pos"]
+        pos = _norm_pos(batch["pos"], tok.shape[0])
         h = p["embed"][tok].astype(self.dtype)        # (B,1,d)
         cos = sin = None
         if cfg.uses_attention:
             dim = (cfg.attn.qk_rope_head_dim if cfg.attn.is_mla
                    else cfg.attn.head_dim)
-            cos, sin = L.rope_tables(pos[None], dim, cfg.attn.rope_theta)
+            cos, sin = _decode_rope(pos, dim, cfg.attn.rope_theta)
         if at in ("dense", "vlm", "moe"):
-            h, cache = self._decode_attn_stack(p, cache, h, cos, sin, pos)
+            if _is_paged(cache):
+                h, cache = self._decode_attn_stack_paged(p, cache, h, cos,
+                                                         sin, pos)
+            else:
+                h, cache = self._decode_attn_stack(p, cache, h, cos, sin,
+                                                   pos)
         elif at == "ssm":
             def body(h, xs):
                 lp, st, cv = xs
@@ -554,7 +590,7 @@ class DecoderLM:
             o = dist_decode_attn(q, ck, cv, k, v, mesh=rt.mesh,
                                  seq_axes=rt.par.seq_axes,
                                  batch_axes=rt.par.batch_axes,
-                                 mask=_decode_mask(a.window))
+                                 mask=_decode_mask(a.window), pos=pos)
             ck = _cache_write(ck, k, pos, rt)
             cv = _cache_write(cv, v, pos, rt)
             h2 = L.attn_out(lp["attn"], h, o, cfg)
@@ -613,11 +649,89 @@ class DecoderLM:
                                          cache["v"]))
         return h, {"k": ck, "v": cv}
 
-    def _decode_mla(self, lp, h, ck, cv, cos, sin, pos):
-        """Absorbed MLA decode: the cache stores the compressed latent
-        (c_kv ⊕ rope-key), 576 dims/token instead of n_heads·(192+128) —
-        the MLA memory saving [arXiv:2405.04434]."""
+    def _decode_attn_stack_paged(self, p, cache, h, cos, sin, pos):
+        """Decode through a paged cache view: per layer, the new token's
+        K/V (or MLA latent) is scattered into the request's current block
+        (write-then-attend), then attention gathers the context through the
+        block table (``paged_decode_attn``).  ``cache`` = {"k_pool",
+        "v_pool"} or {"ckv_pool"} pools with leading layer dim +
+        "block_table" (B, nb); ``pos`` (B,) per-request context lengths."""
         cfg, rt = self.cfg, self.rt
+        a = cfg.attn
+        is_mla = a is not None and a.is_mla
+        bt = cache["block_table"]
+        lengths = pos + 1                          # incl. the written token
+
+        def one(lp, h, kp, vp):
+            if is_mla:
+                h2, kp = self._decode_mla_paged(lp, h, kp, cos, sin, pos,
+                                                bt, lengths)
+                return h2, kp, vp
+            q, k, v = L.attn_qkv(lp["attn"], h, cfg, cos, sin)
+            kp = _paged_write(kp, k, bt, pos)
+            vp = _paged_write(vp, v, bt, pos)
+            o = paged_decode_attn(q, kp, vp, bt, lengths,
+                                  mask=_decode_mask(a.window), impl=rt.impl)
+            h2 = L.attn_out(lp["attn"], h, o, cfg)
+            return h2, kp, vp
+
+        if cfg.arch_type == "moe":
+            nd = cfg.moe.n_dense_layers
+            if is_mla:
+                def bodyd(h, xs):
+                    lp, cp = xs
+                    h2, cp = self._decode_mla_paged(lp, h, cp, cos, sin,
+                                                    pos, bt, lengths)
+                    return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps), cp
+                def bodym(h, xs):
+                    lp, cp = xs
+                    h2, cp = self._decode_mla_paged(lp, h, cp, cos, sin,
+                                                    pos, bt, lengths)
+                    h3 = M.moe_decode_apply(lp["moe"], h2, cfg,
+                                            mesh=rt.mesh,
+                                            seq_axis=rt.par.seq_axis,
+                                            batch_axes=rt.par.batch_axes)
+                    return h3, cp
+                h, c1 = xscan(bodyd, h, (p["dense_layers"],
+                                         cache["ckv_pool"][:nd]))
+                h, c2 = xscan(bodym, h, (p["moe_layers"],
+                                         cache["ckv_pool"][nd:]))
+                return h, {"ckv_pool": jnp.concatenate([c1, c2]),
+                           "block_table": bt}
+            def bodyd(h, xs):
+                lp, kp, vp = xs
+                h2, kp, vp = one(lp, h, kp, vp)
+                return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps), (kp, vp)
+            def bodym(h, xs):
+                lp, kp, vp = xs
+                h2, kp, vp = one(lp, h, kp, vp)
+                h3 = M.moe_decode_apply(lp["moe"], h2, cfg, mesh=rt.mesh,
+                                        seq_axis=rt.par.seq_axis,
+                                        batch_axes=rt.par.batch_axes)
+                return h3, (kp, vp)
+            h, (k1, v1) = xscan(bodyd, h, (p["dense_layers"],
+                                           cache["k_pool"][:nd],
+                                           cache["v_pool"][:nd]))
+            h, (k2, v2) = xscan(bodym, h, (p["moe_layers"],
+                                           cache["k_pool"][nd:],
+                                           cache["v_pool"][nd:]))
+            return h, {"k_pool": jnp.concatenate([k1, k2]),
+                       "v_pool": jnp.concatenate([v1, v2]),
+                       "block_table": bt}
+
+        def body(h, xs):
+            lp, kp, vp = xs
+            h2, kp, vp = one(lp, h, kp, vp)
+            return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps), (kp, vp)
+        h, (kp, vp) = xscan(body, h, (p["layers"], cache["k_pool"],
+                                      cache["v_pool"]))
+        return h, {"k_pool": kp, "v_pool": vp, "block_table": bt}
+
+    def _mla_decode_parts(self, lp, h, cos, sin):
+        """Shared absorbed-MLA decode projections: effective latent-space
+        query ``q_full`` (B,1,nh,c+dr), the new token's latent cache entry
+        ``new`` (B,1,c+dr), and the value up-projection ``w_uv``."""
+        cfg = self.cfg
         a = cfg.attn
         p_ = lp["attn"]
         B = h.shape[0]
@@ -640,17 +754,54 @@ class DecoderLM:
         kv_a = hn @ p_["wkv_a"]
         ckv1 = L.rms_norm(kv_a[..., :c], p_["kv_ln"], cfg.norm_eps)
         kpe1 = L.apply_rope(kv_a[..., c:].reshape(B, 1, 1, dr), cos, sin)
-        new = jnp.concatenate([ckv1[:, :, None, :], kpe1], axis=-1)
-        o_lat = dist_decode_attn(
-            q_full, ck[:, :, None, :], ck[:, :, None, :c], new, new[..., :c],
-            mesh=rt.mesh, seq_axes=rt.par.seq_axes,
-            batch_axes=rt.par.batch_axes, mask=_decode_mask(a.window),
-            scale=L.mla_scale(cfg))                          # (B,1,nh,c)
+        new = jnp.concatenate([ckv1, kpe1[:, :, 0, :]], axis=-1)  # (B,1,c+dr)
+        return q_full, new, w_uv
+
+    def _mla_out(self, lp, h, o_lat, w_uv):
+        cfg = self.cfg
+        a = cfg.attn
+        nh = a.n_heads
+        dv = a.v_head_dim or a.head_dim
+        B = h.shape[0]
         o = jnp.einsum("bthc,chv->bthv", o_lat.astype(jnp.float32),
                        w_uv.astype(jnp.float32)).astype(h.dtype)
-        ck = _cache_write(ck, new[:, :, 0, :], pos, rt)
-        h2 = h + (o.reshape(B, 1, nh * dv) @ p_["wo"]).astype(h.dtype)
+        return h + (o.reshape(B, 1, nh * dv) @
+                    lp["attn"]["wo"]).astype(h.dtype)
+
+    def _decode_mla(self, lp, h, ck, cv, cos, sin, pos):
+        """Absorbed MLA decode: the cache stores the compressed latent
+        (c_kv ⊕ rope-key), 576 dims/token instead of n_heads·(192+128) —
+        the MLA memory saving [arXiv:2405.04434]."""
+        cfg, rt = self.cfg, self.rt
+        a = cfg.attn
+        c = a.kv_lora_rank
+        q_full, new, w_uv = self._mla_decode_parts(lp, h, cos, sin)
+        new4 = new[:, :, None, :]
+        o_lat = dist_decode_attn(
+            q_full, ck[:, :, None, :], ck[:, :, None, :c], new4,
+            new4[..., :c],
+            mesh=rt.mesh, seq_axes=rt.par.seq_axes,
+            batch_axes=rt.par.batch_axes, mask=_decode_mask(a.window),
+            scale=L.mla_scale(cfg), pos=pos)                 # (B,1,nh,c)
+        ck = _cache_write(ck, new, pos, rt)
+        h2 = self._mla_out(lp, h, o_lat, w_uv)
         return h2, ck, cv
+
+    def _decode_mla_paged(self, lp, h, cp, cos, sin, pos, bt, lengths):
+        """Paged absorbed-MLA decode: one latent pool (N, bs, c+dr); the
+        value view is a narrow slice of the key view (Hkv = 1)."""
+        cfg, rt = self.cfg, self.rt
+        a = cfg.attn
+        c = a.kv_lora_rank
+        q_full, new, w_uv = self._mla_decode_parts(lp, h, cos, sin)
+        cp = _paged_write(cp, new, bt, pos)
+        kview = cp[:, :, None, :]                  # (N, bs, 1, c+dr)
+        o_lat = paged_decode_attn(
+            q_full, kview, kview[..., :c], bt, lengths,
+            mask=_decode_mask(a.window), scale=L.mla_scale(cfg),
+            impl=rt.impl)
+        h2 = self._mla_out(lp, h, o_lat, w_uv)
+        return h2, cp
 
     def _decode_hybrid(self, p, cache, h, cos, sin, pos):
         cfg, rt = self.cfg, self.rt
@@ -676,7 +827,7 @@ class DecoderLM:
             o = dist_decode_attn(q, sk, sv, k, v, mesh=rt.mesh,
                                  seq_axes=rt.par.seq_axes,
                                  batch_axes=rt.par.batch_axes,
-                                 mask=_decode_mask(0))
+                                 mask=_decode_mask(0), pos=pos)
             sk = _cache_write(sk, k, pos, rt)
             sv = _cache_write(sv, v, pos, rt)
             y2 = L.attn_out(p["shared"]["attn"], x2, o, scfg)
@@ -694,13 +845,30 @@ class DecoderLM:
 
 
 # --------------------------------------------------------------------------
+# Paged-cache write: scatter the new token's K/V through the block table
+# --------------------------------------------------------------------------
+
+def _paged_write(pool, new, block_table, pos):
+    """Scatter ``new`` (B, 1, ...) into one layer's block ``pool``
+    (N, bs, ...) at each request's slot for context position ``pos`` (B,):
+    block ``block_table[b, pos_b // bs]``, offset ``pos_b % bs``.  Idle
+    batch rows (all-zero table rows) land in the reserved null block 0,
+    which ``lengths`` masking keeps unread."""
+    bs = pool.shape[1]
+    bidx = jnp.take_along_axis(block_table, (pos // bs)[:, None],
+                               axis=1)[:, 0]
+    return pool.at[bidx, pos % bs].set(new[:, 0].astype(pool.dtype))
+
+
+# --------------------------------------------------------------------------
 # KV-cache write: ring-buffer update of the sequence-sharded cache
 # --------------------------------------------------------------------------
 
 def _cache_write(cache, new, pos, rt: Runtime):
     """Write ``new`` (B,1,...) into the S-sharded ``cache`` (B,S,...) at
-    ring-buffer slot ``pos % S``. Done in a small shard_map: only the owner
-    shard scatters (no gather of the cache)."""
+    per-request ring-buffer slot ``pos[b] % S`` (``pos``: (B,) int32, or a
+    scalar that broadcasts). Done in a small shard_map: only the owner
+    shard of each request's slot scatters (no gather of the cache)."""
     par = rt.par
     seq_axes = par.seq_axes
     n = 1
@@ -712,21 +880,24 @@ def _cache_write(cache, new, pos, rt: Runtime):
     nd = cache.ndim
     cspec = P(bspec, seq, *([None] * (nd - 2)))
     rspec = P(bspec, None, *([None] * (nd - 2)))
+    pos = jnp.broadcast_to(jnp.asarray(pos), (cache.shape[0],))
 
-    def upd(c, x):
+    def upd(c, x, pv):
         idx = jnp.int32(0)
         for ax in seq_axes:
             idx = idx * compat.axis_size(ax) + lax.axis_index(ax)
-        slot = pos % (n * S_loc)
+        slot = pv % (n * S_loc)                       # (B,)
         owner = slot // S_loc
         local = slot % S_loc
-        upd_c = lax.dynamic_update_slice_in_dim(c, x.astype(c.dtype), local,
-                                                axis=1)
-        return jnp.where(idx == owner, upd_c, c)
+        hit = ((jnp.arange(S_loc)[None, :] == local[:, None])
+               & (owner == idx)[:, None])             # (B, S_loc)
+        hit = hit.reshape(hit.shape + (1,) * (c.ndim - 2))
+        return jnp.where(hit, x.astype(c.dtype), c)   # x (B,1,...) bcasts
 
-    fn = compat.shard_map(upd, mesh=rt.mesh, in_specs=(cspec, rspec),
+    fn = compat.shard_map(upd, mesh=rt.mesh, in_specs=(cspec, rspec,
+                                                       P(bspec)),
                        out_specs=cspec, check_vma=False)
-    return fn(cache, new)
+    return fn(cache, new, pos)
 
 
 # ==========================================================================
@@ -916,9 +1087,10 @@ class EncDecLM:
     def decode(self, p, cache, batch):
         cfg, rt = self.cfg, self.rt
         a = cfg.attn
-        tok, pos = batch["token"], batch["pos"]
+        tok = batch["token"]
+        pos = _norm_pos(batch["pos"], tok.shape[0])
         h = p["embed"][tok].astype(self.dtype)
-        cos, sin = L.rope_tables(pos[None], a.head_dim, a.rope_theta)
+        cos, sin = _decode_rope(pos, a.head_dim, a.rope_theta)
 
         def body(h, xs):
             lp, ck, cv, ek, ev = xs
@@ -927,7 +1099,7 @@ class EncDecLM:
             o = dist_decode_attn(q, ck, cv, k, v, mesh=rt.mesh,
                                  seq_axes=rt.par.seq_axes,
                                  batch_axes=rt.par.batch_axes,
-                                 mask=_decode_mask(a.window))
+                                 mask=_decode_mask(a.window), pos=pos)
             ck = _cache_write(ck, k, pos, rt)
             cv = _cache_write(cv, v, pos, rt)
             h2 = L.attn_out(lp["attn"], h, o, cfg)

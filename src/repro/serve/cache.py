@@ -1,0 +1,259 @@
+"""Paged KV cache: a fixed pool of ``block_size``-token KV blocks plus
+per-request block tables — the serving-side analogue of the paper's
+memory-efficiency discipline (no O(max_seq · max_batch) contiguous cache;
+fragmentation-free growth one block at a time).
+
+Layout (one pool entry per transformer layer, stacked on a leading L dim):
+
+  MHA / GQA   k_pool, v_pool : (L, N, block_size, n_kv_heads, head_dim)
+  MLA latent  ckv_pool       : (L, N, block_size, kv_lora + rope_dim)
+
+Block id 0 is the **reserved null block**: unused table entries and idle
+batch rows point at it, so gathers are always in-bounds and garbage is
+masked by ``lengths`` (kernels/paged.py).  The :class:`BlockAllocator`
+free-list therefore hands out ids ``1..N−1`` and enforces the allocator
+invariants the test suite checks (no double-alloc, owner-checked frees,
+conservation, deterministic exhaustion).
+
+Sharding: pools are placed with a NamedSharding when a mesh is given —
+the kv-head axis shards over the sequence-parallel ``model`` axis when the
+head count divides it (head-parallel decode, zero-communication gather),
+otherwise the pool-block axis shards (sequence-sharded pool, GSPMD inserts
+the gather collectives), otherwise the pool replicates.  The math is
+identical in all three placements, which is what the 8-device differential
+tests assert.
+
+The block *tables* are host-side numpy (the scheduler mutates them every
+step); a device copy ships with each decode step's inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+
+
+class PoolExhausted(RuntimeError):
+    """No free blocks — the scheduler preempts and requeues on this."""
+
+
+class BlockAllocator:
+    """Host-side free-list over block ids ``1..n_blocks−1`` (0 = null).
+
+    LIFO free-list with deterministic order: the same alloc/free sequence
+    always yields the same block ids (batch-invariance tests rely on the
+    *masking*, not the placement — but determinism keeps runs replayable).
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is the reserved "
+                             "null block)")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self._owner: Dict[int, int] = {}
+
+    @property
+    def n_usable(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, owner: int, n: int = 1) -> List[int]:
+        """Allocate ``n`` blocks for ``owner`` (a request id) — atomic:
+        raises :class:`PoolExhausted` without side effects if fewer than
+        ``n`` are free."""
+        if len(self._free) < n:
+            raise PoolExhausted(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(pool {self.n_usable})")
+        ids = [self._free.pop() for _ in range(n)]
+        for b in ids:
+            assert b not in self._owner          # free-list integrity
+            self._owner[b] = owner
+        return ids
+
+    def free(self, ids, owner: int) -> None:
+        """Return blocks to the pool; owner-checked (a double free or a
+        foreign free raises instead of corrupting the list)."""
+        for b in ids:
+            if self._owner.get(b) != owner:
+                raise ValueError(
+                    f"block {b} not owned by {owner} "
+                    f"(owner: {self._owner.get(b)})")
+            del self._owner[b]
+            self._free.append(b)
+
+    def owned(self, owner: int) -> List[int]:
+        return sorted(b for b, o in self._owner.items() if o == owner)
+
+    def check_conservation(self) -> None:
+        """Every usable block is exactly once either free or owned."""
+        owned = set(self._owner)
+        free = set(self._free)
+        assert not (owned & free), f"blocks both free and owned: {owned & free}"
+        assert owned | free == set(range(1, self.n_blocks)), \
+            f"lost blocks: {set(range(1, self.n_blocks)) - owned - free}"
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Device block pools + per-slot block tables + the allocator."""
+    cfg: ModelConfig
+    block_size: int
+    n_blocks: int                    # incl. the reserved null block 0
+    max_reqs: int                    # batch slots == block-table rows
+    max_blocks_per_req: int
+    pools: Dict[str, jax.Array]
+    allocator: BlockAllocator
+    table: np.ndarray                # (max_reqs, max_blocks_per_req) int32
+    n_assigned: np.ndarray           # (max_reqs,) blocks assigned per slot
+
+    # ------------------------------------------------------------ creation
+    @classmethod
+    def create(cls, cfg: ModelConfig, *, block_size: int = 16,
+               n_blocks: int = 64, max_reqs: int = 8,
+               max_blocks_per_req: Optional[int] = None,
+               mesh=None, seq_axis: str = "model") -> "PagedKVCache":
+        a = cfg.attn
+        if a is None:
+            raise ValueError(f"paged KV cache needs an attention config "
+                             f"(arch {cfg.arch_type!r} has none)")
+        if max_blocks_per_req is None:
+            max_blocks_per_req = n_blocks - 1
+        dt = jnp.dtype(cfg.dtype)
+        L = cfg.n_layers
+        if a.is_mla:
+            d_lat = a.kv_lora_rank + a.qk_rope_head_dim
+            shapes = {"ckv_pool": (L, n_blocks, block_size, d_lat)}
+        else:
+            s = (L, n_blocks, block_size, a.n_kv_heads, a.head_dim)
+            shapes = {"k_pool": s, "v_pool": s}
+        pools = {k: jnp.zeros(s, dt) for k, s in shapes.items()}
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            pools = {k: jax.device_put(v, NamedSharding(
+                mesh, cls._pool_pspec(v.shape, mesh, seq_axis)))
+                for k, v in pools.items()}
+        return cls(cfg=cfg, block_size=block_size, n_blocks=n_blocks,
+                   max_reqs=max_reqs, max_blocks_per_req=max_blocks_per_req,
+                   pools=pools, allocator=BlockAllocator(n_blocks),
+                   table=np.zeros((max_reqs, max_blocks_per_req), np.int32),
+                   n_assigned=np.zeros((max_reqs,), np.int32))
+
+    @staticmethod
+    def _pool_pspec(shape: Tuple[int, ...], mesh, seq_axis: str):
+        """Head-parallel when the kv-head axis divides the mesh axis, else
+        pool-block-sharded, else replicated (see module docstring)."""
+        from jax.sharding import PartitionSpec as P
+        size = dict(zip(mesh.axis_names, mesh.devices.shape))[seq_axis]
+        spec = [None] * len(shape)
+        if size > 1:
+            if len(shape) == 5 and shape[3] % size == 0:
+                spec[3] = seq_axis               # kv heads
+            elif shape[1] % size == 0:
+                spec[1] = seq_axis               # pool blocks
+        return P(*spec)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def layout(self) -> str:
+        return "mla" if self.cfg.attn.is_mla else "mha"
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.block_size))
+
+    def fits(self, n_tokens: int) -> bool:
+        """Could a request of this total length *ever* run (alone)?"""
+        n = self.blocks_for(n_tokens)
+        return n <= min(self.allocator.n_usable, self.max_blocks_per_req)
+
+    def needs_block(self, slot: int, write_pos: int) -> bool:
+        """Writing a token at context position ``write_pos`` needs a block
+        that slot doesn't own yet?"""
+        return write_pos // self.block_size >= int(self.n_assigned[slot])
+
+    def device_table(self) -> jax.Array:
+        return jnp.asarray(self.table)
+
+    # ---------------------------------------------------------- alloc/free
+    def assign(self, slot: int, rid: int, n_tokens: int) -> List[int]:
+        """Allocate and table the blocks for a fresh ``n_tokens`` context
+        (admission/prefill). Atomic w.r.t. PoolExhausted."""
+        n = self.blocks_for(n_tokens)
+        if n > self.max_blocks_per_req:
+            raise ValueError(f"request needs {n} blocks > "
+                             f"max_blocks_per_req={self.max_blocks_per_req}")
+        ids = self.allocator.alloc(rid, n)           # raises before mutation
+        assert int(self.n_assigned[slot]) == 0, f"slot {slot} not empty"
+        self.table[slot, :n] = ids
+        self.n_assigned[slot] = n
+        return ids
+
+    def extend(self, slot: int, rid: int) -> int:
+        """Append one block to a slot's table (decode growth)."""
+        n = int(self.n_assigned[slot])
+        if n >= self.max_blocks_per_req:
+            raise ValueError(f"slot {slot} at max_blocks_per_req")
+        (b,) = self.allocator.alloc(rid, 1)
+        self.table[slot, n] = b
+        self.n_assigned[slot] = n + 1
+        return b
+
+    def release(self, slot: int, rid: int) -> None:
+        """Free a slot's blocks (finish or preemption) and null its row."""
+        n = int(self.n_assigned[slot])
+        self.allocator.free([int(b) for b in self.table[slot, :n]], rid)
+        self.table[slot, :] = 0
+        self.n_assigned[slot] = 0
+
+    # ------------------------------------------------------------- page io
+    def page_in(self, slot: int, dense_cache: Dict[str, jax.Array],
+                n_tokens: int) -> None:
+        """Scatter a prefill's dense cache (leading layer dim, B=1, seq on
+        axis 2) into the slot's blocks.  The dense seq length may exceed
+        ``n_tokens`` (padded prefill); only the first ``n_tokens`` page in."""
+        n = self.blocks_for(n_tokens)
+        assert n <= int(self.n_assigned[slot])
+        ids = jnp.asarray(self.table[slot, :n], jnp.int32)
+        bs = self.block_size
+        for dk, pk in (("k", "k_pool"), ("v", "v_pool"), ("ckv", "ckv_pool")):
+            if dk not in dense_cache:
+                continue
+            x = dense_cache[dk][:, 0]                 # (L, T, ...)
+            L, T = x.shape[0], x.shape[1]
+            pad = n * bs - min(T, n * bs)
+            x = x[:, :n * bs]
+            if pad:
+                x = jnp.pad(x, [(0, 0), (0, pad)] +
+                            [(0, 0)] * (x.ndim - 2))
+            blocks = x.reshape(L, n, bs, *x.shape[2:])
+            self.pools[pk] = _scatter_blocks(self.pools[pk], ids, blocks)
+
+    def gather(self, slot: int, length: int) -> Dict[str, jax.Array]:
+        """Contiguous (L, length, ...) view of a slot's cache — test /
+        debugging aid (the decode path never materializes this)."""
+        n = self.blocks_for(length)
+        ids = jnp.asarray(self.table[slot, :n], jnp.int32)
+        out = {}
+        for pk in self.pools:
+            p = self.pools[pk][:, ids]                # (L, n, bs, ...)
+            out[pk[:-5]] = p.reshape(p.shape[0], -1,
+                                     *p.shape[3:])[:, :length]
+        return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_blocks(pool, ids, blocks):
+    """pool (L, N, bs, ...) — donated, updated in place; ids (n,);
+    blocks (L, n, bs, ...)."""
+    return pool.at[:, ids].set(blocks.astype(pool.dtype))

@@ -1,25 +1,263 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop over a
-sequence-sharded KV cache (distributed flash-decoding, core/dist_attention).
+"""Serving engines.
 
-The engine keeps requests in fixed batch slots; ``generate`` runs prefill
-once and then steps the decode jit in a Python loop (one token per step —
-the decode step itself is the unit the dry-run lowers).
+:class:`Engine` — the continuous-batching step-loop engine over a paged KV
+cache (serve/cache.py + serve/scheduler.py):
+
+  * ``submit(prompt, max_new_tokens=…, temperature=…, seed=…,
+    stop_tokens=…) -> rid`` — enqueue a request (per-request sampling
+    params and stop conditions);
+  * ``step() -> {rid: [new tokens]}`` — one engine step: admit + prefill
+    waiting requests into free batch slots (paging their dense prefill
+    cache into pool blocks), then ONE jitted decode step over the whole
+    slot batch — per-request ``(B,)`` positions, block-table gather
+    attention, in-step sampling;
+  * ``stream(rid)`` / ``run()`` — drive ``step`` until a request / all
+    requests finish.
+
+Determinism: sampling keys are ``fold_in(PRNGKey(seed), position)`` — a
+request's token stream depends only on its own (prompt, params), never on
+what else is in the batch, which is the batch-invariance property the test
+suite asserts.  Preemption (pool pressure) is recompute-style: the
+victim's blocks are freed and its context is re-prefilled on re-admission,
+so no emitted token is lost or re-sampled.
+
+:class:`FixedSlotEngine` — the seed engine's fixed-slot ``generate`` API
+(one prefill + a dense contiguous cache), upgraded to per-request
+positions and a capacity-padded cache (the seed version silently
+ring-overwrote the oldest prompt tokens once ``pos`` wrapped).  It is the
+dense-cache oracle the paged engine is differentially tested against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import ModelConfig
-from repro.models.transformer import Runtime, build_model
+from repro.serve.cache import PagedKVCache
+from repro.serve.scheduler import Request, SamplingParams, Scheduler
 
+# dense-cache keys whose seq axis (2) gets decode headroom padding.
+# ssm/hybrid are absent: their prefill builds no decode cache (seed
+# behavior), so neither engine can serve them.
+_PAD_KEYS = ("k", "v", "ckv")
+
+
+def _sample(logits, temps, keys):
+    """Per-request sampling: greedy at temperature 0, else categorical
+    under the request's own key. logits (B, V) f32; temps (B,); keys
+    (B,) PRNG keys (uint32 (B, 2) key data)."""
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    drawn = jax.vmap(lambda k, l: jax.random.categorical(k, l))(keys, scaled)
+    return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
+
+
+class Engine:
+    """Paged continuous-batching serving engine (see module docstring)."""
+
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 block_size: int = 16, n_blocks: int = 128,
+                 max_blocks_per_req: Optional[int] = None,
+                 use_mesh_sharding: bool = True):
+        cfg = model.cfg
+        if cfg.arch_type not in ("dense", "moe"):
+            raise ValueError(
+                f"the paged engine serves dense/moe decoders "
+                f"(got {cfg.arch_type!r}); use FixedSlotEngine")
+        if model.rt.par.batch_axes:
+            # serving shapes are ragged (B=1 prefills, a fixed slot batch
+            # for decode): run the model batch-replicated — the sequence
+            # axis keeps its sharding
+            from repro.models.transformer import build_model
+            model = build_model(cfg, dataclasses.replace(
+                model.rt, par=dataclasses.replace(model.rt.par,
+                                                  batch_axes=())))
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        mesh = model.rt.mesh if use_mesh_sharding else None
+        self.cache = PagedKVCache.create(
+            cfg, block_size=block_size, n_blocks=n_blocks,
+            max_reqs=max_batch, max_blocks_per_req=max_blocks_per_req,
+            mesh=mesh, seq_axis=model.rt.par.seq_axis)
+        self.sched = Scheduler(self.cache, max_batch)
+        self.max_batch = max_batch
+        self.requests: Dict[int, Request] = {}
+        # prefill lengths are padded up to a bucket (a multiple of the
+        # block size and the sequence-shard count) so the number of prefill
+        # compilations is bounded by the number of buckets, not by the
+        # number of distinct prompt/requeue lengths — prefill logits are
+        # never consumed (the last context token enters via decode), so
+        # tail padding is free (causal masking; page_in trims it)
+        self._prefill_bucket = math.lcm(block_size,
+                                        max(self.model.rt.seq_size, 1))
+        self._prefill_jits: Dict[int, object] = {}
+        # the block pools are donated: the decode step's scatter updates
+        # them in place instead of copying the whole pool every token
+        self._decode_jit = jax.jit(self._decode_step_fn, donate_argnums=(1,))
+        self._base_keys: Dict[int, jax.Array] = {}
+
+    # -------------------------------------------------------------- intake
+    def submit(self, prompt, *, max_new_tokens: int = 16,
+               temperature: float = 0.0, seed: int = 0,
+               stop_tokens: Tuple[int, ...] = ()) -> int:
+        params = SamplingParams(max_new_tokens=max_new_tokens,
+                                temperature=float(temperature),
+                                seed=int(seed),
+                                stop_tokens=tuple(int(t)
+                                                  for t in stop_tokens))
+        req = self.sched.submit(prompt, params)
+        self.requests[req.rid] = req
+        self._base_keys[req.rid] = jax.random.PRNGKey(params.seed)
+        return req.rid
+
+    # ------------------------------------------------------------- prefill
+    def _prefill(self, tokens: np.ndarray):
+        """Prefill ``tokens`` padded up to the bucket length; returns the
+        dense cache (valid for the first ``len(tokens)`` positions — the
+        padded tail is causal-masked garbage that is never paged in)."""
+        T = len(tokens)
+        b = self._prefill_bucket
+        Tb = max(b, -(-T // b) * b)
+        padded = np.zeros((Tb,), np.int32)
+        padded[:T] = tokens
+        if Tb not in self._prefill_jits:
+            self._prefill_jits[Tb] = jax.jit(self.model.prefill)
+        _, dense = self._prefill_jits[Tb](
+            self.params, {"tokens": jnp.asarray(padded)[None]})
+        return dense
+
+    # -------------------------------------------------------------- decode
+    def _decode_step_fn(self, params, pools, table, pos, tok, temps, keys):
+        cache = {**pools, "block_table": table}
+        logits, cache2 = self.model.decode(params, cache,
+                                           {"token": tok, "pos": pos})
+        lf = logits[:, -1].astype(jnp.float32)
+        nxt = _sample(lf, temps, keys)
+        return nxt, {k: cache2[k] for k in pools}
+
+    def _key_for(self, req: Request, position: int) -> jax.Array:
+        """Sampling key of the token that will sit at context
+        ``position`` — a pure function of (seed, position), so streams are
+        batch- and preemption-invariant."""
+        return jax.random.fold_in(self._base_keys[req.rid], position)
+
+    # ---------------------------------------------------------- the loop
+    def _emit(self, req: Request, token: int, events) -> None:
+        req.emitted.append(int(token))
+        events.setdefault(req.rid, []).append(int(token))
+        if token in req.params.stop_tokens:
+            self.sched.finish(req, "stop")
+        elif len(req.emitted) >= req.params.max_new_tokens:
+            self.sched.finish(req, "length")
+
+    def step(self) -> Dict[int, List[int]]:
+        """One engine step. Returns {rid: [tokens emitted this step]}."""
+        plan = self.sched.plan()
+        events: Dict[int, List[int]] = {}
+
+        for req in plan.admitted:
+            toks = req.prefill_tokens
+            if len(toks):                  # single-token prompts skip it
+                dense = self._prefill(toks)
+                self.cache.page_in(req.slot, dense, len(toks))
+            req.cached = len(toks)
+
+        live = [r for r in plan.decode if r.state == "running"]
+        if live:
+            B = self.max_batch
+            tok = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            temps = np.zeros((B,), np.float32)
+            keys = [jax.random.PRNGKey(0)] * B
+            for r in live:
+                tok[r.slot, 0] = r.pending
+                pos[r.slot] = r.cached
+                temps[r.slot] = r.params.temperature
+                keys[r.slot] = self._key_for(r, r.cached + 1)
+            nxt, pools = self._decode_jit(
+                self.params, self.cache.pools, self.cache.device_table(),
+                jnp.asarray(pos), jnp.asarray(tok), jnp.asarray(temps),
+                jnp.stack(keys))
+            self.cache.pools = pools
+            nxt = np.asarray(nxt)
+            for r in live:
+                r.cached += 1
+                self._emit(r, int(nxt[r.slot]), events)
+        return events
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
+        """Drive ``step`` until every submitted request finishes; returns
+        {rid: emitted token array}."""
+        for _ in range(max_steps):
+            if self.sched.idle:
+                break
+            self.step()
+        else:
+            raise RuntimeError("engine did not drain (scheduling bug?)")
+        return {rid: np.asarray(r.emitted, np.int32)
+                for rid, r in self.requests.items()}
+
+    def stream(self, rid: int):
+        """Yield ``rid``'s tokens as they are produced (drives step())."""
+        req = self.requests[rid]
+        emitted = 0
+        while req.state != "finished" or emitted < len(req.emitted):
+            while emitted < len(req.emitted):
+                yield req.emitted[emitted]
+                emitted += 1
+            if req.state == "finished":
+                break
+            self.step()
+
+    # ------------------------------------------------------ legacy facade
+    def generate(self, batch, n_tokens: int, rng=None, temperature=0.0):
+        """Fixed-slot-compatible convenience: submit every row of
+        ``batch["tokens"]``, drain, return (B, n_tokens) tokens."""
+        toks = np.asarray(batch["tokens"])
+        seeds = []
+        for b in range(toks.shape[0]):
+            if rng is None:
+                seeds.append(b)
+            else:
+                seeds.append(int(np.asarray(
+                    jax.random.fold_in(rng, b))[-1]) & 0x7FFFFFFF)
+        rids = [self.submit(toks[b], max_new_tokens=n_tokens,
+                            temperature=float(temperature), seed=seeds[b])
+                for b in range(toks.shape[0])]
+        out = self.run()
+        return jnp.asarray(np.stack([out[r][:n_tokens] for r in rids]))
+
+    # ---------------------------------------------------------- telemetry
+    @property
+    def stats(self) -> dict:
+        return {
+            "n_preemptions": self.sched.n_preemptions,
+            "steps": self.sched.step_count,
+            "running": len(self.sched.running),
+            "waiting": len(self.sched.waiting),
+            "free_blocks": self.cache.allocator.n_free,
+            "usable_blocks": self.cache.allocator.n_usable,
+        }
+
+
+# ==========================================================================
+# Legacy fixed-slot engine (dense contiguous cache) — the paged engine's
+# differential oracle
+# ==========================================================================
 
 @dataclasses.dataclass
-class Engine:
+class FixedSlotEngine:
+    """Batched fixed-slot serving: one prefill + a dense contiguous KV
+    cache, stepped one token at a time.  The cache is padded with
+    ``n_tokens`` of headroom and decode gets per-request ``(B,)``
+    positions, fixing the seed behavior (ring-buffer wrap silently
+    overwrote the oldest prompt tokens, and the shared scalar position
+    mis-masked mixed-length batches)."""
     model: object
     params: dict
 
@@ -28,16 +266,32 @@ class Engine:
         self._decode = jax.jit(self.model.decode)
 
     def generate(self, batch, n_tokens: int, rng=None, temperature=0.0):
-        """batch: prefill inputs. Returns (tokens (B, n_tokens), last logits)."""
+        """batch: prefill inputs. Returns (tokens (B, n_tokens), last
+        logits)."""
         logits, cache = self._prefill(self.params, batch)
-        pos0 = batch["tokens"].shape[1]
+        if not cache or "state" in cache:
+            raise ValueError("FixedSlotEngine serves attention-cache "
+                             "decoders only")
+        S0 = next(cache[k].shape[2] for k in _PAD_KEYS if k in cache)
+        # headroom so the ring buffer never wraps, rounded up so the padded
+        # seq length stays divisible by the sequence shards
+        n_sh = 1
+        for ax in self.model.rt.par.seq_axes:
+            n_sh *= dict(zip(self.model.rt.mesh.axis_names,
+                             self.model.rt.mesh.devices.shape))[ax]
+        pad = -(-(S0 + n_tokens) // n_sh) * n_sh - S0
+        cache = {k: (jnp.pad(v, [(0, 0), (0, 0), (0, pad)] +
+                             [(0, 0)] * (v.ndim - 3))
+                     if k in _PAD_KEYS else v)
+                 for k, v in cache.items()}
+        B = batch["tokens"].shape[0]
         outs = []
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         for i in range(n_tokens):
             outs.append(tok)
+            pos = jnp.full((B,), S0 + i, jnp.int32)
             logits, cache = self._decode(
-                self.params, cache,
-                {"token": tok, "pos": jnp.int32(pos0 + i)})
+                self.params, cache, {"token": tok, "pos": pos})
             lf = logits[:, -1].astype(jnp.float32)
             if temperature > 0 and rng is not None:
                 rng, k = jax.random.split(rng)

@@ -1,0 +1,202 @@
+"""Continuous-batching scheduler: admission queue, per-request state, and
+block-pool-pressure preemption over a :class:`repro.serve.cache.PagedKVCache`.
+
+Per engine step the scheduler produces a :class:`StepPlan`:
+
+  1. **decode growth** — every running request about to write a token at a
+     block boundary gets one more block; when the pool is exhausted the
+     *youngest* running request (highest admission sequence) is preempted:
+     its blocks are freed and it requeues at the *front* of the admission
+     queue (recompute-style preemption — on re-admission its full context
+     ``prompt ++ emitted[:-1]`` is re-prefilled and its pending last token
+     re-enters decode, so no output token is ever lost or re-sampled).
+  2. **admission** — FIFO: while a batch slot is free and the pool can hold
+     the head request's prefill blocks, it is admitted (head-of-line
+     blocking keeps admission deterministic and starvation-free: the oldest
+     request eventually runs solo).
+
+Everything is host-side and deterministic in the submit/step sequence —
+the property the batch-invariance suite (tests/test_serving_engine.py)
+checks against solo runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.cache import PagedKVCache, PoolExhausted
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling/stop configuration."""
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0                      # per-request PRNG stream
+    stop_tokens: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (T,) int32
+    params: SamplingParams
+    state: str = "waiting"             # waiting | running | finished
+    slot: int = -1
+    seq: int = -1                      # admission sequence (preempt victim
+    #                                    order; re-assigned on re-admission)
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    cached: int = 0                    # tokens with KV in the pool
+    finish_reason: Optional[str] = None
+    n_preemptions: int = 0
+    submit_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def pending(self) -> int:
+        """The context token whose KV is not yet cached — the next decode
+        step's input.  For a fresh request this is the *last prompt
+        token*: prefill stops one short, so prefill logits are never
+        consumed and prefill lengths can be freely bucket-padded (the
+        first sampled token comes out of the first decode step)."""
+        return int(self.emitted[-1] if self.emitted else self.prompt[-1])
+
+    @property
+    def context(self) -> np.ndarray:
+        """prompt ++ emitted (the full token sequence so far)."""
+        return np.concatenate([self.prompt,
+                               np.asarray(self.emitted, np.int32)])
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        """What (re-)admission must prefill: everything but the pending
+        token (whose KV the next decode step writes). May be empty
+        (single-token prompt)."""
+        return self.context[:-1]
+
+
+@dataclasses.dataclass
+class StepPlan:
+    admitted: List[Request]
+    decode: List[Request]              # running requests for this step
+    preempted: List[Request]
+
+
+class Scheduler:
+    def __init__(self, cache: PagedKVCache, max_batch: Optional[int] = None):
+        self.cache = cache
+        self.max_batch = max_batch or cache.max_reqs
+        if self.max_batch > cache.max_reqs:
+            raise ValueError("max_batch exceeds the cache's table rows")
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}      # slot -> request
+        self._next_rid = 0
+        self._adm_seq = 0
+        self.n_preemptions = 0
+        self.step_count = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt, params: SamplingParams) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        total = prompt.size + params.max_new_tokens
+        if not self.cache.fits(total):
+            raise ValueError(
+                f"request of {total} tokens can never fit: needs "
+                f"{self.cache.blocks_for(total)} blocks, pool has "
+                f"{self.cache.allocator.n_usable} usable "
+                f"(max {self.cache.max_blocks_per_req}/req)")
+        req = Request(rid=self._next_rid, prompt=prompt, params=params,
+                      submit_step=self.step_count)
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req
+
+    # ------------------------------------------------------------ helpers
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.max_batch):
+            if s not in self.running:
+                return s
+        return None
+
+    def _preempt_youngest(self) -> Optional[Request]:
+        if not self.running:
+            return None
+        victim = max(self.running.values(), key=lambda r: r.seq)
+        self.cache.release(victim.slot, victim.rid)
+        del self.running[victim.slot]
+        victim.state = "waiting"
+        victim.slot = -1
+        victim.n_preemptions += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(victim)
+        return victim
+
+    def finish(self, req: Request, reason: str) -> None:
+        self.cache.release(req.slot, req.rid)
+        del self.running[req.slot]
+        req.state = "finished"
+        req.finish_reason = reason
+        req.finish_step = self.step_count
+        req.slot = -1
+
+    # --------------------------------------------------------------- plan
+    def plan(self) -> StepPlan:
+        """One scheduling round: grow/preempt, then admit. The caller
+        (engine) prefills ``admitted`` and runs one decode step over
+        ``decode``."""
+        self.step_count += 1
+        preempted: List[Request] = []
+
+        # 1. decode growth — ascending slot order is the deterministic tie
+        # break; a victim drops out of this step's decode batch entirely.
+        for slot in sorted(self.running):
+            req = self.running.get(slot)
+            if req is None:
+                continue                         # preempted below this step
+            if self.cache.needs_block(slot, req.cached):
+                while True:
+                    try:
+                        self.cache.extend(slot, req.rid)
+                        break
+                    except PoolExhausted:
+                        victim = self._preempt_youngest()
+                        preempted.append(victim)
+                        if victim is None or victim is req:
+                            break                # requester itself evicted
+
+        # 2. admission (FIFO, head-of-line blocking)
+        admitted: List[Request] = []
+        while self.waiting:
+            head = self.waiting[0]
+            slot = self._free_slot()
+            if slot is None:
+                break
+            n_pref = len(head.prefill_tokens)
+            try:
+                # +1: the first decode write lands at position n_pref, so
+                # the slot must already own the block covering it (decode
+                # growth ran before admission this step)
+                self.cache.assign(slot, head.rid, n_pref + 1)
+            except PoolExhausted:
+                break
+            self.waiting.popleft()
+            head.state = "running"
+            head.slot = slot
+            head.seq = self._adm_seq
+            self._adm_seq += 1
+            head.cached = 0                      # set after prefill/page-in
+            self.running[slot] = head
+            admitted.append(head)
+
+        decode = [self.running[s] for s in sorted(self.running)]
+        return StepPlan(admitted=admitted, decode=decode,
+                        preempted=[p for p in preempted if p is not None])
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.running

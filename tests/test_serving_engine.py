@@ -1,0 +1,267 @@
+"""Continuous-batching engine tests: fixed-slot vs paged ``generate``
+equivalence, per-request sampling determinism, stop-token early exit, and
+the batch-invariance property suite (staggered arrivals, mixed prompt
+lengths, pool-pressure preemption ⇒ every request's greedy stream equals
+its solo run), plus scheduler/allocator bookkeeping invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.config import ShapeSpec, get_config, smoke_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models.transformer import Runtime, build_model
+from repro.parallel.sharding import make_parallel_config
+from repro.serve.engine import Engine, FixedSlotEngine
+
+
+def _setup(arch, window=0, prompt_len=24, batch=3):
+    import dataclasses
+    cfg = smoke_config(get_config(arch))
+    if window:
+        cfg = cfg.replace(attn=dataclasses.replace(cfg.attn, window=window))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeSpec("srv", prompt_len, batch, "prefill")
+    par = make_parallel_config(mesh, shape)
+    model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+    params = model.init(jax.random.PRNGKey(0))
+    batch_d = SyntheticTokens(cfg, shape, par, mesh).batch(0)
+    return cfg, model, params, batch_d
+
+
+def _prompts(batch_d):
+    return np.asarray(batch_d["tokens"])
+
+
+def _solo_stream(model, params, prompt, *, n, temperature=0.0, seed=0,
+                 max_batch=4, block_size=8):
+    """The request run alone (same decode batch width, ample pool)."""
+    eng = Engine(model, params, max_batch=max_batch, block_size=block_size,
+                 n_blocks=4 * (len(prompt) + n) // block_size + 8)
+    rid = eng.submit(prompt, max_new_tokens=n, temperature=temperature,
+                     seed=seed)
+    return eng.run()[rid]
+
+
+# ==========================================================================
+# engine smoke: old fixed-slot API vs the paged engine
+# ==========================================================================
+
+@pytest.mark.parametrize("arch,window",
+                         [("llama-gqa", 0), ("llama-gqa", 16),
+                          pytest.param("deepseek-v2-lite-16b", 0,
+                                       marks=pytest.mark.slow)])
+def test_generate_equivalence_fixed_slot_vs_paged(arch, window):
+    """Greedy streams of the dense fixed-slot oracle and the paged
+    continuous-batching engine must agree (GQA; windowed; MLA+MoE is the
+    slow param)."""
+    cfg, model, params, batch_d = _setup(arch, window=window)
+    n = 6
+    toks_fixed, _ = FixedSlotEngine(model, params).generate(batch_d, n)
+    eng = Engine(model, params, max_batch=4, block_size=8, n_blocks=32)
+    toks_paged = eng.generate(batch_d, n)
+    np.testing.assert_array_equal(np.asarray(toks_fixed),
+                                  np.asarray(toks_paged))
+
+
+def test_temperature_sampling_determinism():
+    """Same (seed, prompt) ⇒ identical sampled stream — across engine
+    instances AND across different batch compositions; different seeds
+    diverge."""
+    cfg, model, params, batch_d = _setup("llama-gqa")
+    prompts = _prompts(batch_d)
+    kw = dict(max_new_tokens=6, temperature=0.9)
+
+    def run(extra_load):
+        eng = Engine(model, params, max_batch=4, block_size=8, n_blocks=64)
+        if extra_load:                       # different batch composition
+            eng.submit(prompts[1], max_new_tokens=4, temperature=0.5,
+                       seed=7)
+        rid = eng.submit(prompts[0], seed=123, **kw)
+        return eng.run()[rid]
+
+    a, b, c = run(False), run(False), run(True)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+    eng = Engine(model, params, max_batch=4, block_size=8, n_blocks=64)
+    rid = eng.submit(prompts[0], seed=124, **kw)
+    assert not np.array_equal(a, eng.run()[rid])
+
+
+def test_stop_token_early_exit():
+    cfg, model, params, batch_d = _setup("llama-gqa")
+    prompt = _prompts(batch_d)[0]
+    full = _solo_stream(model, params, prompt, n=8)
+    stop = int(full[3])
+    eng = Engine(model, params, max_batch=2, block_size=8, n_blocks=32)
+    rid = eng.submit(prompt, max_new_tokens=8, stop_tokens=(stop,))
+    out = eng.run()[rid]
+    req = eng.requests[rid]
+    assert req.finish_reason == "stop"
+    k = int(np.nonzero(full == stop)[0][0])
+    np.testing.assert_array_equal(out, full[:k + 1])
+    assert len(out) < 8
+
+
+# ==========================================================================
+# batch-invariance property suite
+# ==========================================================================
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_batch_invariance_under_staggered_arrivals(seed):
+    """Hypothesis-driven: random staggered arrivals, mixed prompt lengths
+    and budgets, a pool small enough to preempt — every request's greedy
+    stream equals its solo (batch-of-one) run, and the allocator conserves
+    its blocks."""
+    cfg, model, params, batch_d = _setup("smollm-360m", prompt_len=32,
+                                         batch=4)
+    prompts = _prompts(batch_d)
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(3, 6))
+    specs = []
+    for i in range(n_req):
+        plen = int(rng.choice([9, 17, 25, 32]))
+        specs.append(dict(prompt=prompts[i % len(prompts)][:plen],
+                          n=int(rng.integers(3, 8)),
+                          arrive=int(rng.integers(0, 4))))
+    # pool sized to hold ~2 requests: forces queueing and/or preemption
+    eng = Engine(model, params, max_batch=4, block_size=8, n_blocks=14)
+    rids = {}
+    step = 0
+    order = sorted(range(n_req), key=lambda i: (specs[i]["arrive"], i))
+    for i in order:
+        while step < specs[i]["arrive"]:
+            eng.step()
+            step += 1
+        rids[i] = eng.submit(specs[i]["prompt"],
+                             max_new_tokens=specs[i]["n"])
+    out = eng.run()
+    eng.cache.allocator.check_conservation()
+    assert eng.cache.allocator.n_free == eng.cache.allocator.n_usable
+    for i, spec in enumerate(specs):
+        got = out[rids[i]]
+        assert len(got) <= spec["n"]
+        solo = _solo_stream(model, params, spec["prompt"], n=spec["n"])
+        np.testing.assert_array_equal(got, solo[:len(got)], err_msg=str(i))
+        assert len(got) == len(solo)
+
+
+def test_preemption_requeue_completes_and_matches_solo():
+    """Engineered pool pressure: three long-budget requests into a pool
+    that holds barely two — preemptions must occur, every request must
+    still finish with its full budget, and streams match solo runs."""
+    cfg, model, params, batch_d = _setup("smollm-360m", prompt_len=24,
+                                         batch=3)
+    prompts = _prompts(batch_d)
+    eng = Engine(model, params, max_batch=3, block_size=8, n_blocks=10)
+    rids = [eng.submit(prompts[i], max_new_tokens=10) for i in range(3)]
+    out = eng.run()
+    assert eng.sched.n_preemptions > 0, "pool was sized to force preemption"
+    eng.cache.allocator.check_conservation()
+    assert eng.cache.allocator.n_free == eng.cache.allocator.n_usable
+    for i, rid in enumerate(rids):
+        assert len(out[rid]) == 10
+        solo = _solo_stream(model, params, prompts[i], n=10, max_batch=3)
+        np.testing.assert_array_equal(out[rid], solo)
+
+
+def test_submit_rejects_never_fitting_request():
+    cfg, model, params, batch_d = _setup("smollm-360m")
+    eng = Engine(model, params, max_batch=2, block_size=8, n_blocks=4)
+    with pytest.raises(ValueError, match="never fit"):
+        eng.submit(_prompts(batch_d)[0], max_new_tokens=32)
+
+
+@pytest.mark.slow
+def test_long_arrival_trace_drains_and_is_invariant():
+    """Longer seeded trace (the CI serving bench's shape): a dozen mixed
+    requests with Poisson-ish arrivals; drains, conserves blocks, and every
+    greedy stream matches solo."""
+    cfg, model, params, batch_d = _setup("smollm-360m", prompt_len=32,
+                                         batch=4)
+    prompts = _prompts(batch_d)
+    rng = np.random.default_rng(42)
+    eng = Engine(model, params, max_batch=4, block_size=8, n_blocks=24)
+    pending = [(int(rng.integers(0, 20)),
+                prompts[i % 4][:int(rng.choice([8, 16, 24, 32]))],
+                int(rng.integers(2, 9))) for i in range(12)]
+    pending.sort(key=lambda t: t[0])
+    rids, meta = [], []
+    step = 0
+    while pending or not eng.sched.idle:
+        while pending and pending[0][0] <= step:
+            _, pr, n = pending.pop(0)
+            rids.append(eng.submit(pr, max_new_tokens=n))
+            meta.append((pr, n))
+        eng.step()
+        step += 1
+        assert step < 10_000
+    out = {r: np.asarray(eng.requests[r].emitted) for r in rids}
+    eng.cache.allocator.check_conservation()
+    for rid, (pr, n) in zip(rids, meta):
+        solo = _solo_stream(model, params, pr, n=n)
+        np.testing.assert_array_equal(out[rid], solo)
+
+
+# ==========================================================================
+# 8-device mesh: engine-level invariance with a sharded pool
+# ==========================================================================
+
+def test_engine_8dev_batch_invariance(subproc):
+    """Two staggered requests on a (1, 8) sequence-sharded mesh (pool
+    block-sharded by GSPMD) produce the same greedy streams as their solo
+    runs on the same mesh."""
+    out = subproc("""
+import numpy as np, jax
+from repro.core.config import ShapeSpec, get_config, smoke_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models.transformer import Runtime, build_model
+from repro.parallel.sharding import make_parallel_config
+from repro.serve.engine import Engine
+cfg = smoke_config(get_config("qwen3-8b"))
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+shape = ShapeSpec("srv", 32, 2, "prefill")
+par = make_parallel_config(mesh, shape)
+model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+params = model.init(jax.random.PRNGKey(0))
+prompts = np.asarray(SyntheticTokens(cfg, shape, par, mesh).batch(0)["tokens"])
+def solo(p, n):
+    e = Engine(model, params, max_batch=2, block_size=8, n_blocks=32)
+    r = e.submit(p, max_new_tokens=n)
+    return e.run()[r]
+eng = Engine(model, params, max_batch=2, block_size=8, n_blocks=32)
+r0 = eng.submit(prompts[0], max_new_tokens=4)
+eng.step(); eng.step()
+r1 = eng.submit(prompts[1], max_new_tokens=4)
+out = eng.run()
+a0, a1 = solo(prompts[0], 4), solo(prompts[1], 4)
+assert np.array_equal(out[r0], a0), (out[r0], a0)
+assert np.array_equal(out[r1], a1), (out[r1], a1)
+print("OK 8dev engine invariance", list(map(int, out[r0])))
+""")
+    assert "OK 8dev engine invariance" in out
+
+
+def test_decode_scalar_pos_shim_warns():
+    """model.decode with the legacy scalar position broadcasts with a
+    one-shot DeprecationWarning."""
+    import warnings
+    from repro.core import mask as mkm
+    cfg, model, params, batch_d = _setup("smollm-360m", prompt_len=16,
+                                         batch=2)
+    _, cache = jax.jit(model.prefill)(params, batch_d)
+    site = 'decode(batch={"pos": <scalar>})'
+    mkm._DEPRECATION_WARNED.discard(site)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        model.decode(params, cache,
+                     {"token": jnp.zeros((2, 1), jnp.int32),
+                      "pos": jnp.int32(16)})
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+           and site in str(x.message)]
+    assert len(dep) == 1
