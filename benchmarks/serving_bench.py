@@ -14,6 +14,12 @@ Reported (CSV rows like benchmarks/run.py, JSON via ``--json``):
   * serving/steps, preemptions, occupancy — scheduler behavior
   * serving/pred_*                 — analytic paged-decode roofline terms
     (analysis/roofline.paged_decode_terms) at the trace's mean context
+  * serving/shared_prefix_*        — the shared-system-prompt A/B: the
+    same staggered trace of requests sharing one long prefix, run with
+    the prefix cache off (cold) and on (cached) — cache-hit rate, median
+    TTFT (steps and ms), peak pool blocks in use, and tokens/s for both
+    regimes, plus the analytic cold/warm TTFT lower bounds
+    (analysis/roofline.prefix_cache_terms)
 
 Results are written to ``BENCH_serving.json`` (repo root by default) so
 the serving-perf trajectory is tracked in-repo; CI runs
@@ -82,14 +88,12 @@ def run_trace(*, arch="smollm-360m", n_requests=8, max_batch=4,
     eng = Engine(model, params, max_batch=max_batch, block_size=block_size,
                  n_blocks=n_blocks)
 
-    # warmup outside timing: every prefill bucket the trace can reach
+    # warmup outside timing: every chunk shape the trace can reach
     # (prompts AND preemption re-prefills, which land at arbitrary context
     # lengths) plus the jitted decode step — so the tracked latencies
     # measure serving, not XLA compilation
     max_ctx = max(prompt_lens) + max(budgets)
-    b = eng._prefill_bucket
-    for tb in range(b, max_ctx + b, b):
-        eng._prefill(np.zeros((tb,), np.int32))
+    eng.warm_prefill(max_ctx)
     w = eng.submit(prompts[0][:prompt_lens[0]], max_new_tokens=2)
     eng.run()
     del eng.requests[w]
@@ -152,6 +156,102 @@ def run_trace(*, arch="smollm-360m", n_requests=8, max_batch=4,
     }
 
 
+def run_shared_prefix(*, arch="smollm-360m", n_requests=6, prefix_len=48,
+                      tail_len=7, budget=4, gap=4, max_batch=4,
+                      block_size=8, n_blocks=96, chunk_tokens=8, seed=0):
+    """Shared-system-prompt A/B: ``n_requests`` staggered requests share
+    one ``prefix_len``-token prefix (distinct short tails).  The same
+    trace runs twice — prefix cache off (every request re-prefills and
+    re-stores the prefix) and on (later arrivals share the first
+    request's blocks) — measuring cache-hit rate, TTFT, peak blocks in
+    use, and throughput."""
+    from repro.analysis import roofline as R
+    from repro.core.config import ShapeSpec, get_config, smoke_config
+    from repro.data.pipeline import SyntheticTokens
+    from repro.models.transformer import Runtime, build_model
+    from repro.parallel.sharding import make_parallel_config
+    from repro.serve.engine import Engine
+
+    cfg = smoke_config(get_config(arch))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeSpec("bench", prefix_len + tail_len, 4, "prefill")
+    par = make_parallel_config(mesh, shape)
+    model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+    params = model.init(jax.random.PRNGKey(0))
+    rows = np.asarray(
+        SyntheticTokens(cfg, shape, par, mesh).batch(0)["tokens"])
+    system = rows[0][:prefix_len]
+    reqs = [np.concatenate([system, rows[1 + i % 3][:tail_len]])
+            for i in range(n_requests)]
+
+    def drive(prefix_cache):
+        eng = Engine(model, params, max_batch=max_batch,
+                     block_size=block_size, n_blocks=n_blocks,
+                     prefill_chunk_tokens=chunk_tokens,
+                     prefix_cache=prefix_cache)
+        eng.warm_prefill(prefix_len + tail_len + budget)
+        # compile the decode step too (a 2-token prompt registers no full
+        # block, so the cached run's stats stay clean), then zero the
+        # counters so hit-rate reflects the measured trace only
+        w = eng.submit(rows[1][:3], max_new_tokens=2)
+        eng.run()
+        del eng.requests[w]
+        for k in eng.cache.counters:
+            eng.cache.counters[k] = 0
+        submit_t, submit_step, first_t, first_step = {}, {}, {}, {}
+        peak_blocks = 0
+        t_start = time.perf_counter()
+        step = 0
+        rids = []
+        while len(rids) < len(reqs) or not eng.sched.idle:
+            if len(rids) < len(reqs) and step >= gap * len(rids):
+                r = eng.submit(reqs[len(rids)], max_new_tokens=budget)
+                submit_t[r], submit_step[r] = time.perf_counter(), step
+                rids.append(r)
+            events = eng.step()
+            for r, toks in events.items():
+                if r not in first_t and toks:
+                    first_t[r] = time.perf_counter()
+                    first_step[r] = step
+            peak_blocks = max(peak_blocks, eng.cache.allocator.n_usable
+                              - eng.cache.allocator.n_free)
+            step += 1
+            if step > 100_000:
+                raise RuntimeError("shared-prefix trace did not drain")
+        wall = time.perf_counter() - t_start
+        total = sum(len(eng.requests[r].emitted) for r in rids)
+        ttft_ms = sorted((first_t[r] - submit_t[r]) * 1e3 for r in rids)
+        ttft_steps = sorted(first_step[r] - submit_step[r] for r in rids)
+        n_prefill = sum(len(q) - 1 for q in reqs)
+        return {
+            "ttft_p50_ms": ttft_ms[len(ttft_ms) // 2],
+            "ttft_p50_steps": ttft_steps[len(ttft_steps) // 2],
+            "peak_blocks": peak_blocks,
+            "tokens_per_s": total / wall,
+            "hit_rate": eng.stats["hit_tokens"] / n_prefill,
+            "forks": eng.stats["forks"],
+            "dedup_swaps": eng.stats["dedup_swaps"],
+            "stored_prefix_copies": (eng.stats["cache_blocks"]
+                                     if prefix_cache else None),
+        }
+
+    cold = drive(False)
+    cached = drive(True)
+    hit = cached["hit_rate"]
+    return {
+        "n_requests": n_requests, "prefix_len": prefix_len,
+        "tail_len": tail_len, "chunk_tokens": chunk_tokens,
+        "cold": cold, "cached": cached,
+        "cache_hit_rate": hit,
+        "ttft_reduction": 1 - cached["ttft_p50_ms"] / cold["ttft_p50_ms"],
+        "peak_blocks_reduction": 1 - cached["peak_blocks"]
+                                     / cold["peak_blocks"],
+        "pred": R.prefix_cache_terms(cfg, prompt_len=prefix_len + tail_len,
+                                     hit_rate=hit,
+                                     chunk_tokens=chunk_tokens, bpe=4),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -159,11 +259,14 @@ def main(argv=None):
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
-    kw = {}
+    kw, spkw = {}, {}
     if args.smoke:
         kw = dict(n_requests=5, prompt_lens=(16, 24), budgets=(3, 4),
                   n_blocks=24)   # small pool: exercises queueing on CI
+        spkw = dict(n_requests=4, prefix_len=32, n_blocks=64)
     res = run_trace(**kw)
+    sp = run_shared_prefix(**spkw)
+    res["shared_prefix"] = sp
 
     row("serving/tokens_per_s", 0, f"{res['tokens_per_s']:.2f}")
     row("serving/p50_token_ms", f"{res['p50_token_ms'] * 1e3:.0f}",
@@ -182,6 +285,24 @@ def main(argv=None):
         f"block_waste={p['block_waste']:.2f} "
         f"step_lb={p['step_s_lower_bound']:.2e}s "
         f"(mean_ctx={res['mean_context']})")
+    row("serving/shared_prefix_hit_rate", 0,
+        f"{sp['cache_hit_rate']:.2f} (forks={sp['cached']['forks']} "
+        f"dedup_swaps={sp['cached']['dedup_swaps']})")
+    row("serving/shared_prefix_ttft_ms",
+        f"{sp['cached']['ttft_p50_ms'] * 1e3:.0f}",
+        f"cached={sp['cached']['ttft_p50_ms']:.1f}ms "
+        f"cold={sp['cold']['ttft_p50_ms']:.1f}ms "
+        f"(-{sp['ttft_reduction'] * 100:.0f}%; steps "
+        f"{sp['cached']['ttft_p50_steps']} vs {sp['cold']['ttft_p50_steps']})")
+    row("serving/shared_prefix_peak_blocks", 0,
+        f"cached={sp['cached']['peak_blocks']} "
+        f"cold={sp['cold']['peak_blocks']} "
+        f"(-{sp['peak_blocks_reduction'] * 100:.0f}%)")
+    sps = sp["pred"]
+    row("serving/shared_prefix_pred", 0,
+        f"prefill_flops_saved={sps['prefill_flops_saved_frac']:.2f} "
+        f"ttft_lb_cold={sps['ttft_s_lower_bound_cold']:.2e}s "
+        f"ttft_lb_cached={sps['ttft_s_lower_bound_cached']:.2e}s")
 
     out = dict(version=1, generated_by="benchmarks/serving_bench.py",
                smoke=bool(args.smoke), result=res, rows=ROWS)

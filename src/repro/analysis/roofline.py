@@ -228,6 +228,49 @@ def paged_decode_terms(cfg, *, batch, mean_len, block_size, bpe=2):
     return terms
 
 
+def prefix_cache_terms(cfg, *, prompt_len, hit_rate, chunk_tokens=0,
+                       bpe=2):
+    """Analytic prefill cost of ONE request under the content-addressed
+    prefix cache: a fraction ``hit_rate`` of the prompt's KV is shared
+    from the pool instead of recomputed, so the cold-vs-cached TTFT lower
+    bounds differ by the skipped prefill work (model forward FLOPs ∝
+    uncached tokens; attention FLOPs quadratic in context but only over
+    uncached *query* rows, which still attend the cached KV).  Chunked
+    prefill (``chunk_tokens``) spreads the same work over
+    ``ceil(uncached / chunk)`` engine steps — it bounds per-step latency
+    without changing the total.  Feeds the serving bench's shared-prefix
+    A/B next to its measured TTFTs."""
+    n_params = cfg.active_param_count()
+    a = cfg.attn
+    H = a.n_heads if a else 0
+    hd = ((a.kv_lora_rank + a.qk_rope_head_dim) if a and a.is_mla
+          else (a.head_dim if a else 0))
+
+    def prefill_cost(n_cached):
+        q = prompt_len - n_cached             # query rows actually run
+        flops = 2 * n_params * q              # matmul forward
+        if a:                                 # attention: q rows × full ctx
+            kv = prompt_len
+            flops += cfg.n_layers * 2 * q * kv * H * 2 * hd
+        bytes_ = n_params * bpe + q * cfg.d_model * bpe \
+            + 2 * kv * (a.n_kv_heads if a and not a.is_mla else 1) * hd * bpe
+        return roofline_terms(flops, bytes_, 0.0)
+
+    cold = prefill_cost(0)
+    cached = prefill_cost(int(hit_rate * prompt_len))
+    n_chunks = (max(1, -(-prompt_len // chunk_tokens)) if chunk_tokens
+                else 1)
+    saved = 1 - (cached["compute_s"] / cold["compute_s"]
+                 if cold["compute_s"] else 0.0)
+    return {
+        "ttft_s_lower_bound_cold": cold["step_s_lower_bound"],
+        "ttft_s_lower_bound_cached": cached["step_s_lower_bound"],
+        "prefill_flops_saved_frac": saved,
+        "n_chunks_cold": n_chunks,
+        "blocks_saved_frac": hit_rate,        # shared, not re-stored
+    }
+
+
 def attention_analytic(cfg, shape, *, seq_shards, batch_shards):
     """Total analytic kernel (flops, bytes) per chip for all attention
     sites of one (arch × shape)."""

@@ -536,6 +536,128 @@ class DecoderLM:
         logits = self._head(p, h[:, last:last + 1])
         return logits, caches
 
+    def prefill_chunk(self, p, cache, batch):
+        """Chunked paged prefill (Sarathi-style): forward a B=1 chunk
+        ``batch = {"tokens": (1, C), "start": scalar, "n_valid": scalar}``
+        occupying context positions ``[start, start + n_valid)`` through
+        every layer, scattering the chunk's K/V (or MLA latent) into the
+        slot's pool blocks (write-then-attend) and attending over the
+        already-cached context gathered through the block table —
+        ``chunk_attn`` with a *dynamic* ``q_offset = start`` (the MaskSpec
+        offset machinery from the packed-sequence work).  Rows past
+        ``n_valid`` (shape-bucket padding) are written to the reserved
+        null block and their outputs are causal-masked garbage that is
+        never read.  No logits are returned: the pending-token design
+        keeps the last context token for decode.  ``cache`` is a paged
+        view {k_pool, v_pool | ckv_pool, block_table (1, nkv)} whose
+        updated pools are returned."""
+        cfg, rt = self.cfg, self.rt
+        at = cfg.arch_type
+        if at not in ("dense", "moe"):
+            raise ValueError(f"chunked paged prefill serves dense/moe "
+                             f"decoders (got {at!r})")
+        a = cfg.attn
+        is_mla = a.is_mla
+        tok = batch["tokens"]
+        start = jnp.asarray(batch["start"], jnp.int32)
+        end = start + jnp.asarray(batch["n_valid"], jnp.int32)
+        bt = cache["block_table"]
+        h = p["embed"][tok].astype(self.dtype)             # (1, C, d)
+        C = tok.shape[1]
+        dim = a.qk_rope_head_dim if is_mla else a.head_dim
+        cos, sin = L.rope_tables(start + jnp.arange(C), dim, a.rope_theta)
+        spec = _decode_mask(a.window)      # the chunk is a context suffix
+
+        def gather(pool):
+            # (N, bs, ...) -> (1, nkv·bs, ...) context view via the table
+            g = pool[bt[0]]
+            return g.reshape(1, g.shape[0] * g.shape[1], *g.shape[2:])
+
+        def one(lp, h, kp, vp):
+            if is_mla:
+                h2, kp = self._chunk_mla(lp, h, kp, cos, sin, start, end,
+                                         bt)
+                return h2, kp, vp
+            q, k, v = L.attn_qkv(lp["attn"], h, cfg, cos, sin)
+            kp = _paged_write_chunk(kp, k, bt, start, end)
+            vp = _paged_write_chunk(vp, v, bt, start, end)
+            o, _ = chunk_attn(q, gather(kp), gather(vp), mask=spec,
+                              impl=rt.impl, q_offset=start)
+            h2 = L.attn_out(lp["attn"], h, o, cfg)
+            return h2, kp, vp
+
+        if at == "moe":
+            nd = cfg.moe.n_dense_layers
+
+            def moe_mlp(lp, h2):
+                h3, _ = M.moe_apply(lp["moe"], h2, cfg, mesh=rt.mesh,
+                                    seq_axis=rt.par.seq_axis,
+                                    batch_axes=rt.par.batch_axes)
+                return h3
+            if is_mla:
+                def bodyd(h, xs):
+                    lp, cp = xs
+                    h2, cp = self._chunk_mla(lp, h, cp, cos, sin, start,
+                                             end, bt)
+                    return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps), cp
+
+                def bodym(h, xs):
+                    lp, cp = xs
+                    h2, cp = self._chunk_mla(lp, h, cp, cos, sin, start,
+                                             end, bt)
+                    return moe_mlp(lp, h2), cp
+                h, c1 = xscan(bodyd, h, (p["dense_layers"],
+                                         cache["ckv_pool"][:nd]))
+                h, c2 = xscan(bodym, h, (p["moe_layers"],
+                                         cache["ckv_pool"][nd:]))
+                return {"ckv_pool": jnp.concatenate([c1, c2]),
+                        "block_table": bt}
+
+            def bodyd(h, xs):
+                lp, kp, vp = xs
+                h2, kp, vp = one(lp, h, kp, vp)
+                return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps), (kp, vp)
+
+            def bodym(h, xs):
+                lp, kp, vp = xs
+                h2, kp, vp = one(lp, h, kp, vp)
+                return moe_mlp(lp, h2), (kp, vp)
+            h, (k1, v1) = xscan(bodyd, h, (p["dense_layers"],
+                                           cache["k_pool"][:nd],
+                                           cache["v_pool"][:nd]))
+            h, (k2, v2) = xscan(bodym, h, (p["moe_layers"],
+                                           cache["k_pool"][nd:],
+                                           cache["v_pool"][nd:]))
+            return {"k_pool": jnp.concatenate([k1, k2]),
+                    "v_pool": jnp.concatenate([v1, v2]),
+                    "block_table": bt}
+
+        def body(h, xs):
+            lp, kp, vp = xs
+            h2, kp, vp = one(lp, h, kp, vp)
+            return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps), (kp, vp)
+        h, (kp, vp) = xscan(body, h, (p["layers"], cache["k_pool"],
+                                      cache["v_pool"]))
+        return {"k_pool": kp, "v_pool": vp, "block_table": bt}
+
+    def _chunk_mla(self, lp, h, cp, cos, sin, start, end, bt):
+        """One layer of chunked paged absorbed-MLA prefill: write the
+        chunk's latents, then latent-space attention over the gathered
+        context (the value view is the latent's first ``kv_lora`` dims)."""
+        cfg, rt = self.cfg, self.rt
+        a = cfg.attn
+        c = a.kv_lora_rank
+        q_full, new, w_uv = self._mla_decode_parts(lp, h, cos, sin)
+        cp = _paged_write_chunk(cp, new, bt, start, end)
+        g = cp[bt[0]]
+        g = g.reshape(1, g.shape[0] * g.shape[1], 1, g.shape[2])
+        o_lat, _ = chunk_attn(q_full, g, g[..., :c],
+                              mask=_decode_mask(a.window),
+                              scale=L.mla_scale(cfg), impl=rt.impl,
+                              q_offset=start)
+        h2 = self._mla_out(lp, h, o_lat, w_uv)
+        return h2, cp
+
     # -------------------------------------------------------------- decode
     def decode(self, p, cache, batch):
         """One decode step: batch = {"token": (B,1) int32, "pos": (B,)}.
@@ -728,33 +850,34 @@ class DecoderLM:
         return h, {"k_pool": kp, "v_pool": vp, "block_table": bt}
 
     def _mla_decode_parts(self, lp, h, cos, sin):
-        """Shared absorbed-MLA decode projections: effective latent-space
-        query ``q_full`` (B,1,nh,c+dr), the new token's latent cache entry
-        ``new`` (B,1,c+dr), and the value up-projection ``w_uv``."""
+        """Shared absorbed-MLA decode projections for ``T`` tokens (T = 1
+        for decode, a chunk for paged prefill): effective latent-space
+        query ``q_full`` (B,T,nh,c+dr), the tokens' latent cache entries
+        ``new`` (B,T,c+dr), and the value up-projection ``w_uv``."""
         cfg = self.cfg
         a = cfg.attn
         p_ = lp["attn"]
-        B = h.shape[0]
+        B, T = h.shape[0], h.shape[1]
         nh, dn, dr, c = a.n_heads, a.qk_nope_head_dim, a.qk_rope_head_dim, \
             a.kv_lora_rank
         dv = a.v_head_dim or a.head_dim
         hn = L.rms_norm(h, p_["ln"], cfg.norm_eps)
         if a.q_lora_rank:
             qc = L.rms_norm(hn @ p_["wq_a"], p_["q_ln"], cfg.norm_eps)
-            q = (qc @ p_["wq_b"]).reshape(B, 1, nh, dn + dr)
+            q = (qc @ p_["wq_b"]).reshape(B, T, nh, dn + dr)
         else:
-            q = (hn @ p_["wq"]).reshape(B, 1, nh, dn + dr)
+            q = (hn @ p_["wq"]).reshape(B, T, nh, dn + dr)
         q_nope, q_pe = q[..., :dn], q[..., dn:]
         q_pe = L.apply_rope(q_pe, cos, sin)
         wkv_b = p_["wkv_b"].reshape(c, nh, dn + dv)
         w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
         q_eff = jnp.einsum("bthn,chn->bthc", q_nope.astype(jnp.float32),
                            w_uk.astype(jnp.float32)).astype(h.dtype)
-        q_full = jnp.concatenate([q_eff, q_pe], axis=-1)     # (B,1,nh,c+dr)
+        q_full = jnp.concatenate([q_eff, q_pe], axis=-1)     # (B,T,nh,c+dr)
         kv_a = hn @ p_["wkv_a"]
         ckv1 = L.rms_norm(kv_a[..., :c], p_["kv_ln"], cfg.norm_eps)
-        kpe1 = L.apply_rope(kv_a[..., c:].reshape(B, 1, 1, dr), cos, sin)
-        new = jnp.concatenate([ckv1, kpe1[:, :, 0, :]], axis=-1)  # (B,1,c+dr)
+        kpe1 = L.apply_rope(kv_a[..., c:].reshape(B, T, 1, dr), cos, sin)
+        new = jnp.concatenate([ckv1, kpe1[:, :, 0, :]], axis=-1)  # (B,T,c+dr)
         return q_full, new, w_uv
 
     def _mla_out(self, lp, h, o_lat, w_uv):
@@ -765,7 +888,7 @@ class DecoderLM:
         B = h.shape[0]
         o = jnp.einsum("bthc,chv->bthv", o_lat.astype(jnp.float32),
                        w_uv.astype(jnp.float32)).astype(h.dtype)
-        return h + (o.reshape(B, 1, nh * dv) @
+        return h + (o.reshape(B, o.shape[1], nh * dv) @
                     lp["attn"]["wo"]).astype(h.dtype)
 
     def _decode_mla(self, lp, h, ck, cv, cos, sin, pos):
@@ -858,6 +981,21 @@ def _paged_write(pool, new, block_table, pos):
     bidx = jnp.take_along_axis(block_table, (pos // bs)[:, None],
                                axis=1)[:, 0]
     return pool.at[bidx, pos % bs].set(new[:, 0].astype(pool.dtype))
+
+
+def _paged_write_chunk(pool, new, block_table, start, end):
+    """Scatter a B=1 prefill chunk ``new`` (1, C, ...) into one layer's
+    block ``pool`` (N, bs, ...): row ``i`` holds context position
+    ``start + i``.  Rows at positions ≥ ``end`` (shape-bucket padding)
+    are redirected to the reserved null block 0 — they can never clobber
+    a real block, and the null block's garbage is never gathered
+    unmasked."""
+    bs = pool.shape[1]
+    C = new.shape[1]
+    idx = start + jnp.arange(C)
+    col = jnp.clip(idx // bs, 0, block_table.shape[1] - 1)
+    bidx = jnp.where(idx < end, block_table[0, col], 0)
+    return pool.at[bidx, idx % bs].set(new[0].astype(pool.dtype))
 
 
 # --------------------------------------------------------------------------

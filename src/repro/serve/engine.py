@@ -6,11 +6,16 @@ cache (serve/cache.py + serve/scheduler.py):
   * ``submit(prompt, max_new_tokens=…, temperature=…, seed=…,
     stop_tokens=…) -> rid`` — enqueue a request (per-request sampling
     params and stop conditions);
-  * ``step() -> {rid: [new tokens]}`` — one engine step: admit + prefill
-    waiting requests into free batch slots (paging their dense prefill
-    cache into pool blocks), then ONE jitted decode step over the whole
-    slot batch — per-request ``(B,)`` positions, block-table gather
-    attention, in-step sampling;
+  * ``step() -> {rid: [new tokens]}`` — one engine step: admit waiting
+    requests into free batch slots (sharing prefix-cache blocks when
+    their prompt prefix is already pooled), run each mid-prefill
+    request's next *chunk* (``model.prefill_chunk`` writes straight into
+    pool blocks — no dense intermediate), then ONE jitted decode step
+    over the decode-ready slots — per-request ``(B,)`` positions,
+    block-table gather attention, in-step sampling.  Chunked prefill
+    (Sarathi-style, ``prefill_chunk_tokens``) bounds per-step latency
+    and kills head-of-line blocking; ``prefill_chunk_tokens=0`` prefills
+    whole prompts in one chunk;
   * ``stream(rid)`` / ``run()`` — drive ``step`` until a request / all
     requests finish.
 
@@ -62,7 +67,9 @@ class Engine:
     def __init__(self, model, params, *, max_batch: int = 8,
                  block_size: int = 16, n_blocks: int = 128,
                  max_blocks_per_req: Optional[int] = None,
-                 use_mesh_sharding: bool = True):
+                 use_mesh_sharding: bool = True,
+                 prefill_chunk_tokens: int = 32,
+                 prefix_cache: bool = True):
         cfg = model.cfg
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
@@ -83,21 +90,25 @@ class Engine:
         self.cache = PagedKVCache.create(
             cfg, block_size=block_size, n_blocks=n_blocks,
             max_reqs=max_batch, max_blocks_per_req=max_blocks_per_req,
-            mesh=mesh, seq_axis=model.rt.par.seq_axis)
-        self.sched = Scheduler(self.cache, max_batch)
+            mesh=mesh, seq_axis=model.rt.par.seq_axis,
+            prefix_cache=prefix_cache)
+        self.sched = Scheduler(self.cache, max_batch,
+                               prefill_chunk_tokens=prefill_chunk_tokens)
         self.max_batch = max_batch
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.requests: Dict[int, Request] = {}
-        # prefill lengths are padded up to a bucket (a multiple of the
-        # block size and the sequence-shard count) so the number of prefill
-        # compilations is bounded by the number of buckets, not by the
-        # number of distinct prompt/requeue lengths — prefill logits are
-        # never consumed (the last context token enters via decode), so
-        # tail padding is free (causal masking; page_in trims it)
+        # chunk lengths are padded up to a bucket — the fixed chunk size,
+        # or (whole-prompt mode) a multiple of the block size and the
+        # sequence-shard count — so the number of prefill compilations is
+        # bounded by the number of buckets, not by the number of distinct
+        # prompt/requeue lengths.  Chunk logits are never computed (the
+        # last context token enters via decode), and padded rows write to
+        # the null block, so tail padding is free
         self._prefill_bucket = math.lcm(block_size,
                                         max(self.model.rt.seq_size, 1))
-        self._prefill_jits: Dict[int, object] = {}
-        # the block pools are donated: the decode step's scatter updates
-        # them in place instead of copying the whole pool every token
+        # the block pools are donated: every step's scatters update them
+        # in place instead of copying the whole pool every token
+        self._chunk_jit = jax.jit(self._chunk_step_fn, donate_argnums=(1,))
         self._decode_jit = jax.jit(self._decode_step_fn, donate_argnums=(1,))
         self._base_keys: Dict[int, jax.Array] = {}
 
@@ -116,20 +127,60 @@ class Engine:
         return req.rid
 
     # ------------------------------------------------------------- prefill
-    def _prefill(self, tokens: np.ndarray):
-        """Prefill ``tokens`` padded up to the bucket length; returns the
-        dense cache (valid for the first ``len(tokens)`` positions — the
-        padded tail is causal-masked garbage that is never paged in)."""
-        T = len(tokens)
+    _NKV_BUCKET = 4          # table-width shape bucket for the chunk jit
+
+    def _chunk_pad(self, n: int) -> int:
+        """Padded chunk length: the fixed chunk size, or (whole-prompt
+        mode) ``n`` rounded up to the prefill bucket."""
+        if self.prefill_chunk_tokens:
+            return self.prefill_chunk_tokens
         b = self._prefill_bucket
-        Tb = max(b, -(-T // b) * b)
-        padded = np.zeros((Tb,), np.int32)
-        padded[:T] = tokens
-        if Tb not in self._prefill_jits:
-            self._prefill_jits[Tb] = jax.jit(self.model.prefill)
-        _, dense = self._prefill_jits[Tb](
-            self.params, {"tokens": jnp.asarray(padded)[None]})
-        return dense
+        return max(b, -(-n // b) * b)
+
+    def _nkv_for(self, end: int) -> int:
+        """Block-table width shipped to the chunk jit: covers the chunk's
+        last written position, bucketed to bound recompilation.  Depends
+        only on ``end`` (absolute context position), so a request's chunk
+        shapes never depend on batch composition or cache hits."""
+        need = -(-end // self.cache.block_size)
+        return min(self.cache.max_blocks_per_req,
+                   -(-need // self._NKV_BUCKET) * self._NKV_BUCKET)
+
+    def _chunk_step_fn(self, params, pools, bt, start, n_valid, tokens):
+        out = self.model.prefill_chunk(
+            params, {**pools, "block_table": bt},
+            {"tokens": tokens, "start": start, "n_valid": n_valid})
+        return {k: out[k] for k in pools}
+
+    def _run_chunk(self, req: Request, start: int, n: int) -> None:
+        """Run one prefill chunk: context positions [start, start+n) of
+        ``req`` are forwarded and their KV scattered into the slot's
+        blocks (the scheduler already forked any shared block the chunk
+        writes)."""
+        end = start + n
+        C = self._chunk_pad(n)
+        toks = np.zeros((C,), np.int32)
+        toks[:n] = req.context[start:end]
+        nkv = self._nkv_for(end)
+        bt = jnp.asarray(self.cache.table[req.slot:req.slot + 1, :nkv])
+        self.cache.pools = self._chunk_jit(
+            self.params, self.cache.pools, bt, jnp.int32(start),
+            jnp.int32(n), jnp.asarray(toks)[None])
+
+    def warm_prefill(self, max_ctx: int) -> int:
+        """Pre-compile every (chunk length, table width) shape a trace of
+        up to ``max_ctx`` context tokens can reach, by running dummy
+        chunks against an all-null block table (writes land in the
+        reserved null block; no allocator state is touched).  Returns the
+        number of shapes compiled — bench warmup aid."""
+        shapes = {(self._chunk_pad(min(e, self.prefill_chunk_tokens or e)),
+                   self._nkv_for(e)) for e in range(1, max_ctx + 1)}
+        for C, nkv in sorted(shapes):
+            self.cache.pools = self._chunk_jit(
+                self.params, self.cache.pools,
+                jnp.zeros((1, nkv), jnp.int32), jnp.int32(0), jnp.int32(0),
+                jnp.zeros((1, C), jnp.int32))
+        return len(shapes)
 
     # -------------------------------------------------------------- decode
     def _decode_step_fn(self, params, pools, table, pos, tok, temps, keys):
@@ -160,12 +211,15 @@ class Engine:
         plan = self.sched.plan()
         events: Dict[int, List[int]] = {}
 
-        for req in plan.admitted:
-            toks = req.prefill_tokens
-            if len(toks):                  # single-token prompts skip it
-                dense = self._prefill(toks)
-                self.cache.page_in(req.slot, dense, len(toks))
-            req.cached = len(toks)
+        for req, start, n in plan.chunks:
+            if req.state != "running":     # preempted after planning
+                continue
+            self._run_chunk(req, start, n)
+            req.cached = start + n
+            # index the newly completed full blocks so later arrivals
+            # (and this request's own re-admissions) can share them
+            self.cache.register_prefix(req.slot, req.rid, req.context,
+                                       req.cached)
 
         live = [r for r in plan.decode if r.state == "running"]
         if live:
@@ -174,13 +228,20 @@ class Engine:
             pos = np.zeros((B,), np.int32)
             temps = np.zeros((B,), np.float32)
             keys = [jax.random.PRNGKey(0)] * B
+            # non-live rows (idle slots AND mid-prefill requests) still flow
+            # through the decode step with pos=0/tok=0 — and decode *writes*
+            # KV at pos through the table.  Ship them an all-null table row
+            # so those writes land in the reserved null block instead of a
+            # mid-prefill request's (possibly cache-shared) block 0
+            tbl = np.zeros_like(self.cache.table)
             for r in live:
                 tok[r.slot, 0] = r.pending
                 pos[r.slot] = r.cached
                 temps[r.slot] = r.params.temperature
                 keys[r.slot] = self._key_for(r, r.cached + 1)
+                tbl[r.slot] = self.cache.table[r.slot]
             nxt, pools = self._decode_jit(
-                self.params, self.cache.pools, self.cache.device_table(),
+                self.params, self.cache.pools, jnp.asarray(tbl),
                 jnp.asarray(pos), jnp.asarray(tok), jnp.asarray(temps),
                 jnp.stack(keys))
             self.cache.pools = pools
@@ -235,14 +296,19 @@ class Engine:
     # ---------------------------------------------------------- telemetry
     @property
     def stats(self) -> dict:
-        return {
+        out = {
             "n_preemptions": self.sched.n_preemptions,
             "steps": self.sched.step_count,
             "running": len(self.sched.running),
             "waiting": len(self.sched.waiting),
             "free_blocks": self.cache.allocator.n_free,
             "usable_blocks": self.cache.allocator.n_usable,
+            "cache_blocks": self.cache.n_cache_blocks,
+            **self.cache.counters,
         }
+        if self.cache.prefix is not None:
+            out["prefix_cache"] = dict(self.cache.prefix.stats)
+        return out
 
 
 # ==========================================================================

@@ -3,17 +3,31 @@ block-pool-pressure preemption over a :class:`repro.serve.cache.PagedKVCache`.
 
 Per engine step the scheduler produces a :class:`StepPlan`:
 
-  1. **decode growth** — every running request about to write a token at a
+  1. **window reclamation** — when the model has a sliding window, every
+     running request drops its refs on blocks wholly below the window of
+     its next write position (freed storage instead of masked storage).
+  2. **decode growth** — every running request about to write a token at a
      block boundary gets one more block; when the pool is exhausted the
      *youngest* running request (highest admission sequence) is preempted:
-     its blocks are freed and it requeues at the *front* of the admission
-     queue (recompute-style preemption — on re-admission its full context
-     ``prompt ++ emitted[:-1]`` is re-prefilled and its pending last token
-     re-enters decode, so no output token is ever lost or re-sampled).
-  2. **admission** — FIFO: while a batch slot is free and the pool can hold
-     the head request's prefill blocks, it is admitted (head-of-line
-     blocking keeps admission deterministic and starvation-free: the oldest
-     request eventually runs solo).
+     its block refs are dropped (shared prefix blocks survive under their
+     other owners) and it requeues at the *front* of the admission queue
+     (recompute-style preemption — on re-admission its full context
+     ``prompt ++ emitted[:-1]`` is re-prefilled, usually mostly from the
+     prefix cache, and its pending last token re-enters decode, so no
+     output token is ever lost or re-sampled).
+  3. **admission** — FIFO: while a batch slot is free and the pool can hold
+     the head request's prefill blocks, it is admitted; cached prefix
+     blocks are *shared* instead of allocated (``Request.cached`` starts
+     at the hit length).  Head-of-line blocking keeps admission
+     deterministic and starvation-free.
+  4. **chunk planning** — each mid-prefill request contributes one prefill
+     chunk of at most ``prefill_chunk_tokens`` tokens, *aligned to
+     absolute context positions* (chunk boundaries are multiples of the
+     chunk size), so a request's chunk layout — and hence its numerics —
+     never depends on what else is in the batch or on how much of its
+     prefix was cached.  Copy-on-write forks for every block the step will
+     write run here, under the same preempt-on-exhaustion loop as decode
+     growth.
 
 Everything is host-side and deterministic in the submit/step sequence —
 the property the batch-invariance suite (tests/test_serving_engine.py)
@@ -52,6 +66,7 @@ class Request:
     cached: int = 0                    # tokens with KV in the pool
     finish_reason: Optional[str] = None
     n_preemptions: int = 0
+    n_hit: int = 0                     # prefix-cache tokens at last admission
     submit_step: int = -1
     finish_step: int = -1
 
@@ -71,6 +86,11 @@ class Request:
                                np.asarray(self.emitted, np.int32)])
 
     @property
+    def n_prefill(self) -> int:
+        """Prefill length: everything but the pending token."""
+        return len(self.prompt) + len(self.emitted) - 1
+
+    @property
     def prefill_tokens(self) -> np.ndarray:
         """What (re-)admission must prefill: everything but the pending
         token (whose KV the next decode step writes). May be empty
@@ -81,16 +101,25 @@ class Request:
 @dataclasses.dataclass
 class StepPlan:
     admitted: List[Request]
-    decode: List[Request]              # running requests for this step
+    decode: List[Request]              # requests decode-ready this step
     preempted: List[Request]
+    chunks: List[Tuple[Request, int, int]] = dataclasses.field(
+        default_factory=list)          # (request, start, n_tokens)
 
 
 class Scheduler:
-    def __init__(self, cache: PagedKVCache, max_batch: Optional[int] = None):
+    def __init__(self, cache: PagedKVCache, max_batch: Optional[int] = None,
+                 *, prefill_chunk_tokens: int = 0):
         self.cache = cache
         self.max_batch = max_batch or cache.max_reqs
         if self.max_batch > cache.max_reqs:
             raise ValueError("max_batch exceeds the cache's table rows")
+        if prefill_chunk_tokens < 0:
+            raise ValueError("prefill_chunk_tokens must be >= 0 "
+                             "(0 = whole-prompt prefill)")
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        self.window = int((cache.cfg.attn.window or 0)
+                          if cache.cfg.attn else 0)
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}      # slot -> request
         self._next_rid = 0
@@ -131,10 +160,26 @@ class Scheduler:
         del self.running[victim.slot]
         victim.state = "waiting"
         victim.slot = -1
+        victim.cached = 0
         victim.n_preemptions += 1
         self.n_preemptions += 1
         self.waiting.appendleft(victim)
         return victim
+
+    def _with_preempt(self, req: Request, op, preempted) -> bool:
+        """Run a pool-consuming cache op, preempting the youngest request
+        on exhaustion until it succeeds; returns False when ``req`` itself
+        was the last victim (it left the running set)."""
+        while True:
+            try:
+                op()
+                return True
+            except PoolExhausted:
+                victim = self._preempt_youngest()
+                if victim is not None:
+                    preempted.append(victim)
+                if victim is None or victim is req:
+                    return False
 
     def finish(self, req: Request, reason: str) -> None:
         self.cache.release(req.slot, req.rid)
@@ -144,44 +189,58 @@ class Scheduler:
         req.finish_step = self.step_count
         req.slot = -1
 
+    def _chunk_end(self, req: Request) -> int:
+        """End position of the request's next prefill chunk: aligned to
+        absolute multiples of the chunk size (so chunk boundaries — and
+        the numerics they shape — are independent of cache hits and batch
+        composition), capped at the prefill length."""
+        C = self.prefill_chunk_tokens
+        if not C:
+            return req.n_prefill
+        return min(req.n_prefill, (req.cached // C + 1) * C)
+
     # --------------------------------------------------------------- plan
     def plan(self) -> StepPlan:
-        """One scheduling round: grow/preempt, then admit. The caller
-        (engine) prefills ``admitted`` and runs one decode step over
-        ``decode``."""
+        """One scheduling round: reclaim, grow/preempt, admit, plan
+        chunks + copy-on-write forks.  The caller (engine) runs the
+        ``chunks`` (prefill), then one decode step over ``decode``."""
         self.step_count += 1
         preempted: List[Request] = []
 
-        # 1. decode growth — ascending slot order is the deterministic tie
-        # break; a victim drops out of this step's decode batch entirely.
+        # 1. sliding-window reclamation — blocks wholly below the window
+        # of the next write position are freed, not merely masked
+        if self.window:
+            for slot in sorted(self.running):
+                req = self.running[slot]
+                self.cache.reclaim_window(slot, req.rid, req.cached,
+                                          self.window)
+
+        # 2. decode growth — ascending slot order is the deterministic tie
+        # break; a victim drops out of this step's plan entirely.
         for slot in sorted(self.running):
             req = self.running.get(slot)
             if req is None:
                 continue                         # preempted below this step
-            if self.cache.needs_block(slot, req.cached):
-                while True:
-                    try:
-                        self.cache.extend(slot, req.rid)
-                        break
-                    except PoolExhausted:
-                        victim = self._preempt_youngest()
-                        preempted.append(victim)
-                        if victim is None or victim is req:
-                            break                # requester itself evicted
+            if req.cached >= req.n_prefill \
+                    and self.cache.needs_block(slot, req.cached):
+                self._with_preempt(
+                    req, lambda: self.cache.extend(slot, req.rid),
+                    preempted)
 
-        # 2. admission (FIFO, head-of-line blocking)
+        # 3. admission (FIFO, head-of-line blocking); prefix-cache hits
+        # start the request part-prefilled
         admitted: List[Request] = []
         while self.waiting:
             head = self.waiting[0]
             slot = self._free_slot()
             if slot is None:
                 break
-            n_pref = len(head.prefill_tokens)
+            toks = head.prefill_tokens
             try:
-                # +1: the first decode write lands at position n_pref, so
-                # the slot must already own the block covering it (decode
-                # growth ran before admission this step)
-                self.cache.assign(slot, head.rid, n_pref + 1)
+                # +1: the first decode write lands at position n_prefill,
+                # so the slot must own the block covering it up front
+                n_hit = self.cache.assign(slot, head.rid, len(toks) + 1,
+                                          tokens=toks)
             except PoolExhausted:
                 break
             self.waiting.popleft()
@@ -189,13 +248,39 @@ class Scheduler:
             head.slot = slot
             head.seq = self._adm_seq
             self._adm_seq += 1
-            head.cached = 0                      # set after prefill/page-in
+            head.cached = n_hit                  # hit KV is already pooled
+            head.n_hit = n_hit
             self.running[slot] = head
             admitted.append(head)
 
-        decode = [self.running[s] for s in sorted(self.running)]
+        # 4. chunk planning + copy-on-write forks for this step's writes
+        chunks: List[Tuple[Request, int, int]] = []
+        decode: List[Request] = []
+        for slot in sorted(self.running):
+            req = self.running.get(slot)
+            if req is None:
+                continue
+            n_pref = req.n_prefill
+            if req.cached < n_pref:              # mid-prefill: one chunk
+                end = self._chunk_end(req)
+                w1 = end + 1 if end == n_pref else end
+                if not self._with_preempt(
+                        req, lambda: self.cache.ensure_writable(
+                            slot, req.rid, req.cached, w1), preempted):
+                    continue
+                chunks.append((req, req.cached, end - req.cached))
+                if end == n_pref:                # finishes prefill: decode
+                    decode.append(req)           # in the same step
+            else:                                # decode-phase
+                if self._with_preempt(
+                        req, lambda: self.cache.ensure_writable(
+                            slot, req.rid, req.cached, req.cached + 1),
+                        preempted):
+                    decode.append(req)
+
         return StepPlan(admitted=admitted, decode=decode,
-                        preempted=[p for p in preempted if p is not None])
+                        preempted=[p for p in preempted if p is not None],
+                        chunks=chunks)
 
     @property
     def idle(self) -> bool:

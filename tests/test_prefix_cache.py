@@ -1,0 +1,385 @@
+"""Property/unit suite for the content-addressed, copy-on-write block
+layer (serve/cache.py): refcounted allocator invariants under arbitrary
+op interleavings, radix-trie lookup/registration/eviction semantics
+(chained content hashes, partial-tail matches, dedupe), PagedKVCache-level
+sharing/fork/reclaim bookkeeping, and the shared-block preemption-release
+conservation fix.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.config import get_config, smoke_config
+from repro.serve.cache import (BlockAllocator, PagedKVCache, PoolExhausted,
+                               PrefixCache)
+
+
+# ==========================================================================
+# refcounted allocator
+# ==========================================================================
+
+def test_share_and_last_owner_free():
+    al = BlockAllocator(6)
+    ids = al.alloc(1, 2)
+    al.share(ids, 2)
+    assert al.refcount(ids[0]) == 2 and al.owners(ids[0]) == (1, 2)
+    al.free(ids, 1)                       # first owner out: still allocated
+    assert al.n_free == 3 and al.refcount(ids[0]) == 1
+    al.check_conservation()
+    al.free(ids, 2)                       # last owner out: back in the pool
+    assert al.n_free == 5 and al.refcount(ids[0]) == 0
+    al.check_conservation()
+
+
+def test_share_errors():
+    al = BlockAllocator(6)
+    (b,) = al.alloc(1, 1)
+    with pytest.raises(ValueError, match="already holds"):
+        al.share([b], 1)                  # one ref per owner per block
+    with pytest.raises(ValueError, match="free block"):
+        al.share([5], 2)                  # sharing a free block
+    al.share([b], 2)
+    with pytest.raises(ValueError, match="not owned"):
+        al.free([b], 3)                   # foreign free
+    al.free([b], 2)
+    with pytest.raises(ValueError, match="not owned"):
+        al.free([b], 2)                   # double free of a dropped ref
+    al.check_conservation()
+
+
+def test_shared_free_releases_exactly_once():
+    """A block's slot in the free list reappears exactly once no matter
+    how many owners released it (the double-free class of bug)."""
+    al = BlockAllocator(8)
+    ids = al.alloc(0, 3)
+    for o in (1, 2, 3):
+        al.share(ids, o)
+    for o in (2, 0, 3, 1):
+        al.free(ids, o)
+    assert sorted(al._free) == list(range(1, 8))
+    assert len(al._free) == len(set(al._free))
+    al.check_conservation()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_allocator_refcount_interleavings(seed):
+    """Arbitrary interleavings of alloc/share/free against a mirror model:
+    conservation holds after every op, refcounts match the mirror exactly,
+    and a block returns to the free list exactly when its last owner
+    releases it."""
+    rng = np.random.default_rng(seed)
+    n_blocks = int(rng.integers(4, 24))
+    al = BlockAllocator(n_blocks)
+    mirror = {}                            # block -> set(owners)
+    owners = list(range(6))
+    for _ in range(120):
+        op = rng.choice(["alloc", "share", "free"])
+        if op == "alloc":
+            o = int(rng.choice(owners))
+            n = int(rng.integers(1, 3))
+            try:
+                ids = al.alloc(o, n)
+            except PoolExhausted:
+                assert al.n_free < n      # raised only when truly short
+                continue
+            for b in ids:
+                assert b not in mirror
+                mirror[b] = {o}
+        elif op == "share" and mirror:
+            b = int(rng.choice(sorted(mirror)))
+            o = int(rng.choice(owners))
+            if o in mirror[b]:
+                with pytest.raises(ValueError):
+                    al.share([b], o)
+            else:
+                al.share([b], o)
+                mirror[b].add(o)
+        elif op == "free" and mirror:
+            b = int(rng.choice(sorted(mirror)))
+            legit = rng.random() < 0.8
+            o = (int(rng.choice(sorted(mirror[b]))) if legit
+                 else max(owners) + 1)
+            if o in mirror[b]:
+                was_last = mirror[b] == {o}
+                free_before = al.n_free
+                al.free([b], o)
+                mirror[b].discard(o)
+                if was_last:
+                    del mirror[b]
+                    assert al.n_free == free_before + 1
+                else:
+                    assert al.n_free == free_before
+            else:
+                with pytest.raises(ValueError):
+                    al.free([b], o)
+        al.check_conservation()
+        for b, who in mirror.items():
+            assert al.refcount(b) == len(who)
+            assert al.owners(b) == tuple(sorted(who))
+
+
+# ==========================================================================
+# radix trie / content addressing
+# ==========================================================================
+
+def _trie(n_blocks=32, bs=4, salt=("t",)):
+    al = BlockAllocator(n_blocks)
+    return al, PrefixCache(al, bs, salt)
+
+
+def _registered(al, pc, tokens, rid):
+    """Simulate a request having written ``tokens``: alloc its blocks,
+    register the full ones, return the block ids."""
+    bs = pc.block_size
+    n = max(1, -(-len(tokens) // bs))
+    ids = al.alloc(rid, n)
+    pc.register(tokens, ids[:len(tokens) // bs])
+    return ids
+
+
+def test_lookup_full_and_partial_tail():
+    al, pc = _trie(bs=4)
+    toks = list(range(100, 111))               # 11 tokens: 2 full blocks
+    ids = _registered(al, pc, toks, rid=7)
+    # exact full-block prefix
+    n, hit = pc.lookup(toks[:8])
+    assert n == 8 and hit == ids[:2]
+    # longer query: full blocks only (positions 8..10 were never indexed)
+    n, hit = pc.lookup(toks)
+    assert n == 8 and hit == ids[:2]
+    # partial tail: diverges inside block 1 → only block 0 + 2 tail tokens
+    q = toks[:6] + [999, 999]
+    n, hit = pc.lookup(q)
+    assert n == 6 and hit == ids[:2]           # block 1 is a partial match
+    assert pc.stats["partial_hits"] == 1
+    # full miss
+    n, hit = pc.lookup([1, 2, 3, 4])
+    assert n == 0 and hit == []
+
+
+def test_chain_hash_is_prefix_chained_and_salted():
+    al1, pc1 = _trie(salt=("a",))
+    al2, pc2 = _trie(salt=("b",))
+    toks = list(range(8))
+    _registered(al1, pc1, toks, 0)
+    _registered(al2, pc2, toks, 0)
+    n1 = pc1.root.children[tuple(toks[:4])]
+    n2 = pc2.root.children[tuple(toks[:4])]
+    assert n1.chain_hash == hash((pc1.root.chain_hash, tuple(toks[:4]),
+                                  ("a",)))
+    assert n1.chain_hash != n2.chain_hash      # same tokens, other salt
+    c1 = n1.children[tuple(toks[4:])]
+    assert c1.chain_hash == hash((n1.chain_hash, tuple(toks[4:]), ("a",)))
+
+
+def test_register_dedupes_equal_content():
+    al, pc = _trie(bs=4)
+    toks = list(range(8))
+    ids_a = _registered(al, pc, toks, rid=0)
+    ids_b = al.alloc(1, 2)
+    swaps = pc.register(toks, ids_b)           # same tokens, other blocks
+    assert swaps == [(0, ids_a[0]), (1, ids_a[1])]
+    assert pc.stats["deduped"] == 2
+    pc.check_integrity()
+
+
+def test_evict_lru_skips_pinned_blocks():
+    al, pc = _trie(n_blocks=32, bs=4)
+    a = _registered(al, pc, list(range(0, 8)), rid=0)      # older chain
+    b = _registered(al, pc, list(range(50, 58)), rid=1)
+    al.free(a, 0)                              # rid 0 done: cache-only now
+    # rid 1 still holds its blocks → pinned; only chain a is evictable,
+    # leaves first (child before parent)
+    assert pc.evict(10) == 2
+    assert al.refcount(a[0]) == 0 and al.refcount(a[1]) == 0
+    assert al.refcount(b[0]) == 2              # untouched
+    n, hit = pc.lookup(list(range(0, 8)))
+    assert n == 0                              # chain a is gone
+    n, hit = pc.lookup(list(range(50, 58)))
+    assert n == 8
+    pc.check_integrity()
+    al.check_conservation()
+
+
+def test_evict_prefers_lru_leaf():
+    al, pc = _trie(n_blocks=32, bs=4)
+    a = _registered(al, pc, list(range(0, 4)), rid=0)
+    b = _registered(al, pc, list(range(10, 14)), rid=0)
+    al.free(a + b, 0)
+    pc.lookup(list(range(0, 4)))               # touch a: b becomes LRU
+    assert pc.evict(1) == 1
+    assert pc.lookup(list(range(0, 4)))[0] == 4
+    assert pc.lookup(list(range(10, 14)))[0] == 0
+
+
+# ==========================================================================
+# PagedKVCache: sharing, copy-on-write, reclamation (host bookkeeping)
+# ==========================================================================
+
+def _cache(n_blocks=32, block_size=4, prefix=True, max_reqs=4):
+    cfg = smoke_config(get_config("llama-gqa"))
+    return PagedKVCache.create(cfg, block_size=block_size,
+                               n_blocks=n_blocks, max_reqs=max_reqs,
+                               prefix_cache=prefix)
+
+
+def test_assign_shares_cached_prefix():
+    c = _cache()
+    toks = list(range(200, 211))               # 11 prefill tokens, bs=4
+    c.assign(0, rid=0, n_tokens=len(toks) + 1, tokens=toks)
+    c.register_prefix(0, 0, toks, len(toks))   # 2 full blocks indexed
+    n_hit = c.assign(1, rid=1, n_tokens=len(toks) + 1, tokens=toks)
+    assert n_hit == 8
+    assert (c.table[0, :2] == c.table[1, :2]).all()    # shared storage
+    assert c.table[0, 2] != c.table[1, 2]              # private tails
+    assert c.allocator.refcount(int(c.table[0, 0])) == 3   # rid0+rid1+cache
+    c.allocator.check_conservation()
+    c.prefix.check_integrity()
+
+
+def test_ensure_writable_forks_shared_blocks():
+    c = _cache()
+    toks = list(range(16))
+    c.assign(0, rid=0, n_tokens=17, tokens=toks)
+    c.register_prefix(0, 0, toks, 16)
+    c.assign(1, rid=1, n_tokens=17, tokens=toks)
+    b_shared = int(c.table[1, 2])
+    assert b_shared == int(c.table[0, 2])
+    forks = c.ensure_writable(1, rid=1, p0=9, p1=13)   # blocks 2..3
+    assert forks == 2 and c.counters["forks"] == 2
+    assert int(c.table[1, 2]) != b_shared              # private copy now
+    assert c.allocator.refcount(b_shared) == 2         # rid0 + cache
+    assert c.allocator.refcount(int(c.table[1, 2])) == 1
+    # unshared block: no-op
+    assert c.ensure_writable(1, rid=1, p0=12, p1=13) == 0
+    c.allocator.check_conservation()
+
+
+def test_release_preserves_shared_blocks():
+    """Preempting/finishing a request whose blocks are shared must not
+    free blocks still referenced by other slots (the conservation fix)."""
+    c = _cache()
+    toks = list(range(12))
+    c.assign(0, rid=0, n_tokens=13, tokens=toks)
+    c.register_prefix(0, 0, toks, 12)
+    c.assign(1, rid=1, n_tokens=13, tokens=toks)
+    shared = [int(b) for b in c.table[1, :3]]
+    free_before = c.allocator.n_free
+    c.release(0, rid=0)                        # rid 0 preempted
+    # rid 1 (and the cache) still hold the shared blocks
+    for b in shared:
+        assert c.allocator.refcount(b) >= 1
+    assert [int(b) for b in c.table[1, :3]] == shared
+    c.allocator.check_conservation()
+    # only rid 0's private tail block actually returned to the pool
+    assert c.allocator.n_free == free_before + 1
+    c.release(1, rid=1)
+    c.allocator.check_conservation()
+
+
+def test_reclaim_window_frees_out_of_window_blocks():
+    c = _cache(prefix=False)
+    c.assign(0, rid=0, n_tokens=20)            # 5 blocks (bs=4)
+    free0 = c.allocator.n_free
+    # next write at 18, window 6 → floor 13 → blocks 0..2 end ≤ 13? block
+    # i is reclaimable iff (i+1)*4 <= 13: blocks 0, 1 and 2 end at 4,8,12
+    assert c.reclaim_window(0, rid=0, next_pos=18, window=6) == 3
+    assert c.allocator.n_free == free0 + 3
+    assert list(c.table[0, :3]) == [0, 0, 0] and c.table[0, 3] != 0
+    assert int(c.n_assigned[0]) == 5           # high-water mark unchanged
+    # idempotent; later positions reclaim more
+    assert c.reclaim_window(0, rid=0, next_pos=18, window=6) == 0
+    assert c.reclaim_window(0, rid=0, next_pos=23, window=6) == 1
+    c.release(0, rid=0)                        # skips the zeroed entries
+    c.allocator.check_conservation()
+    assert c.allocator.n_free == c.allocator.n_usable
+
+
+def test_alloc_evicts_cache_only_blocks_under_pressure():
+    c = _cache(n_blocks=9, block_size=4)       # 8 usable
+    toks = list(range(28))                     # 7 full blocks
+    c.assign(0, rid=0, n_tokens=28, tokens=toks)
+    c.register_prefix(0, 0, toks, 28)
+    c.release(0, rid=0)                        # all 7 now cache-only
+    assert c.n_cache_blocks == 7 and c.allocator.n_free == 1
+    # a fresh 3-block request must LRU-evict cache blocks, not fail
+    n_hit = c.assign(1, rid=1, n_tokens=12, tokens=[777] * 11)
+    assert n_hit == 0 and c.counters["evicted"] == 2
+    c.allocator.check_conservation()
+    # …but blocks shared with live requests are pinned: a request that
+    # can only be satisfied by evicting *shared* blocks still raises
+    toks2 = [888] * 20
+    c.assign(2, rid=2, n_tokens=20, tokens=toks2)
+    c.register_prefix(2, 2, toks2, 20)
+    with pytest.raises(PoolExhausted):
+        c.assign(3, rid=3, n_tokens=24, tokens=[999] * 23)
+    c.allocator.check_conservation()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_paged_cache_interleaving_invariants(seed):
+    """Random interleavings of assign(+prefix sharing)/extend/
+    fork-on-write/register/reclaim/release across slots keep the
+    allocator conserved and the trie consistent after every op —
+    the serving step loop's op alphabet, divorced from the model."""
+    rng = np.random.default_rng(seed)
+    c = _cache(n_blocks=int(rng.integers(10, 40)), block_size=4,
+               max_reqs=4)
+    vocab = [0, 1]                             # tiny: collisions guaranteed
+    live = {}                                  # slot -> (rid, tokens, cached)
+    next_rid = 0
+    for _ in range(80):
+        op = rng.choice(["assign", "extend", "write", "reclaim",
+                         "release", "register"])
+        if op == "assign" and len(live) < 4:
+            slot = next(s for s in range(4) if s not in live)
+            toks = [int(rng.choice(vocab)) for _ in
+                    range(int(rng.integers(1, 14)))]
+            try:
+                n_hit = c.assign(slot, rid=next_rid,
+                                 n_tokens=len(toks) + 1, tokens=toks)
+            except PoolExhausted:
+                continue
+            live[slot] = [next_rid, toks, n_hit]
+            next_rid += 1
+        elif op == "extend" and live:
+            slot = int(rng.choice(sorted(live)))
+            rid, toks, cached = live[slot]
+            try:
+                c.extend(slot, rid)
+            except (PoolExhausted, ValueError):
+                pass
+        elif op == "write" and live:
+            slot = int(rng.choice(sorted(live)))
+            rid, toks, cached = live[slot]
+            if cached < len(toks):
+                end = min(len(toks), cached + int(rng.integers(1, 6)))
+                try:
+                    c.ensure_writable(slot, rid, cached, end)
+                except PoolExhausted:
+                    continue
+                live[slot][2] = end
+        elif op == "register" and live:
+            slot = int(rng.choice(sorted(live)))
+            rid, toks, cached = live[slot]
+            c.register_prefix(slot, rid, toks, cached)
+        elif op == "reclaim" and live:
+            slot = int(rng.choice(sorted(live)))
+            rid, toks, cached = live[slot]
+            c.reclaim_window(slot, rid, next_pos=cached,
+                             window=int(rng.integers(1, 8)))
+        elif op == "release" and live:
+            slot = int(rng.choice(sorted(live)))
+            rid, toks, _ = live.pop(slot)
+            c.release(slot, rid)
+        c.allocator.check_conservation()
+        c.prefix.check_integrity()
+    for slot in sorted(live):
+        c.release(slot, live[slot][0])
+    c.allocator.check_conservation()
+    # drain the cache: every block must come back
+    c.prefix.evict(c.allocator.n_usable)
+    assert c.allocator.n_free == c.allocator.n_usable

@@ -38,9 +38,12 @@ def _prompts(batch_d):
 
 def _solo_stream(model, params, prompt, *, n, temperature=0.0, seed=0,
                  max_batch=4, block_size=8):
-    """The request run alone (same decode batch width, ample pool)."""
+    """The request run alone — whole-prompt prefill, no prefix cache, ample
+    pool: the canonical baseline every batched/chunked/cached stream must
+    reproduce exactly."""
     eng = Engine(model, params, max_batch=max_batch, block_size=block_size,
-                 n_blocks=4 * (len(prompt) + n) // block_size + 8)
+                 n_blocks=4 * (len(prompt) + n) // block_size + 8,
+                 prefill_chunk_tokens=0, prefix_cache=False)
     rid = eng.submit(prompt, max_new_tokens=n, temperature=temperature,
                      seed=seed)
     return eng.run()[rid]
@@ -142,13 +145,95 @@ def test_batch_invariance_under_staggered_arrivals(seed):
                              max_new_tokens=specs[i]["n"])
     out = eng.run()
     eng.cache.allocator.check_conservation()
-    assert eng.cache.allocator.n_free == eng.cache.allocator.n_usable
+    # after draining, every block is either free or pinned by the prefix
+    # cache (retained for future shared-prefix arrivals)
+    assert eng.cache.allocator.n_free + eng.cache.n_cache_blocks \
+        == eng.cache.allocator.n_usable
     for i, spec in enumerate(specs):
         got = out[rids[i]]
         assert len(got) <= spec["n"]
         solo = _solo_stream(model, params, spec["prompt"], n=spec["n"])
         np.testing.assert_array_equal(got, solo[:len(got)], err_msg=str(i))
         assert len(got) == len(solo)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), chunk=st.sampled_from([0, 8, 16]),
+       warm=st.booleans())
+def test_batch_invariance_across_chunk_size_and_cache_state(seed, chunk,
+                                                            warm):
+    """A request's stream is unchanged whether its prefix hit or missed
+    the cache and whether its prefill ran whole or chunked: random
+    overlapping-prefix arrivals under every chunking regime, optionally
+    against a pre-warmed cache, all match the cold whole-prefill solo
+    baseline."""
+    cfg, model, params, batch_d = _setup("smollm-360m", prompt_len=32,
+                                         batch=4)
+    prompts = _prompts(batch_d)
+    rng = np.random.default_rng(seed)
+    eng = Engine(model, params, max_batch=3, block_size=8, n_blocks=32,
+                 prefill_chunk_tokens=chunk)
+    if warm:                                  # populate the prefix cache
+        w = eng.submit(prompts[0], max_new_tokens=2)
+        eng.run()
+        del eng.requests[w]
+    # overlapping prompts (prefixes of the same rows) force a mix of full,
+    # partial-tail, and missed lookups
+    specs = [dict(prompt=prompts[int(rng.integers(0, 2))]
+                  [:int(rng.choice([9, 17, 25, 32]))],
+                  n=int(rng.integers(3, 7)),
+                  arrive=int(rng.integers(0, 4)))
+             for _ in range(int(rng.integers(3, 6)))]
+    rids = {}
+    step = 0
+    for i in sorted(range(len(specs)),
+                    key=lambda i: (specs[i]["arrive"], i)):
+        while step < specs[i]["arrive"]:
+            eng.step()
+            step += 1
+        rids[i] = eng.submit(specs[i]["prompt"],
+                             max_new_tokens=specs[i]["n"])
+    out = eng.run()
+    eng.cache.allocator.check_conservation()
+    eng.cache.prefix.check_integrity()
+    assert eng.cache.allocator.n_free + eng.cache.n_cache_blocks \
+        == eng.cache.allocator.n_usable
+    for i, spec in enumerate(specs):
+        solo = _solo_stream(model, params, spec["prompt"], n=spec["n"],
+                            max_batch=3)
+        np.testing.assert_array_equal(out[rids[i]], solo, err_msg=str(i))
+
+
+def test_preemption_of_shared_prefix_request_conserves_blocks():
+    """Preempting a request whose blocks are shared (with another live
+    request and with the prefix cache) must drop only the victim's refs:
+    the survivor keeps streaming correctly, the pool stays conserved, and
+    the victim completes after re-admission with its exact solo stream."""
+    cfg, model, params, batch_d = _setup("smollm-360m", prompt_len=32,
+                                         batch=3)
+    prompts = _prompts(batch_d)
+    shared = prompts[0][:16]                   # 2 full blocks of prefix
+    a = np.concatenate([shared, prompts[1][:9]])
+    b = np.concatenate([shared, prompts[2][:9]])
+    # 7 usable blocks: each request peaks at 5 (25 prompt + 12 new), so
+    # the pair only fits while the prefix is shared — growth must preempt
+    eng = Engine(model, params, max_batch=2, block_size=8, n_blocks=8,
+                 prefill_chunk_tokens=8)
+    r0 = eng.submit(a, max_new_tokens=12)
+    r1 = eng.submit(b, max_new_tokens=12)
+    out = eng.run()
+    assert eng.sched.n_preemptions > 0, \
+        "pool was sized so decode growth must preempt the younger request"
+    assert eng.stats["hit_blocks"] > 0 or eng.stats["dedup_swaps"] > 0, \
+        "the common prefix must actually be shared"
+    eng.cache.allocator.check_conservation()
+    eng.cache.prefix.check_integrity()
+    assert eng.cache.allocator.n_free + eng.cache.n_cache_blocks \
+        == eng.cache.allocator.n_usable
+    for rid, prompt in ((r0, a), (r1, b)):
+        assert len(out[rid]) == 12
+        solo = _solo_stream(model, params, prompt, n=12, max_batch=2)
+        np.testing.assert_array_equal(out[rid], solo)
 
 
 def test_preemption_requeue_completes_and_matches_solo():
@@ -163,7 +248,8 @@ def test_preemption_requeue_completes_and_matches_solo():
     out = eng.run()
     assert eng.sched.n_preemptions > 0, "pool was sized to force preemption"
     eng.cache.allocator.check_conservation()
-    assert eng.cache.allocator.n_free == eng.cache.allocator.n_usable
+    assert eng.cache.allocator.n_free + eng.cache.n_cache_blocks \
+        == eng.cache.allocator.n_usable
     for i, rid in enumerate(rids):
         assert len(out[rid]) == 10
         solo = _solo_stream(model, params, prompts[i], n=10, max_batch=3)
