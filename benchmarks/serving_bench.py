@@ -20,6 +20,11 @@ Reported (CSV rows like benchmarks/run.py, JSON via ``--json``):
     TTFT (steps and ms), peak pool blocks in use, and tokens/s for both
     regimes, plus the analytic cold/warm TTFT lower bounds
     (analysis/roofline.prefix_cache_terms)
+  * serving/chaos_*                — the degraded-mode A/B: the same
+    arrival trace with a seeded fault storm off (calm) and on (storm),
+    through an engine with admission control + always-on auditing —
+    tokens/s, shed rate, quarantine count, p99 TTFT, and the storm's
+    throughput retention
 
 Results are written to ``BENCH_serving.json`` (repo root by default) so
 the serving-perf trajectory is tracked in-repo; CI runs
@@ -135,7 +140,7 @@ def run_trace(*, arch="smollm-360m", n_requests=8, max_batch=4,
                   for r in rids if r in first_t)
     mean_ctx = int(np.mean([len(eng.requests[r].prompt)
                             + len(eng.requests[r].emitted) for r in rids]))
-    stats = eng.stats
+    stats = eng.stats()
     return {
         "arch": cfg.name,
         "n_requests": n_requests,
@@ -228,10 +233,10 @@ def run_shared_prefix(*, arch="smollm-360m", n_requests=6, prefix_len=48,
             "ttft_p50_steps": ttft_steps[len(ttft_steps) // 2],
             "peak_blocks": peak_blocks,
             "tokens_per_s": total / wall,
-            "hit_rate": eng.stats["hit_tokens"] / n_prefill,
-            "forks": eng.stats["forks"],
-            "dedup_swaps": eng.stats["dedup_swaps"],
-            "stored_prefix_copies": (eng.stats["cache_blocks"]
+            "hit_rate": eng.stats()["hit_tokens"] / n_prefill,
+            "forks": eng.stats()["forks"],
+            "dedup_swaps": eng.stats()["dedup_swaps"],
+            "stored_prefix_copies": (eng.stats()["cache_blocks"]
                                      if prefix_cache else None),
         }
 
@@ -252,6 +257,102 @@ def run_shared_prefix(*, arch="smollm-360m", n_requests=6, prefix_len=48,
     }
 
 
+def run_chaos(*, arch="smollm-360m", n_requests=8, max_batch=4,
+              block_size=8, n_blocks=24, prompt_lens=(16, 24),
+              budgets=(4, 6), mean_gap=1, chaos_seed=1234,
+              storm_steps=24, storm_rate=0.5, seed=0):
+    """Degraded-mode A/B: the same seeded arrival trace driven twice —
+    fault storm off, then on (``FaultInjector.seeded(chaos_seed)``) —
+    through an engine with admission control + auditing enabled.
+    Reports per-regime tokens/s, shed rate, quarantine count, and p99
+    TTFT: the cost of surviving the storm."""
+    from repro.core.config import ShapeSpec, get_config, smoke_config
+    from repro.data.pipeline import SyntheticTokens
+    from repro.models.transformer import Runtime, build_model
+    from repro.parallel.sharding import make_parallel_config
+    from repro.serve.engine import Engine
+    from repro.serve.faults import FaultInjector
+
+    cfg = smoke_config(get_config(arch))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeSpec("bench", max(prompt_lens), max(4, n_requests),
+                      "prefill")
+    par = make_parallel_config(mesh, shape)
+    model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.asarray(
+        SyntheticTokens(cfg, shape, par, mesh).batch(0)["tokens"])
+    trace = _trace(np.random.default_rng(seed), n_requests, prompt_lens,
+                   budgets, mean_gap)
+
+    def drive(faulty):
+        eng = Engine(model, params, max_batch=max_batch,
+                     block_size=block_size, n_blocks=n_blocks,
+                     prefill_chunk_tokens=8, max_queue=2 * max_batch,
+                     max_retries=6, audit=True)
+        eng.warm_prefill(max(prompt_lens) + max(budgets))
+        w = eng.submit(prompts[0][:prompt_lens[0]], max_new_tokens=2)
+        eng.run()
+        del eng.requests[w]
+        if faulty:
+            # timeline starts after warmup: the storm hits the trace
+            eng.install_faults(FaultInjector.seeded(
+                chaos_seed, n_steps=storm_steps, rate=storm_rate))
+        submit_t, first_t = {}, {}
+        pending = sorted(trace, key=lambda x: x[0])
+        rids = []
+        step, i = 0, 0
+        t_start = time.perf_counter()
+        while len(rids) < len(pending) or not eng.sched.idle:
+            while len(rids) < len(pending) and pending[len(rids)][0] <= step:
+                _, plen, n_new, temp = pending[len(rids)]
+                r = eng.submit(prompts[i % len(prompts)][:plen],
+                               max_new_tokens=n_new, temperature=temp,
+                               seed=i)
+                submit_t[r] = time.perf_counter()
+                rids.append(r)
+                i += 1
+            for r, toks in eng.step().items():
+                if r not in first_t and toks:
+                    first_t[r] = time.perf_counter()
+            step += 1
+            if step > 100_000:
+                raise RuntimeError("chaos trace did not drain")
+        wall = time.perf_counter() - t_start
+        eng.release_faults()
+        eng.cache.allocator.check_conservation()   # survives the storm
+        s = eng.stats()
+        total = sum(len(eng.requests[r].emitted) for r in rids)
+        ttft = sorted((first_t[r] - submit_t[r]) * 1e3
+                      for r in rids if r in first_t)
+        return {
+            "tokens_per_s": total / wall,
+            "total_tokens": total,
+            "shed": s["shed"],
+            "shed_rate": s["shed"] / n_requests,
+            "quarantined": s["quarantined"],
+            "expired": s["expired"],
+            "failed": s["failed"],
+            "retried": s["retried"],
+            "watchdog_trips": s["watchdog_trips"],
+            "preemptions": s["n_preemptions"],
+            "ttft_p99_ms": (ttft[max(0, int(0.99 * len(ttft)) - 1)]
+                            if ttft else None),
+            "terminal_states": {
+                st: sum(1 for r in rids if eng.requests[r].state == st)
+                for st in ("finished", "rejected", "expired", "failed")},
+            "faults_applied": dict(eng.injector.counts) if faulty else None,
+        }
+
+    calm = drive(False)
+    storm = drive(True)
+    return {"chaos_seed": chaos_seed, "storm_steps": storm_steps,
+            "storm_rate": storm_rate, "n_requests": n_requests,
+            "calm": calm, "storm": storm,
+            "throughput_retention": (storm["tokens_per_s"]
+                                     / calm["tokens_per_s"])}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -259,14 +360,17 @@ def main(argv=None):
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
-    kw, spkw = {}, {}
+    kw, spkw, chkw = {}, {}, {}
     if args.smoke:
         kw = dict(n_requests=5, prompt_lens=(16, 24), budgets=(3, 4),
                   n_blocks=24)   # small pool: exercises queueing on CI
         spkw = dict(n_requests=4, prefix_len=32, n_blocks=64)
+        chkw = dict(n_requests=5, budgets=(3, 4), storm_steps=16)
     res = run_trace(**kw)
     sp = run_shared_prefix(**spkw)
     res["shared_prefix"] = sp
+    ch = run_chaos(**chkw)
+    res["chaos"] = ch
 
     row("serving/tokens_per_s", 0, f"{res['tokens_per_s']:.2f}")
     row("serving/p50_token_ms", f"{res['p50_token_ms'] * 1e3:.0f}",
@@ -303,6 +407,18 @@ def main(argv=None):
         f"prefill_flops_saved={sps['prefill_flops_saved_frac']:.2f} "
         f"ttft_lb_cold={sps['ttft_s_lower_bound_cold']:.2e}s "
         f"ttft_lb_cached={sps['ttft_s_lower_bound_cached']:.2e}s")
+    for regime in ("calm", "storm"):
+        c = ch[regime]
+        ttft = (f"{c['ttft_p99_ms']:.1f}ms" if c["ttft_p99_ms"] is not None
+                else "n/a")
+        row(f"serving/chaos_{regime}", 0,
+            f"tok_s={c['tokens_per_s']:.2f} shed_rate={c['shed_rate']:.2f} "
+            f"quarantined={c['quarantined']} expired={c['expired']} "
+            f"retried={c['retried']} watchdog_trips={c['watchdog_trips']} "
+            f"p99_ttft={ttft}")
+    row("serving/chaos_retention", 0,
+        f"{ch['throughput_retention']:.2f} of calm tokens/s under a "
+        f"rate={ch['storm_rate']} seed={ch['chaos_seed']} fault storm")
 
     out = dict(version=1, generated_by="benchmarks/serving_bench.py",
                smoke=bool(args.smoke), result=res, rows=ROWS)

@@ -5,9 +5,16 @@ legacy fixed-slot dense-cache engine for an A/B of the same prompts, and a
 shared-system-prompt pass showing the content-addressed prefix cache
 (identical prefixes stored once, chunked prefill skipping cached blocks).
 
+With ``--chaos-seed N`` the continuous-batching pass runs under a seeded
+fault storm (serve/faults.py: pool squeezes, NaN logits, dropped steps,
+preemption storms …) with deadlines, admission control, and always-on
+invariant auditing — demonstrating that every request still reaches a
+definite terminal status and fault-free streams are untouched.
+
     python examples/long_context_serve.py          # sets its own XLA_FLAGS
     python examples/long_context_serve.py --prefill-chunk-tokens 128
     python examples/long_context_serve.py --no-prefix-cache
+    python examples/long_context_serve.py --chaos-seed 7
 """
 import os
 
@@ -30,7 +37,8 @@ from repro.parallel.sharding import make_parallel_config  # noqa: E402
 from repro.serve.engine import Engine, FixedSlotEngine  # noqa: E402
 
 
-def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True):
+def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True,
+        chaos_seed: int = None):
     cfg = smoke_config(get_config("qwen3-8b"))
     if window:
         cfg = cfg.replace(attn=dataclasses.replace(cfg.attn, window=window))
@@ -43,22 +51,43 @@ def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True):
     prompts = np.asarray(batch["tokens"])
 
     # --- continuous batching: requests arrive over time, with different
-    # budgets, into a paged pool (mixed in-flight lengths per step)
+    # budgets, into a paged pool (mixed in-flight lengths per step).
+    # Under --chaos-seed the same pass runs chaos-hardened: bounded queue,
+    # deadlines, retries, quarantine, per-step invariant audit
+    faults = None
+    if chaos_seed is not None:
+        from repro.serve.faults import FaultInjector
+        faults = FaultInjector.seeded(chaos_seed, n_steps=24, rate=0.5)
     eng = Engine(model, params, max_batch=4, block_size=64, n_blocks=80,
                  prefill_chunk_tokens=chunk_tokens,
-                 prefix_cache=prefix_cache)
+                 prefix_cache=prefix_cache,
+                 max_queue=8, audit=chaos_seed is not None, faults=faults)
     t0 = time.time()
     rids = []
     for i in range(prompts.shape[0]):
-        rids.append(eng.submit(prompts[i], max_new_tokens=4 + 2 * i))
+        rids.append(eng.submit(prompts[i], max_new_tokens=4 + 2 * i,
+                               deadline_steps=200 if chaos_seed is not None
+                               else None))
         eng.step()                     # staggered: admit + decode as we go
     out = eng.run()
     dt = time.time() - t0
     tag = f"window={window}" if window else "full attention"
     total = sum(len(out[r]) for r in rids)
     print(f"[{tag:>16}] paged: 4×1024-token prompts, staggered, "
-          f"{total} tokens in {dt:.2f}s over {eng.stats['steps']} steps; "
+          f"{total} tokens in {dt:.2f}s over {eng.stats()['steps']} steps; "
           f"req0: {[int(t) for t in out[rids[0]]]}")
+    if chaos_seed is not None:
+        s = eng.stats()
+        states = {r: eng.requests[r].state for r in rids}
+        print(f"[{tag:>16}] chaos(seed={chaos_seed}): "
+              f"faults={s['faults']} terminal={states} "
+              f"shed={s['shed']} retried={s['retried']} "
+              f"quarantined={s['quarantined']} expired={s['expired']} "
+              f"watchdog_trips={s['watchdog_trips']} "
+              f"audit_passes={s['audit_passes']}")
+        eng.cache.allocator.check_conservation()
+        print(f"[{tag:>16}] chaos: every request terminal, allocator "
+              f"conservation holds after the storm")
 
     # --- shared system prompt: the same 1024-token prefix, four different
     # user turns.  With the prefix cache the first request prefills the
@@ -73,13 +102,13 @@ def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True):
         rs = [eng.submit(p, max_new_tokens=4) for p in turns]
         eng.run()
         dt = time.time() - t0
-        pc = eng.stats["prefix_cache"]
+        pc = eng.stats()["prefix_cache"]
         print(f"[{tag:>16}] shared system prompt: 4 turns × "
               f"{len(system)}-token prefix in {dt:.2f}s; "
               f"hit_tokens={pc['hit_tokens']} "
-              f"stored_blocks={eng.stats['cache_blocks']} "
-              f"forks={eng.stats['forks']} "
-              f"dedup_swaps={eng.stats['dedup_swaps']}")
+              f"stored_blocks={eng.stats()['cache_blocks']} "
+              f"forks={eng.stats()['forks']} "
+              f"dedup_swaps={eng.stats()['dedup_swaps']}")
 
     # --- fixed-slot dense oracle on the same prompts (uniform budget;
     # 1024 + 6 is NOT a multiple of the 4 seq shards — the padded cache
@@ -101,9 +130,14 @@ if __name__ == "__main__":
                          "(0 = whole-prompt prefill)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable content-addressed prefix sharing")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="run the continuous-batching pass under a seeded "
+                         "fault storm (deterministic; same seed, same "
+                         "storm) with auditing + deadlines enabled")
     args = ap.parse_args()
     kw = dict(chunk_tokens=args.prefill_chunk_tokens,
-              prefix_cache=not args.no_prefix_cache)
+              prefix_cache=not args.no_prefix_cache,
+              chaos_seed=args.chaos_seed)
     run(window=0, **kw)
     run(window=256, **kw)   # Appendix-F sliding window: prefill ring
     #                         truncated, paged decode masks beyond the

@@ -72,11 +72,18 @@ def main(argv=None):
                             temperature=args.temperature)
         dt = time.time() - t0
         tag = (f"paged bs={args.block_size} pool={n_blocks} "
-               f"steps={eng.stats['steps']} "
-               f"preempt={eng.stats['n_preemptions']}")
+               f"steps={eng.stats()['steps']} "
+               f"preempt={eng.stats()['n_preemptions']}")
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"generated={args.gen} tokens in {dt:.2f}s "
           f"({args.gen * args.batch / dt:.1f} tok/s) [{tag}]")
+    if not args.fixed_slot:
+        s = eng.stats()
+        print("robustness: "
+              f"shed={s['shed']} retried={s['retried']} "
+              f"quarantined={s['quarantined']} expired={s['expired']} "
+              f"failed={s['failed']} watchdog_trips={s['watchdog_trips']} "
+              f"audit_passes={s['audit_passes']}")
     print("sampled token ids (first request):",
           [int(t) for t in toks[0][:16]])
     return 0

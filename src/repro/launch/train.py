@@ -79,14 +79,24 @@ def main(argv=None):
     ds = SyntheticTokens(cfg, shape, par, mesh)
 
     t0 = time.time()
+    n_skipped = 0
     for i in range(args.steps):
         params, opt, m = step(params, opt, ds.batch(i))
+        if int(m["skipped_nonfinite"]):
+            # log the first skip loudly, then just count — a burst of bad
+            # steps must not flood the log
+            if n_skipped == 0:
+                print(f"step {i:5d} non-finite loss/grads — optimizer "
+                      f"update skipped (params untouched); further skips "
+                      f"counted silently", flush=True)
+            n_skipped += 1
         if i % args.log_every == 0 or i == args.steps - 1:
             loss = float(m["loss"])
             dt = time.time() - t0
             tok_s = (i + 1) * args.batch * args.seq / max(dt, 1e-9)
             print(f"step {i:5d} loss {loss:.4f} lr {float(m['lr']):.2e} "
-                  f"gnorm {float(m['gnorm']):.2f} tok/s {tok_s:.0f}",
+                  f"gnorm {float(m['gnorm']):.2f} tok/s {tok_s:.0f}"
+                  + (f" skipped {n_skipped}" if n_skipped else ""),
                   flush=True)
         if args.ckpt_dir and args.ckpt_every and \
                 (i + 1) % args.ckpt_every == 0:

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import ModelConfig
+from repro.serve.faults import AuditFailure
 
 
 class PoolExhausted(RuntimeError):
@@ -554,6 +555,67 @@ class PagedKVCache:
             self.table[slot, d] = canonical
             self.counters["dedup_swaps"] += 1
 
+    # ------------------------------------------------- fault / audit hooks
+    def corrupt_block(self, b: int) -> None:
+        """Scribble NaN over block ``b`` in every layer pool (fault
+        injection: a corrupted block is detected downstream as NaN logits
+        in the row that attends it)."""
+        for pk in self.pools:
+            self.pools[pk] = _poison_block(self.pools[pk], b)
+
+    def scrub_slot(self, slot: int, rid: int) -> int:
+        """Zero every block of ``slot`` that ``rid`` owns exclusively —
+        quarantine hygiene: poisoned content must never survive into the
+        free list (shared blocks are other owners' clean data and are left
+        alone).  Returns the number of blocks scrubbed."""
+        n = int(self.n_assigned[slot])
+        scrubbed = 0
+        for i in range(n):
+            b = int(self.table[slot, i])
+            if b and self.allocator.owners(b) == (rid,):
+                for pk in self.pools:
+                    self.pools[pk] = _zero_block(self.pools[pk], b)
+                scrubbed += 1
+        return scrubbed
+
+    def audit(self, running: Optional[Dict[int, object]] = None) -> None:
+        """Run the allocator / prefix-trie / block-table invariants and
+        raise a structured :class:`AuditFailure` naming the first violated
+        one.  ``running`` is the scheduler's slot→request map; when given,
+        table ownership is cross-checked against it."""
+        try:
+            self.allocator.check_conservation()
+        except AssertionError as e:
+            raise AuditFailure("allocator_conservation", str(e)) from e
+        if self.prefix is not None:
+            try:
+                self.prefix.check_integrity()
+            except AssertionError as e:
+                raise AuditFailure("prefix_trie", str(e)) from e
+        if running is None:
+            return
+        for slot in range(self.max_reqs):
+            n = int(self.n_assigned[slot])
+            req = running.get(slot)
+            if req is None:
+                if n:
+                    raise AuditFailure(
+                        "table_ownership",
+                        f"idle slot {slot} still holds {n} blocks")
+                continue
+            for i in range(n):
+                b = int(self.table[slot, i])
+                if b and req.rid not in self.allocator.owners(b):
+                    raise AuditFailure(
+                        "table_ownership",
+                        f"slot {slot} tables block {b} not owned by "
+                        f"rid {req.rid} (owners {self.allocator.owners(b)})")
+            if np.any(self.table[slot, n:]):
+                raise AuditFailure(
+                    "table_ownership",
+                    f"slot {slot} has table entries beyond "
+                    f"n_assigned={n}")
+
     # ------------------------------------------------------------- page io
     def page_in(self, slot: int, dense_cache: Dict[str, jax.Array],
                 n_tokens: int) -> None:
@@ -602,3 +664,15 @@ def _copy_block(pool, src, dst):
     """Copy-on-write fork: duplicate one block across all layers in the
     donated pool (L, N, bs, ...)."""
     return pool.at[:, dst].set(pool[:, src])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _poison_block(pool, b):
+    """Fault injection: fill one block with NaN across all layers."""
+    return pool.at[:, b].set(jnp.nan)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_block(pool, b):
+    """Quarantine scrub: zero one block across all layers."""
+    return pool.at[:, b].set(0)

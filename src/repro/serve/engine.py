@@ -4,8 +4,11 @@
 cache (serve/cache.py + serve/scheduler.py):
 
   * ``submit(prompt, max_new_tokens=…, temperature=…, seed=…,
-    stop_tokens=…) -> rid`` — enqueue a request (per-request sampling
-    params and stop conditions);
+    stop_tokens=…, deadline_steps=…) -> rid`` — enqueue a request
+    (per-request sampling params, stop conditions, and an optional TTL on
+    the scheduler clock).  Admission control may *shed* the request: the
+    returned rid's request is then terminal ``REJECTED`` with a structured
+    reason, never having touched the block pool;
   * ``step() -> {rid: [new tokens]}`` — one engine step: admit waiting
     requests into free batch slots (sharing prefix-cache blocks when
     their prompt prefix is already pooled), run each mid-prefill
@@ -17,14 +20,38 @@ cache (serve/cache.py + serve/scheduler.py):
     and kills head-of-line blocking; ``prefill_chunk_tokens=0`` prefills
     whole prompts in one chunk;
   * ``stream(rid)`` / ``run()`` — drive ``step`` until a request / all
-    requests finish.
+    requests reach a terminal state.
+
+Robustness machinery (see serve/faults.py and the chaos suite):
+
+  * **fault injection** — ``Engine(faults=FaultInjector(...))`` threads a
+    deterministic, seeded fault schedule through the step loop: pool
+    squeezes, NaN-poisoned logits, dropped/slow decode steps, corrupted
+    pool blocks, preemption storms — all replayable byte-for-byte;
+  * **NaN/Inf quarantine** — the decode step returns a per-row finite
+    flag; a poisoned row is terminally ``FAILED`` (its exclusive blocks
+    scrubbed then freed, shared refcounts intact) while the rest of the
+    batch streams on — batch invariance means the survivors' tokens are
+    unchanged;
+  * **retry with capped backoff** — a dropped decode step advances no
+    request; the engine backs off exponentially (capped) and retries,
+    failing a request only after ``max_retries`` dropped attempts;
+  * **forward-progress watchdog** — repeated preempt/readmit with no
+    emitted tokens degrades admission to serial until pressure clears
+    (scheduler-side; see Scheduler.record_progress);
+  * **invariant auditing** — ``Engine(audit=True)`` re-checks allocator
+    conservation, prefix-trie integrity, and block-table ownership after
+    every step, raising a structured :class:`AuditFailure` naming the
+    violated invariant.
 
 Determinism: sampling keys are ``fold_in(PRNGKey(seed), position)`` — a
 request's token stream depends only on its own (prompt, params), never on
 what else is in the batch, which is the batch-invariance property the test
 suite asserts.  Preemption (pool pressure) is recompute-style: the
 victim's blocks are freed and its context is re-prefilled on re-admission,
-so no emitted token is lost or re-sampled.
+so no emitted token is lost or re-sampled.  Faults perturb *scheduling*,
+never a surviving request's numerics — fault-free requests stream
+token-identical to a zero-fault run.
 
 :class:`FixedSlotEngine` — the seed engine's fixed-slot ``generate`` API
 (one prefill + a dense contiguous cache), upgraded to per-request
@@ -43,7 +70,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.cache import PagedKVCache
-from repro.serve.scheduler import Request, SamplingParams, Scheduler
+from repro.serve.faults import FAULT_OWNER, FaultInjector
+from repro.serve.scheduler import (DECODE, PREFILL, Request, SamplingParams,
+                                   Scheduler)
 
 # dense-cache keys whose seq axis (2) gets decode headroom padding.
 # ssm/hybrid are absent: their prefill builds no decode cache (seed
@@ -69,7 +98,15 @@ class Engine:
                  max_blocks_per_req: Optional[int] = None,
                  use_mesh_sharding: bool = True,
                  prefill_chunk_tokens: int = 32,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 max_queue: Optional[int] = None,
+                 admit_watermark: float = 0.0,
+                 max_retries: int = 8,
+                 backoff_cap: int = 8,
+                 watchdog_window: int = 8,
+                 watchdog_threshold: int = 3,
+                 audit: bool = False,
+                 faults: Optional[FaultInjector] = None):
         cfg = model.cfg
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
@@ -93,7 +130,11 @@ class Engine:
             mesh=mesh, seq_axis=model.rt.par.seq_axis,
             prefix_cache=prefix_cache)
         self.sched = Scheduler(self.cache, max_batch,
-                               prefill_chunk_tokens=prefill_chunk_tokens)
+                               prefill_chunk_tokens=prefill_chunk_tokens,
+                               max_queue=max_queue,
+                               admit_watermark=admit_watermark,
+                               watchdog_window=watchdog_window,
+                               watchdog_threshold=watchdog_threshold)
         self.max_batch = max_batch
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.requests: Dict[int, Request] = {}
@@ -111,20 +152,47 @@ class Engine:
         self._chunk_jit = jax.jit(self._chunk_step_fn, donate_argnums=(1,))
         self._decode_jit = jax.jit(self._decode_step_fn, donate_argnums=(1,))
         self._base_keys: Dict[int, jax.Array] = {}
+        # robustness state
+        self.audit_mode = bool(audit)
+        self.max_retries = int(max_retries)
+        self.backoff_cap = int(backoff_cap)
+        self.injector = faults
+        self.step_idx = 0                 # fault-schedule timeline
+        self._squeezes: List[Tuple[int, List[int]]] = []  # (release, ids)
+        self._backoff_until = 0
+        self._consec_drops = 0
+        self.counters = dict(quarantined=0, retried=0, backoff_steps=0,
+                             audit_passes=0)
+
+    def install_faults(self, injector: Optional[FaultInjector]) -> None:
+        """(Re-)attach a fault schedule with its timeline starting at the
+        *next* step — lets benches warm up fault-free, then storm."""
+        self.release_faults()
+        self.injector = injector
+        self.step_idx = 0
 
     # -------------------------------------------------------------- intake
     def submit(self, prompt, *, max_new_tokens: int = 16,
                temperature: float = 0.0, seed: int = 0,
-               stop_tokens: Tuple[int, ...] = ()) -> int:
+               stop_tokens: Tuple[int, ...] = (),
+               deadline_steps: Optional[int] = None) -> int:
         params = SamplingParams(max_new_tokens=max_new_tokens,
                                 temperature=float(temperature),
                                 seed=int(seed),
                                 stop_tokens=tuple(int(t)
                                                   for t in stop_tokens))
-        req = self.sched.submit(prompt, params)
+        req = self.sched.submit(prompt, params,
+                                deadline_steps=deadline_steps)
         self.requests[req.rid] = req
-        self._base_keys[req.rid] = jax.random.PRNGKey(params.seed)
+        if not req.done:                  # shed requests never run
+            self._base_keys[req.rid] = jax.random.PRNGKey(params.seed)
         return req.rid
+
+    def status(self, rid: int) -> Tuple[str, Optional[str]]:
+        """(state, finish_reason) of a request — terminal states are
+        definite: finished / rejected / expired / failed."""
+        req = self.requests[rid]
+        return req.state, req.finish_reason
 
     # ------------------------------------------------------------- prefill
     _NKV_BUCKET = 4          # table-width shape bucket for the chunk jit
@@ -183,19 +251,106 @@ class Engine:
         return len(shapes)
 
     # -------------------------------------------------------------- decode
-    def _decode_step_fn(self, params, pools, table, pos, tok, temps, keys):
+    def _decode_step_fn(self, params, pools, table, pos, tok, temps, keys,
+                        poison):
         cache = {**pools, "block_table": table}
         logits, cache2 = self.model.decode(params, cache,
                                            {"token": tok, "pos": pos})
-        lf = logits[:, -1].astype(jnp.float32)
+        # poison is all-zero in normal operation (adding 0 is exact in
+        # f32, so the fault hook costs nothing numerically); the NaN
+        # guard's per-row finite flag is computed AFTER it so injected
+        # and organic non-finites take the same quarantine path
+        lf = logits[:, -1].astype(jnp.float32) + poison[:, None]
+        ok = jnp.all(jnp.isfinite(lf), axis=-1)
         nxt = _sample(lf, temps, keys)
-        return nxt, {k: cache2[k] for k in pools}
+        return nxt, ok, {k: cache2[k] for k in pools}
 
     def _key_for(self, req: Request, position: int) -> jax.Array:
         """Sampling key of the token that will sit at context
         ``position`` — a pure function of (seed, position), so streams are
         batch- and preemption-invariant."""
         return jax.random.fold_in(self._base_keys[req.rid], position)
+
+    # ------------------------------------------------------- fault plumbing
+    def _release_due_squeezes(self) -> None:
+        keep = []
+        for release_step, ids in self._squeezes:
+            if self.step_idx >= release_step:
+                self.cache.allocator.free(ids, FAULT_OWNER)
+            else:
+                keep.append((release_step, ids))
+        self._squeezes = keep
+
+    def release_faults(self) -> None:
+        """Return every fault-held (squeezed) block to the pool — called
+        automatically when ``run`` drains; manual steppers may call it
+        before checking conservation-at-exit."""
+        for _, ids in self._squeezes:
+            self.cache.allocator.free(ids, FAULT_OWNER)
+        self._squeezes = []
+
+    def _apply_pre_plan_faults(self, events) -> Tuple[bool, list]:
+        """Apply squeeze / storm / corrupt / slow faults (they act on
+        scheduler/cache state the upcoming plan must see).  Returns
+        (decode_dropped, nan_events)."""
+        inj, drop, nan_events = self.injector, False, []
+        for e in events:
+            if e.kind == "squeeze":
+                take = min(e.magnitude, self.cache.allocator.n_free)
+                if take:
+                    ids = self.cache.allocator.alloc(FAULT_OWNER, take)
+                    self._squeezes.append((self.step_idx + e.duration, ids))
+                    inj.fired(self.step_idx, e.kind,
+                              f"held {take} blocks for {e.duration} steps")
+                else:
+                    inj.fired(self.step_idx, e.kind, "no free blocks")
+            elif e.kind == "preempt_storm":
+                victims = self.sched.force_preempt(e.magnitude)
+                inj.fired(self.step_idx, e.kind,
+                          f"preempted rids {[v.rid for v in victims]}")
+            elif e.kind == "slow_step":
+                self.sched.advance_clock(e.magnitude)
+                inj.fired(self.step_idx, e.kind,
+                          f"+{e.magnitude} clock ticks")
+            elif e.kind == "corrupt_block":
+                victim, block = self._corruption_victim(e)
+                if victim is None:
+                    inj.fired(self.step_idx, e.kind, "no candidate")
+                else:
+                    self.cache.corrupt_block(block)
+                    inj.fired(self.step_idx, e.kind,
+                              f"rid={victim.rid} block={block}")
+            elif e.kind == "drop_step":
+                drop = True
+                inj.fired(self.step_idx, e.kind, "decode step dropped")
+            elif e.kind == "nan_logits":
+                nan_events.append(e)      # resolved once live rows known
+        return drop, nan_events
+
+    def _corruption_victim(self, event):
+        """Deterministic corruption target: a decode-phase request's last
+        block, exclusively owned (never a shared/prefix-indexed block —
+        corruption must poison exactly one request)."""
+        cands = []
+        for slot in sorted(self.sched.running):
+            r = self.sched.running[slot]
+            if r.cached < r.n_prefill:
+                continue
+            n = int(self.cache.n_assigned[slot])
+            b = int(self.cache.table[slot, n - 1]) if n else 0
+            if b and self.cache.allocator.owners(b) == (r.rid,):
+                cands.append((r, b))
+        pick = self.injector.pick(event, cands)
+        return pick if pick is not None else (None, None)
+
+    def _quarantine(self, req: Request, reason: str) -> None:
+        """Terminally fail one poisoned request: scrub its exclusively
+        owned blocks (NaN content must not survive into the free list),
+        release its refs (shared blocks stay intact under their other
+        owners), and keep its clean partial stream."""
+        self.cache.scrub_slot(req.slot, req.rid)
+        self.sched.fail(req, reason)
+        self.counters["quarantined"] += 1
 
     # ---------------------------------------------------------- the loop
     def _emit(self, req: Request, token: int, events) -> None:
@@ -208,26 +363,64 @@ class Engine:
 
     def step(self) -> Dict[int, List[int]]:
         """One engine step. Returns {rid: [tokens emitted this step]}."""
+        self._release_due_squeezes()
+        drop, nan_events = False, []
+        if self.injector is not None:
+            drop, nan_events = self._apply_pre_plan_faults(
+                self.injector.events_for(self.step_idx))
+
         plan = self.sched.plan()
         events: Dict[int, List[int]] = {}
 
         for req, start, n in plan.chunks:
-            if req.state != "running":     # preempted after planning
+            if req.state != PREFILL:       # preempted after planning
                 continue
             self._run_chunk(req, start, n)
             req.cached = start + n
+            if req.cached >= req.n_prefill:
+                req.state = DECODE
             # index the newly completed full blocks so later arrivals
             # (and this request's own re-admissions) can share them
             self.cache.register_prefix(req.slot, req.rid, req.context,
                                        req.cached)
 
-        live = [r for r in plan.decode if r.state == "running"]
-        if live:
+        live = [r for r in plan.decode if r.state == DECODE]
+        n_tokens = 0
+        if nan_events and (not live or drop
+                           or self.step_idx < self._backoff_until):
+            for e in nan_events:
+                self.injector.fired(self.step_idx, e.kind,
+                                    "no live decode row")
+            nan_events = []
+        if live and (drop or self.step_idx < self._backoff_until):
+            # transient step fault (or backoff window): no request
+            # advances — next attempt re-samples the same positions, so
+            # streams are unchanged.  Capped exponential backoff between
+            # attempts; a request fails only after max_retries drops.
+            if drop:
+                self._consec_drops += 1
+                self._backoff_until = self.step_idx + 1 + min(
+                    2 ** (self._consec_drops - 1), self.backoff_cap)
+                for r in live:
+                    r.retries += 1
+                    self.counters["retried"] += 1
+                    if r.retries > self.max_retries:
+                        self.sched.fail(r, "retries_exhausted")
+            else:
+                self.counters["backoff_steps"] += 1
+        elif live:
             B = self.max_batch
             tok = np.zeros((B, 1), np.int32)
             pos = np.zeros((B,), np.int32)
             temps = np.zeros((B,), np.float32)
             keys = [jax.random.PRNGKey(0)] * B
+            poison = np.zeros((B,), np.float32)
+            for e in nan_events:
+                victim = self.injector.pick(
+                    e, sorted(live, key=lambda r: r.rid))
+                poison[victim.slot] = np.nan
+                self.injector.fired(self.step_idx, e.kind,
+                                    f"rid={victim.rid}")
             # non-live rows (idle slots AND mid-prefill requests) still flow
             # through the decode step with pos=0/tok=0 — and decode *writes*
             # KV at pos through the table.  Ship them an all-null table row
@@ -240,26 +433,43 @@ class Engine:
                 temps[r.slot] = r.params.temperature
                 keys[r.slot] = self._key_for(r, r.cached + 1)
                 tbl[r.slot] = self.cache.table[r.slot]
-            nxt, pools = self._decode_jit(
+            nxt, ok, pools = self._decode_jit(
                 self.params, self.cache.pools, jnp.asarray(tbl),
                 jnp.asarray(pos), jnp.asarray(tok), jnp.asarray(temps),
-                jnp.stack(keys))
+                jnp.stack(keys), jnp.asarray(poison))
             self.cache.pools = pools
-            nxt = np.asarray(nxt)
+            nxt, ok = np.asarray(nxt), np.asarray(ok)
+            self._consec_drops = 0
             for r in live:
+                if not ok[r.slot]:
+                    # NaN/Inf logits: quarantine exactly this row; the
+                    # poisoned sample is discarded, the clean prefix of
+                    # its stream is kept, and everyone else streams on
+                    self._quarantine(r, "nan_logits")
+                    continue
+                r.retries = 0
                 r.cached += 1
                 self._emit(r, int(nxt[r.slot]), events)
+                n_tokens += 1
+
+        self.sched.record_progress(n_tokens)
+        self.step_idx += 1
+        if self.audit_mode:
+            self.cache.audit(self.sched.running)
+            self.counters["audit_passes"] += 1
         return events
 
     def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
-        """Drive ``step`` until every submitted request finishes; returns
-        {rid: emitted token array}."""
+        """Drive ``step`` until every submitted request reaches a terminal
+        state; returns {rid: emitted token array} (partial streams for
+        expired/failed requests, empty for rejected)."""
         for _ in range(max_steps):
             if self.sched.idle:
                 break
             self.step()
         else:
             raise RuntimeError("engine did not drain (scheduling bug?)")
+        self.release_faults()
         return {rid: np.asarray(r.emitted, np.int32)
                 for rid, r in self.requests.items()}
 
@@ -267,11 +477,11 @@ class Engine:
         """Yield ``rid``'s tokens as they are produced (drives step())."""
         req = self.requests[rid]
         emitted = 0
-        while req.state != "finished" or emitted < len(req.emitted):
+        while True:
             while emitted < len(req.emitted):
                 yield req.emitted[emitted]
                 emitted += 1
-            if req.state == "finished":
+            if req.done:
                 break
             self.step()
 
@@ -294,8 +504,12 @@ class Engine:
         return jnp.asarray(np.stack([out[r][:n_tokens] for r in rids]))
 
     # ---------------------------------------------------------- telemetry
-    @property
     def stats(self) -> dict:
+        """One flat counter dict: scheduler occupancy, pool/cache
+        counters, and the robustness counters (shed, retried, quarantined,
+        expired, watchdog trips, audit passes, per-kind injected
+        faults)."""
+        sc = self.sched.counters
         out = {
             "n_preemptions": self.sched.n_preemptions,
             "steps": self.sched.step_count,
@@ -305,7 +519,16 @@ class Engine:
             "usable_blocks": self.cache.allocator.n_usable,
             "cache_blocks": self.cache.n_cache_blocks,
             **self.cache.counters,
+            "shed": sc["shed"],
+            "expired": sc["expired"],
+            "failed": sc["failed"],
+            "storm_preempts": sc["storm_preempts"],
+            "watchdog_trips": sc["watchdog_trips"],
+            "serial_admission": self.sched.serial_admission,
+            **self.counters,
         }
+        if self.injector is not None:
+            out["faults"] = dict(self.injector.counts)
         if self.cache.prefix is not None:
             out["prefix_cache"] = dict(self.cache.prefix.stats)
         return out

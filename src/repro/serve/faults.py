@@ -1,0 +1,157 @@
+"""Deterministic, seeded fault injection for the serving stack — plus the
+structured failure types the hardened engine raises.
+
+The serving engine built in PRs 5–6 assumed a fault-free world; this
+module supplies the *failure pressure* analogue of the paper's memory
+pressure: a :class:`FaultInjector` carries a static, seeded schedule of
+:class:`FaultEvent`\\ s that the engine applies at the matching step
+indices.  Because the schedule is pure data and every fault is applied at
+a deterministic point of the (host-side, deterministic) engine step loop,
+any fault sequence is replayable byte-for-byte: the same seed produces the
+same schedule, the same quarantines, the same preemptions, and the same
+token streams.
+
+Fault kinds (``FaultEvent.kind``):
+
+  ``squeeze``         steal up to ``magnitude`` free pool blocks for
+                      ``duration`` steps (pool-exhaustion pressure: forces
+                      preemption / admission stalls / shedding);
+  ``nan_logits``      poison one live decode row's logits with NaN this
+                      step (the engine's NaN guard must quarantine exactly
+                      that request);
+  ``drop_step``       the decode step is dropped (transient compute
+                      fault): no tokens land, the engine retries with
+                      capped exponential backoff;
+  ``slow_step``       the step takes ``magnitude`` extra virtual clock
+                      ticks (deadline pressure: TTLs are measured on the
+                      scheduler clock, so slow faults can expire requests);
+  ``corrupt_block``   scribble NaN over one live request's exclusively
+                      owned pool block (detected downstream as NaN logits
+                      → quarantine);
+  ``preempt_storm``   force-preempt the ``magnitude`` youngest running
+                      requests (livelock pressure: repeated storms with no
+                      forward progress must trip the watchdog).
+
+``target`` is not a request id — it is a deterministic *pick index* into
+the sorted list of eligible victims at fire time, so a schedule stays
+meaningful (and replayable) across traces with different request counts.
+
+The injector never mutates engine state itself; the engine asks
+``events_for(step)`` and applies each event through the normal
+cache/scheduler APIs, recording what actually happened via ``fired()`` —
+``injector.log`` is the ground-truth fault trace a test can diff across
+runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+#: every fault kind the injector can schedule
+KINDS = ("squeeze", "nan_logits", "drop_step", "slow_step",
+         "corrupt_block", "preempt_storm")
+
+#: allocator owner id under which squeezed (fault-held) blocks are parked —
+#: they stay *owned*, so allocator conservation holds mid-squeeze
+FAULT_OWNER = -2
+
+
+class AuditFailure(AssertionError):
+    """A serving invariant was violated (``Engine(audit=True)``).
+
+    Structured: ``invariant`` names the violated check (e.g.
+    ``allocator_conservation``, ``prefix_trie``, ``table_ownership``) and
+    ``detail`` carries the failing evidence.
+    """
+
+    def __init__(self, invariant: str, detail: str = ""):
+        self.invariant = invariant
+        self.detail = detail
+        super().__init__(f"audit failed: {invariant}"
+                         + (f" — {detail}" if detail else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault (see module docstring for kind semantics)."""
+    step: int                 # engine step index (0-based) at which it fires
+    kind: str
+    target: int = 0           # pick index into the sorted victim candidates
+    magnitude: int = 1        # blocks squeezed / clock ticks / storm size
+    duration: int = 1         # steps a squeeze is held
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(kinds: {KINDS})")
+        if self.step < 0 or self.magnitude < 1 or self.duration < 1:
+            raise ValueError(f"malformed fault event: {self}")
+
+
+class FaultInjector:
+    """A static schedule of :class:`FaultEvent`\\ s plus the fire log.
+
+    Construct from an explicit event list (engineered scenarios) or with
+    :meth:`seeded` (chaos storms).  The engine consumes the schedule via
+    :meth:`events_for` and reports applied faults via :meth:`fired`; the
+    resulting ``log`` is deterministic given (schedule, submit/step
+    sequence) — byte-for-byte replayability is asserted by the chaos
+    suite.
+    """
+
+    def __init__(self, events: Iterable[FaultEvent] = ()):
+        self.events: Tuple[FaultEvent, ...] = tuple(
+            sorted(events, key=lambda e: (e.step, e.kind, e.target)))
+        self.log: List[Tuple[int, str, str]] = []   # (step, kind, detail)
+        self.counts = {k: 0 for k in KINDS}
+
+    # ------------------------------------------------------------ creation
+    @classmethod
+    def seeded(cls, seed: int, *, n_steps: int = 32, rate: float = 0.3,
+               kinds: Sequence[str] = KINDS,
+               max_magnitude: int = 3,
+               max_duration: int = 3) -> "FaultInjector":
+        """A seeded chaos storm: each step in ``[0, n_steps)`` fires one
+        fault with probability ``rate``, with kind/target/magnitude drawn
+        from ``numpy.random.default_rng(seed)`` — same seed, same storm."""
+        for k in kinds:
+            if k not in KINDS:
+                raise ValueError(f"unknown fault kind {k!r}")
+        rng = np.random.default_rng(seed)
+        events = []
+        for s in range(n_steps):
+            if rng.random() >= rate:
+                continue
+            events.append(FaultEvent(
+                step=s,
+                kind=kinds[int(rng.integers(len(kinds)))],
+                target=int(rng.integers(0, 8)),
+                magnitude=1 + int(rng.integers(0, max_magnitude)),
+                duration=1 + int(rng.integers(0, max_duration))))
+        return cls(events)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def horizon(self) -> int:
+        """First step index past every scheduled fault (incl. squeeze
+        holds) — after this the storm is over and the engine must drain."""
+        return max((e.step + e.duration for e in self.events), default=0)
+
+    def events_for(self, step: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.step == step]
+
+    # ----------------------------------------------------------- reporting
+    def fired(self, step: int, kind: str, detail: str) -> None:
+        """Record a fault the engine actually applied (or skipped for lack
+        of a victim — the detail says which)."""
+        self.log.append((step, kind, detail))
+        self.counts[kind] += 1
+
+    def pick(self, event: FaultEvent, candidates: Sequence) -> object:
+        """Deterministic victim choice: ``target`` modulo the (sorted by
+        the caller) candidate list; ``None`` when there is none."""
+        if not candidates:
+            return None
+        return candidates[event.target % len(candidates)]

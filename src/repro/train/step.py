@@ -28,14 +28,34 @@ from repro.parallel.sharding import param_shardings
 
 
 def make_train_step(model, tc: TrainConfig):
+    """The step carries a non-finite guard: when the loss or any gradient
+    leaf is NaN/Inf (loss-scale overflow, poisoned batch, kernel bug) the
+    optimizer update is *skipped* — params and optimizer state pass
+    through bit-identical (selected leaf-wise, so it composes with
+    argument donation) — and the skip is surfaced in the metrics as
+    ``skipped_nonfinite`` for the loop to count and log."""
     def step(params, opt_state, batch):
         def loss_fn(p):
             loss, metrics = model.loss(p, batch)
             return loss, metrics
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
+        finite = jnp.isfinite(loss)
+        for g in jax.tree_util.tree_leaves(grads):
+            finite &= jnp.all(jnp.isfinite(g))
+        # the update itself runs unconditionally (one trace, no host
+        # sync); ``finite`` selects between new and old leaves
         params2, opt2, om = adamw.update(grads, opt_state, params, tc)
-        return params2, opt2, {"loss": loss, **metrics, **om}
+        keep = partial(jnp.where, finite)
+        params2 = compat.tree_map(keep, params2, params)
+        opt2 = adamw.AdamWState(
+            step=keep(opt2.step, opt_state.step),
+            m=compat.tree_map(keep, opt2.m, opt_state.m),
+            v=compat.tree_map(keep, opt2.v, opt_state.v))
+        om = {k: keep(v, jnp.zeros_like(v)) for k, v in om.items()}
+        return params2, opt2, {"loss": loss, **metrics, **om,
+                               "skipped_nonfinite":
+                                   (1 - finite).astype(jnp.int32)}
     return step
 
 

@@ -1,0 +1,95 @@
+"""Checkpoint integrity: the CRC32 footer written by ``save`` must catch a
+bit-flipped, truncated, or missing checkpoint member at ``restore`` time
+with a structured :class:`CheckpointCorrupt` — never a cryptic
+deserialization failure — while intact checkpoints round-trip exactly."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.io import checkpoint as ckpt
+from repro.io.checkpoint import CheckpointCorrupt
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                       "b": jnp.ones((8,), jnp.bfloat16)},
+            "scale": jnp.float32(3.0)}
+
+
+def _saved(tmp_path):
+    path = os.path.join(str(tmp_path), "ckpt")
+    tree = _tree()
+    ckpt.save(path, tree, step=7)
+    return path, tree
+
+
+def test_intact_checkpoint_round_trips(tmp_path):
+    path, tree = _saved(tmp_path)
+    assert ckpt.latest_step(path) == 7
+    out = ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("offset", [0, 1000, -1])
+def test_bit_flip_is_detected(tmp_path, offset):
+    """Flip one bit anywhere in the weights file → CheckpointCorrupt
+    naming the file, reason 'checksum'."""
+    path, tree = _saved(tmp_path)
+    wpath = os.path.join(path, "weights.npz")
+    blob = bytearray(open(wpath, "rb").read())
+    blob[offset % len(blob)] ^= 0x01
+    open(wpath, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointCorrupt) as ei:
+        ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    assert ei.value.file == "weights.npz"
+    assert ei.value.reason == "checksum"
+
+
+def test_truncation_is_detected(tmp_path):
+    path, tree = _saved(tmp_path)
+    wpath = os.path.join(path, "weights.npz")
+    blob = open(wpath, "rb").read()
+    open(wpath, "wb").write(blob[:len(blob) // 2])
+    with pytest.raises(CheckpointCorrupt) as ei:
+        ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    assert ei.value.reason == "truncated"
+
+
+def test_missing_member_is_detected(tmp_path):
+    path, tree = _saved(tmp_path)
+    os.remove(os.path.join(path, "weights.npz"))
+    with pytest.raises(CheckpointCorrupt) as ei:
+        ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    assert ei.value.reason == "missing" and ei.value.file == "weights.npz"
+
+
+def test_tampered_manifest_is_detected(tmp_path):
+    """The manifest checks itself: editing the recorded step (or the
+    footers) without recomputing the payload checksum is caught."""
+    path, tree = _saved(tmp_path)
+    mpath = os.path.join(path, "manifest.json")
+    m = json.load(open(mpath))
+    m["step"] = 9999
+    json.dump(m, open(mpath, "w"), indent=1, sort_keys=True)
+    with pytest.raises(CheckpointCorrupt) as ei:
+        ckpt.latest_step(path)
+    assert ei.value.file == "manifest.json"
+    assert ei.value.reason == "checksum"
+
+
+def test_footerless_checkpoint_fails_closed(tmp_path):
+    """A manifest with no integrity section (pre-footer format) is
+    refused with a structured reason rather than trusted blindly."""
+    path, tree = _saved(tmp_path)
+    mpath = os.path.join(path, "manifest.json")
+    m = json.load(open(mpath))
+    del m["integrity"], m["manifest_crc32"]
+    json.dump(m, open(mpath, "w"))
+    with pytest.raises(CheckpointCorrupt) as ei:
+        ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    assert ei.value.reason == "no_integrity"

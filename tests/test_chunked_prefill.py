@@ -74,9 +74,9 @@ def test_chunked_prefill_matches_fixed_slot_oracle(arch, window, chunk):
     toks_cold = eng.generate(batch_d, n)
     np.testing.assert_array_equal(np.asarray(toks_fixed),
                                   np.asarray(toks_cold))
-    hits_before = eng.stats["hit_tokens"]
+    hits_before = eng.stats()["hit_tokens"]
     toks_warm = eng.generate(batch_d, n)
-    assert eng.stats["hit_tokens"] > hits_before, \
+    assert eng.stats()["hit_tokens"] > hits_before, \
         "warm pass should be served (partly) from the prefix cache"
     np.testing.assert_array_equal(np.asarray(toks_cold),
                                   np.asarray(toks_warm))
@@ -99,7 +99,7 @@ def test_windowed_reclamation_frees_blocks_and_matches_oracle():
     toks_paged = eng.generate(batch_d, n)
     np.testing.assert_array_equal(np.asarray(toks_fixed),
                                   np.asarray(toks_paged))
-    assert eng.stats["reclaimed"] > 0, \
+    assert eng.stats()["reclaimed"] > 0, \
         "context grew past the window; blocks below it must be reclaimed"
     _drained_conservation(eng)
 
@@ -127,7 +127,7 @@ def test_partial_tail_hit_forks_before_chunk_write():
     out = eng.run()
     req = eng.requests[r1]
     assert req.n_hit == 20, "expected a partial-tail hit (2.5 blocks)"
-    assert eng.stats["forks"] >= 1, \
+    assert eng.stats()["forks"] >= 1, \
         "writing past the shared partial tail must fork the block"
     np.testing.assert_array_equal(out[r1],
                                   _solo_cold(model, params, div, n=4))
@@ -158,7 +158,7 @@ def test_full_prefix_hit_forks_on_first_decode_write():
     req = eng.requests[r1]
     assert req.n_hit == 22 and req.n_hit == len(short) - 1, \
         "whole prefill should be served from the cache"
-    assert eng.stats["forks"] >= 1, \
+    assert eng.stats()["forks"] >= 1, \
         "decode writes into the shared tail block must fork it"
     np.testing.assert_array_equal(out[r1],
                                   _solo_cold(model, params, short, n=4))
@@ -182,7 +182,7 @@ def test_same_step_duplicate_prompts_dedupe_onto_one_copy():
     r0 = eng.submit(p, max_new_tokens=4)
     r1 = eng.submit(p, max_new_tokens=4)
     out = eng.run()
-    assert eng.stats["dedup_swaps"] > 0, \
+    assert eng.stats()["dedup_swaps"] > 0, \
         "the duplicate's full blocks must be swapped onto the canonical copy"
     np.testing.assert_array_equal(out[r0], out[r1])
     np.testing.assert_array_equal(out[r0], _solo_cold(model, params, p, n=4))

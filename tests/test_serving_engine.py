@@ -224,7 +224,7 @@ def test_preemption_of_shared_prefix_request_conserves_blocks():
     out = eng.run()
     assert eng.sched.n_preemptions > 0, \
         "pool was sized so decode growth must preempt the younger request"
-    assert eng.stats["hit_blocks"] > 0 or eng.stats["dedup_swaps"] > 0, \
+    assert eng.stats()["hit_blocks"] > 0 or eng.stats()["dedup_swaps"] > 0, \
         "the common prefix must actually be shared"
     eng.cache.allocator.check_conservation()
     eng.cache.prefix.check_integrity()
@@ -257,10 +257,70 @@ def test_preemption_requeue_completes_and_matches_solo():
 
 
 def test_submit_rejects_never_fitting_request():
+    """Shedding is a structured status, not an exception: a request that
+    could never fit in the pool comes back terminal REJECTED with a
+    reason, and the pool is untouched."""
     cfg, model, params, batch_d = _setup("smollm-360m")
     eng = Engine(model, params, max_batch=2, block_size=8, n_blocks=4)
-    with pytest.raises(ValueError, match="never fit"):
-        eng.submit(_prompts(batch_d)[0], max_new_tokens=32)
+    free_before = eng.cache.allocator.n_free
+    rid = eng.submit(_prompts(batch_d)[0], max_new_tokens=32)
+    state, reason = eng.status(rid)
+    assert state == "rejected" and reason == "never_fits"
+    assert eng.cache.allocator.n_free == free_before
+    assert eng.stats()["shed"] == 1
+    assert eng.sched.idle                 # never entered the queue
+    assert eng.run()[rid].size == 0       # drains trivially, empty stream
+
+
+def test_rejected_at_admission_never_touches_pool():
+    """Queue-depth shedding: the shed request is terminal REJECTED at
+    submit time and the block pool is bit-identical before and after —
+    allocation only ever happens at admission, which it never reaches."""
+    cfg, model, params, batch_d = _setup("smollm-360m")
+    prompts = _prompts(batch_d)
+    eng = Engine(model, params, max_batch=1, block_size=8, n_blocks=24,
+                 max_queue=1)
+    eng.cache.allocator.check_conservation()
+    free_before = eng.cache.allocator.n_free
+    keep = eng.submit(prompts[0][:10], max_new_tokens=4)
+    shed = eng.submit(prompts[1][:10], max_new_tokens=4)
+    assert eng.status(shed) == ("rejected", "queue_full")
+    assert eng.cache.allocator.n_free == free_before
+    eng.cache.allocator.check_conservation()
+    out = eng.run()
+    assert eng.status(keep)[0] == "finished" and out[shed].size == 0
+
+
+def test_deadline_expiry_mid_prefill_returns_partial_stream():
+    """A TTL elapsing while the request is still chunk-prefilling ends it
+    EXPIRED with its (empty) partial stream, blocks released; an expiry
+    landing mid-decode keeps the partial stream, a prefix of the solo
+    run."""
+    cfg, model, params, batch_d = _setup("smollm-360m")
+    prompts = _prompts(batch_d)
+    # chunk=2: a 20-token prompt needs ~10 prefill steps; TTL of 3 ticks
+    # expires mid-prefill
+    eng = Engine(model, params, max_batch=2, block_size=8, n_blocks=32,
+                 prefill_chunk_tokens=2)
+    rid = eng.submit(prompts[0][:20], max_new_tokens=8, deadline_steps=3)
+    out = eng.run()
+    req = eng.requests[rid]
+    assert (req.state, req.finish_reason) == ("expired", "deadline")
+    assert out[rid].size == 0            # never reached decode
+    eng.cache.allocator.check_conservation()
+    assert eng.cache.allocator.n_free + eng.cache.n_cache_blocks \
+        == eng.cache.allocator.n_usable
+    # mid-decode expiry: enough ticks to emit a few tokens, not all
+    eng2 = Engine(model, params, max_batch=2, block_size=8, n_blocks=32,
+                  prefill_chunk_tokens=0)
+    rid2 = eng2.submit(prompts[0][:10], max_new_tokens=50,
+                       deadline_steps=6)
+    out2 = eng2.run()
+    req2 = eng2.requests[rid2]
+    assert (req2.state, req2.finish_reason) == ("expired", "deadline")
+    assert 0 < out2[rid2].size < 50
+    solo = _solo_stream(model, params, prompts[0][:10], n=50)
+    np.testing.assert_array_equal(out2[rid2], solo[:out2[rid2].size])
 
 
 @pytest.mark.slow

@@ -58,3 +58,51 @@ def test_schedules_agree():
     other = _train("smollm-360m", steps=3, schedule="ring")
     for a, b in zip(base, other):
         assert abs(a - b) < 2e-3
+
+
+def test_nonfinite_step_is_skipped_params_bit_identical():
+    """Non-finite guard: a poisoned step (NaN injected into a param leaf —
+    batch tokens are integers, so the NaN enters through the forward the
+    same way a poisoned batch would: NaN loss and NaN grads) must skip the
+    optimizer update, report ``skipped_nonfinite``, and leave params AND
+    optimizer state bit-identical; a healthy step afterwards updates
+    normally."""
+    cfg = smoke_config(get_config("smollm-360m")).replace(vocab=128)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeSpec("ti", 64, 4, "train")
+    par = make_parallel_config(mesh, shape)
+    model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    tc = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=10)
+    step = jax.jit(make_train_step(model, tc))
+    ds = SyntheticTokens(cfg, shape, par, mesh)
+
+    # one healthy step compiles + moves state off the init values
+    params, opt, m = step(params, opt, ds.batch(0))
+    assert int(m["skipped_nonfinite"]) == 0
+
+    # poison one scalar: the loss and every grad go non-finite
+    poisoned = jax.tree_util.tree_map(lambda x: x, params)
+    poisoned["embed"] = poisoned["embed"].at[0, 0].set(jnp.nan)
+    p2, o2, m2 = step(poisoned, opt, ds.batch(1))
+    assert int(m2["skipped_nonfinite"]) == 1
+    assert not jnp.isfinite(m2["loss"])
+    for a, b in zip(jax.tree_util.tree_leaves(p2),
+                    jax.tree_util.tree_leaves(poisoned)):
+        assert a.dtype == b.dtype
+        assert jnp.array_equal(a, b, equal_nan=True), "params changed " \
+            "on a skipped step"
+    for a, b in zip(jax.tree_util.tree_leaves(o2),
+                    jax.tree_util.tree_leaves(opt)):
+        assert jnp.array_equal(a, b, equal_nan=True), "optimizer state " \
+            "changed on a skipped step"
+    assert int(o2.step) == int(opt.step)
+
+    # recovery: the next healthy step updates params again
+    p3, o3, m3 = step(params, opt, ds.batch(2))
+    assert int(m3["skipped_nonfinite"]) == 0
+    assert int(o3.step) == int(opt.step) + 1
+    assert any(not jnp.array_equal(a, b)
+               for a, b in zip(jax.tree_util.tree_leaves(p3),
+                               jax.tree_util.tree_leaves(params)))
