@@ -25,6 +25,13 @@ Reported (CSV rows like benchmarks/run.py, JSON via ``--json``):
     through an engine with admission control + always-on auditing —
     tokens/s, shed rate, quarantine count, p99 TTFT, and the storm's
     throughput retention
+  * serving/spec_*                 — the speculative-decoding A/B: the
+    same arrival trace with speculation off and on (ModelDraft sharing
+    the target's params — the acceptance ceiling regime) — tokens/step,
+    acceptance rate, tokens/s, p99 TTFT, plus the analytic
+    expected-tokens/step and speedup bounds
+    (analysis/roofline.speculative_terms); byte-identical streams across
+    the two regimes are asserted, not assumed
 
 Results are written to ``BENCH_serving.json`` (repo root by default) so
 the serving-perf trajectory is tracked in-repo; CI runs
@@ -353,6 +360,115 @@ def run_chaos(*, arch="smollm-360m", n_requests=8, max_batch=4,
                                      / calm["tokens_per_s"])}
 
 
+def run_speculative(*, arch="smollm-360m", n_requests=6, max_batch=4,
+                    block_size=8, n_blocks=48, prompt_lens=(16, 24),
+                    budgets=(6, 8), mean_gap=1, depth=4, seed=0):
+    """Speculative-decoding A/B: the same seeded arrival trace driven
+    twice — spec off (vanilla one-token decode) and spec on (a
+    ``ModelDraft`` sharing the target's params: the acceptance ceiling
+    regime, limited only by draft-side chunked-prefill numerics) —
+    measuring tokens/step, acceptance rate, tokens/s, and p99 TTFT.  The
+    determinism contract is asserted, not assumed: both regimes must emit
+    byte-identical streams."""
+    from repro.analysis import roofline as R
+    from repro.core.config import ShapeSpec, get_config, smoke_config
+    from repro.data.pipeline import SyntheticTokens
+    from repro.models.transformer import Runtime, build_model
+    from repro.parallel.sharding import make_parallel_config
+    from repro.serve.engine import Engine
+    from repro.serve.speculative import ModelDraft, SpecConfig
+
+    cfg = smoke_config(get_config(arch))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeSpec("bench", max(prompt_lens), max(4, n_requests),
+                      "prefill")
+    par = make_parallel_config(mesh, shape)
+    model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.asarray(
+        SyntheticTokens(cfg, shape, par, mesh).batch(0)["tokens"])
+    trace = _trace(np.random.default_rng(seed), n_requests, prompt_lens,
+                   budgets, mean_gap)
+
+    def drive(spec_on):
+        spec = draft = None
+        if spec_on:
+            spec = SpecConfig(depth=depth, mode="model",
+                              draft_arch=cfg.name)
+            draft = ModelDraft(model, params, block_size=block_size,
+                               n_blocks=64, max_batch=max_batch)
+        eng = Engine(model, params, max_batch=max_batch,
+                     block_size=block_size, n_blocks=n_blocks,
+                     spec=spec, draft=draft)
+        eng.warm_prefill(max(prompt_lens) + max(budgets))
+        w = eng.submit(prompts[0][:prompt_lens[0]], max_new_tokens=2)
+        eng.run()
+        del eng.requests[w]
+        if draft is not None:
+            draft.release(w)
+        warm_steps = eng.sched.step_count
+        warm_counters = dict(eng.counters)
+        submit_t, first_t = {}, {}
+        pending = sorted(trace, key=lambda x: x[0])
+        rids = []
+        step, i = 0, 0
+        t_start = time.perf_counter()
+        while len(rids) < len(pending) or not eng.sched.idle:
+            while len(rids) < len(pending) and pending[len(rids)][0] <= step:
+                _, plen, n_new, temp = pending[len(rids)]
+                r = eng.submit(prompts[i % len(prompts)][:plen],
+                               max_new_tokens=n_new, temperature=temp,
+                               seed=i)
+                submit_t[r] = time.perf_counter()
+                rids.append(r)
+                i += 1
+            for r, toks in eng.step().items():
+                if r not in first_t and toks:
+                    first_t[r] = time.perf_counter()
+            step += 1
+            if step > 100_000:
+                raise RuntimeError("speculative trace did not drain")
+        wall = time.perf_counter() - t_start
+        s = eng.stats()
+        total = sum(len(eng.requests[r].emitted) for r in rids)
+        steps = s["steps"] - warm_steps
+        ttft = sorted((first_t[r] - submit_t[r]) * 1e3
+                      for r in rids if r in first_t)
+        proposed = s["spec_proposed"] - warm_counters.get("spec_proposed", 0)
+        accepted = s["spec_accepted"] - warm_counters.get("spec_accepted", 0)
+        return {
+            "tokens_per_s": total / wall,
+            "total_tokens": total,
+            "steps": steps,
+            "tokens_per_step": total / max(steps, 1),
+            "ttft_p99_ms": ttft[max(0, int(0.99 * len(ttft)) - 1)],
+            "spec_proposed": proposed,
+            "spec_accepted": accepted,
+            "acceptance": accepted / max(proposed, 1),
+            "rollbacks": s["spec_rollbacks"]
+            - warm_counters.get("spec_rollbacks", 0),
+        }, {r: [int(t) for t in eng.requests[r].emitted] for r in rids}
+
+    off, streams_off = drive(False)
+    on, streams_on = drive(True)
+    identical = list(streams_off.values()) == list(streams_on.values())
+    if not identical:
+        raise AssertionError("speculative streams diverged from vanilla")
+    mean_ctx = int(np.mean([p + b for _, p, b, _ in trace]))
+    return {
+        "depth": depth, "n_requests": n_requests,
+        "draft": "target-params (ceiling regime)",
+        "off": off, "on": on,
+        "streams_identical": identical,
+        "tokens_per_step_gain": on["tokens_per_step"]
+        / max(off["tokens_per_step"], 1e-12),
+        "pred": R.speculative_terms(cfg, batch=max_batch,
+                                    mean_len=mean_ctx, depth=depth,
+                                    acceptance=on["acceptance"],
+                                    block_size=block_size, bpe=4),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -360,17 +476,20 @@ def main(argv=None):
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
-    kw, spkw, chkw = {}, {}, {}
+    kw, spkw, chkw, spec_kw = {}, {}, {}, {}
     if args.smoke:
         kw = dict(n_requests=5, prompt_lens=(16, 24), budgets=(3, 4),
                   n_blocks=24)   # small pool: exercises queueing on CI
         spkw = dict(n_requests=4, prefix_len=32, n_blocks=64)
         chkw = dict(n_requests=5, budgets=(3, 4), storm_steps=16)
+        spec_kw = dict(n_requests=4, budgets=(4, 6), depth=3)
     res = run_trace(**kw)
     sp = run_shared_prefix(**spkw)
     res["shared_prefix"] = sp
     ch = run_chaos(**chkw)
     res["chaos"] = ch
+    spc = run_speculative(**spec_kw)
+    res["speculative"] = spc
 
     row("serving/tokens_per_s", 0, f"{res['tokens_per_s']:.2f}")
     row("serving/p50_token_ms", f"{res['p50_token_ms'] * 1e3:.0f}",
@@ -419,6 +538,22 @@ def main(argv=None):
     row("serving/chaos_retention", 0,
         f"{ch['throughput_retention']:.2f} of calm tokens/s under a "
         f"rate={ch['storm_rate']} seed={ch['chaos_seed']} fault storm")
+    for regime in ("off", "on"):
+        c = spc[regime]
+        row(f"serving/spec_{regime}", 0,
+            f"tok_s={c['tokens_per_s']:.2f} "
+            f"tok_step={c['tokens_per_step']:.2f} "
+            f"p99_ttft={c['ttft_p99_ms']:.1f}ms"
+            + (f" acceptance={c['acceptance']:.2f} "
+               f"proposed={c['spec_proposed']} "
+               f"rollbacks={c['rollbacks']}" if regime == "on" else ""))
+    sppred = spc["pred"]
+    row("serving/spec_ab", 0,
+        f"depth={spc['depth']} tok_step_gain="
+        f"{spc['tokens_per_step_gain']:.2f} "
+        f"streams_identical={spc['streams_identical']} "
+        f"pred_E_tok_step={sppred['expected_tokens_per_step']:.2f} "
+        f"pred_speedup_bound={sppred['speedup_bound']:.2f}")
 
     out = dict(version=1, generated_by="benchmarks/serving_bench.py",
                smoke=bool(args.smoke), result=res, rows=ROWS)

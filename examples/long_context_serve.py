@@ -15,6 +15,9 @@ definite terminal status and fault-free streams are untouched.
     python examples/long_context_serve.py --prefill-chunk-tokens 128
     python examples/long_context_serve.py --no-prefix-cache
     python examples/long_context_serve.py --chaos-seed 7
+    python examples/long_context_serve.py --spec-depth 4 --self-spec
+    python examples/long_context_serve.py --spec-depth 4 \
+        --draft-config smollm-360m
 """
 import os
 
@@ -38,7 +41,8 @@ from repro.serve.engine import Engine, FixedSlotEngine  # noqa: E402
 
 
 def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True,
-        chaos_seed: int = None):
+        chaos_seed: int = None, spec_depth: int = 0, self_spec: bool = False,
+        draft_config: str = None):
     cfg = smoke_config(get_config("qwen3-8b"))
     if window:
         cfg = cfg.replace(attn=dataclasses.replace(cfg.attn, window=window))
@@ -49,6 +53,25 @@ def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True,
     params = model.init(jax.random.PRNGKey(0))
     batch = SyntheticTokens(cfg, shape, par, mesh).batch(0)
     prompts = np.asarray(batch["tokens"])
+
+    # --- speculative decoding: self-speculation (prompt-lookup n-grams)
+    # or a paired draft model with its own paged cache.  The acceptance
+    # rule keeps the emitted streams token-identical to vanilla decode —
+    # the draft is purely a tokens/step knob
+    spec = draft = None
+    if spec_depth > 0:
+        from repro.serve.speculative import ModelDraft, SpecConfig
+        if self_spec or draft_config is None:
+            spec = SpecConfig(depth=spec_depth, mode="ngram")
+        else:
+            d_cfg = smoke_config(get_config(draft_config))
+            d_model = build_model(d_cfg, Runtime(mesh=mesh, par=par,
+                                                 impl="ref"))
+            d_params = d_model.init(jax.random.PRNGKey(7))
+            spec = SpecConfig(depth=spec_depth, mode="model",
+                              draft_arch=d_cfg.name)
+            draft = ModelDraft(d_model, d_params, block_size=64,
+                               n_blocks=96, max_batch=4)
 
     # --- continuous batching: requests arrive over time, with different
     # budgets, into a paged pool (mixed in-flight lengths per step).
@@ -61,7 +84,8 @@ def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True,
     eng = Engine(model, params, max_batch=4, block_size=64, n_blocks=80,
                  prefill_chunk_tokens=chunk_tokens,
                  prefix_cache=prefix_cache,
-                 max_queue=8, audit=chaos_seed is not None, faults=faults)
+                 max_queue=8, audit=chaos_seed is not None, faults=faults,
+                 spec=spec, draft=draft)
     t0 = time.time()
     rids = []
     for i in range(prompts.shape[0]):
@@ -76,6 +100,13 @@ def run(window: int, *, chunk_tokens: int = 256, prefix_cache: bool = True,
     print(f"[{tag:>16}] paged: 4×1024-token prompts, staggered, "
           f"{total} tokens in {dt:.2f}s over {eng.stats()['steps']} steps; "
           f"req0: {[int(t) for t in out[rids[0]]]}")
+    if spec is not None:
+        s = eng.stats()
+        print(f"[{tag:>16}] speculative({spec.mode}, depth={spec.depth}): "
+              f"proposed={s['spec_proposed']} accepted={s['spec_accepted']} "
+              f"rollbacks={s['spec_rollbacks']} "
+              f"acceptance={s['spec_acceptance']:.2f} — emitted streams "
+              f"identical to vanilla decode by construction")
     if chaos_seed is not None:
         s = eng.stats()
         states = {r: eng.requests[r].state for r in rids}
@@ -134,10 +165,18 @@ if __name__ == "__main__":
                     help="run the continuous-batching pass under a seeded "
                          "fault storm (deterministic; same seed, same "
                          "storm) with auditing + deadlines enabled")
+    ap.add_argument("--spec-depth", type=int, default=0,
+                    help="speculative draft depth (0 = vanilla decode)")
+    ap.add_argument("--self-spec", action="store_true",
+                    help="n-gram prompt-lookup self-speculation")
+    ap.add_argument("--draft-config", default=None,
+                    help="draft arch id (e.g. smollm-360m) for model-based "
+                         "speculation; omit for self-speculation")
     args = ap.parse_args()
     kw = dict(chunk_tokens=args.prefill_chunk_tokens,
               prefix_cache=not args.no_prefix_cache,
-              chaos_seed=args.chaos_seed)
+              chaos_seed=args.chaos_seed, spec_depth=args.spec_depth,
+              self_spec=args.self_spec, draft_config=args.draft_config)
     run(window=0, **kw)
     run(window=256, **kw)   # Appendix-F sliding window: prefill ring
     #                         truncated, paged decode masks beyond the

@@ -228,6 +228,78 @@ def paged_decode_terms(cfg, *, batch, mean_len, block_size, bpe=2):
     return terms
 
 
+def speculative_terms(cfg, *, batch, mean_len, depth, acceptance,
+                      block_size, bpe=2, draft_cfg=None):
+    """Expected-throughput model of speculative decoding at draft depth
+    ``depth`` (= K proposals verified per step) and per-token acceptance
+    rate ``acceptance`` (= a).
+
+    With position-independent acceptance the number of tokens committed
+    per verify step is ``1 + #accepted prefix`` — a truncated geometric —
+    so the expectation is the standard speculative-decoding series
+
+        E[tokens/step] = (1 - a^(K+1)) / (1 - a)      (K+1 at a = 1)
+
+    The verify step itself prices like a paged decode step with K+1 query
+    rows per request: attention FLOPs scale with the extra rows while the
+    streamed KV bytes barely move (the K+1 rows share one block-table
+    gather), which is exactly why verification is cheap in the
+    memory-bound decode regime.  When ``draft_cfg`` is given, the draft's
+    K single-token decode steps are added to the step lower bound.
+    Returns the vanilla terms, the verify terms, E[tokens/step], and the
+    speculative / vanilla tokens-per-second bound ratio."""
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError("acceptance must be in [0, 1]")
+    if depth < 0:
+        raise ValueError("depth must be >= 0")
+    K = int(depth)
+    a = float(acceptance)
+    exp_tokens = (K + 1.0 if a >= 1.0
+                  else (1.0 - a ** (K + 1)) / (1.0 - a))
+    vanilla = paged_decode_terms(cfg, batch=batch, mean_len=mean_len,
+                                 block_size=block_size, bpe=bpe)
+    if vanilla is None:
+        return None
+    # verify = decode with K+1 query rows: q/o traffic and pair count scale
+    # by (K+1); the KV stream is the same blocks read once
+    at = cfg.attn
+    if at.is_mla:
+        hd_qk, hd_v, Hkv = (at.kv_lora_rank + at.qk_rope_head_dim,
+                            at.kv_lora_rank, 1)
+    else:
+        hd_qk = hd_v = at.head_dim
+        Hkv = at.n_kv_heads
+    w = min(at.window, mean_len) if at.window else mean_len
+    blocks = -(-w // block_size)
+    toks_read = blocks * block_size
+    L_ = cfg.n_layers
+    flops = L_ * 2 * batch * (K + 1) * w * at.n_heads * (hd_qk + hd_v)
+    kv_bytes = L_ * batch * toks_read * Hkv * (hd_qk + hd_v) * bpe
+    qo_bytes = L_ * batch * (K + 1) * at.n_heads * (hd_qk + hd_v) * bpe
+    table_bytes = L_ * batch * blocks * 4
+    verify = roofline_terms(flops, kv_bytes + qo_bytes + table_bytes, 0.0)
+    step_lb = verify["step_s_lower_bound"]
+    draft_lb = 0.0
+    if draft_cfg is not None and K > 0:
+        d = paged_decode_terms(draft_cfg, batch=batch, mean_len=mean_len,
+                               block_size=block_size, bpe=bpe)
+        if d is not None:
+            draft_lb = K * d["step_s_lower_bound"]
+            step_lb += draft_lb
+    tok_s_spec = batch * exp_tokens / max(step_lb, 1e-12)
+    return {
+        "depth": K,
+        "acceptance": a,
+        "expected_tokens_per_step": exp_tokens,
+        "vanilla": vanilla,
+        "verify": verify,
+        "draft_s_lower_bound": draft_lb,
+        "step_s_lower_bound": step_lb,
+        "tok_s_bound": tok_s_spec,
+        "speedup_bound": tok_s_spec / max(vanilla["tok_s_bound"], 1e-12),
+    }
+
+
 def prefix_cache_terms(cfg, *, prompt_len, hit_rate, chunk_tokens=0,
                        bpe=2):
     """Analytic prefill cost of ONE request under the content-addressed

@@ -1,0 +1,33 @@
+"""Draft-model pairings for speculative decoding (serve/speculative.py).
+
+A pairing names, for each target architecture in the zoo, the small
+config worth drafting with: same tokenizer family / vocab so draft token
+ids are target token ids, and 10-20x fewer parameters so a draft step
+costs a fraction of a verify row.  The determinism contract makes the
+pairing a pure throughput knob — a bad draft lowers tokens/step, never
+changes the emitted stream — so pairings are suggestions, not
+correctness requirements.
+
+    from repro.configs.spec_pairs import draft_arch_for
+    draft_arch_for("llama-7b")   # -> "smollm-360m"
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+# target arch id -> draft arch id (both resolvable by core.config.get_config)
+PAIRS = {
+    "llama-7b": "smollm-360m",
+    "llama-33h": "smollm-360m",
+    "llama-16h": "smollm-360m",
+    "llama-gqa": "smollm-360m",
+    "qwen3-8b": "smollm-360m",
+    "qwen2.5-14b": "smollm-360m",
+    "qwen1.5-32b": "smollm-360m",
+}
+
+
+def draft_arch_for(target_arch: str) -> Optional[str]:
+    """The paired draft config id for ``target_arch``, or ``None`` when
+    the zoo has no sensible pairing (fall back to self-speculation)."""
+    return PAIRS.get(target_arch)

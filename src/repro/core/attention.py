@@ -118,17 +118,20 @@ def chunk_attn_bwd(q, k, v, o, lse, do, *, mask: MaskSpec | None = None,
 
 def paged_decode_attn(q, k_pool, v_pool, block_table, lengths, *,
                       mask: MaskSpec | None = None, scale=None, impl=None):
-    """One-token decode attention through a paged KV cache (serving).
+    """Decode attention through a paged KV cache (serving), T >= 1 query
+    tokens per request (T = 1 vanilla decode; T = K + 1 speculative
+    verification).
 
-    ``q``: (B, 1, Hq, Dq); ``k_pool``/``v_pool``: (N, block_size, Hkv, D)
-    block pools; ``block_table``: (B, nb) int32 block ids per request;
-    ``lengths``: (B,) int32 attendable context lengths (the new token's
-    K/V must already be written — serve/cache.py's write-then-attend
-    contract). ``mask`` is a causal/sliding_window MaskSpec (the decode
-    token is last, so those are the only kinds with decode meaning);
-    resolution requires the backend's ``paged`` capability and walks the
-    usual fallback chain (``pallas`` on CPU runs ``pallas-interpret`` /
-    ``chunked-lax``). Returns o (B, 1, Hq, Dv)."""
+    ``q``: (B, T, Hq, Dq) — query row t of request b sits at context
+    position ``lengths[b] - T + t``; ``k_pool``/``v_pool``:
+    (N, block_size, Hkv, D) block pools; ``block_table``: (B, nb) int32
+    block ids per request; ``lengths``: (B,) int32 attendable context
+    lengths (all T tokens' K/V must already be written — serve/cache.py's
+    write-then-attend contract). ``mask`` is a causal/sliding_window
+    MaskSpec (the decode tokens are last, so those are the only kinds with
+    decode meaning); resolution requires the backend's ``paged``
+    capability and walks the usual fallback chain (``pallas`` on CPU runs
+    ``pallas-interpret`` / ``chunked-lax``). Returns o (B, T, Hq, Dv)."""
     mask = mk.causal() if mask is None else mask
     be = registry.resolve(impl, mask=mask, dtype=q.dtype, paged=True)
     return be.paged_fwd(q, k_pool, v_pool, block_table, lengths, mask=mask,

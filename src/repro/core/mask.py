@@ -37,7 +37,11 @@ Semantics of one (q, kv) position pair — ``attend(qp, kp)``:
     pre  = prefix_len > 0 and kp < prefix_len
     ok   = (not causal  or kp <= qp      or pre)
          ∧ (not window  or qp − kp < w   or pre)
-         ∧ (not document or seg(qp) == seg(kp))
+         ∧ (not document or seg(qp) == seg(kp) or pre)
+
+(the prefix relaxes *every* clause: a bidirectional/shared prefix is
+attendable across documents — which is also what lets a speculation tree's
+independent branches share their committed context, see :func:`tree_spec`).
 """
 from __future__ import annotations
 
@@ -231,7 +235,8 @@ class MaskSpec:
                         "(or static boundaries)")
                 q_segments = self.segment_of(q_pos)
                 kv_segments = self.segment_of(kv_pos)
-            m = _and(m, jnp.asarray(q_segments) == jnp.asarray(kv_segments))
+            d = jnp.asarray(q_segments) == jnp.asarray(kv_segments)
+            m = _and(m, d | pre if pre is not None else d)
         return m
 
 
@@ -363,6 +368,85 @@ def chunk_pair_needed(mask: MaskSpec, q_lo: int, q_hi: int,
                 or mask.segment_index(k_hi) < mask.segment_index(q_lo)):
             return False
     return True
+
+
+# --------------------------------------------------------------------------
+# Speculation-tree masks (serve/speculative.py)
+# --------------------------------------------------------------------------
+#
+# A speculative-verification chunk appends a small *tree* of draft tokens
+# after a committed context prefix: node i may attend the whole prefix and
+# its own ancestors, never a sibling branch.  The tree is static per step
+# (its shape is a scheduling decision, not data), so it can — and must —
+# be a MaskSpec: the chain (branching factor 1) is plain ``causal``, and a
+# star of independent linear branches is ``causal ∧ document`` with one
+# document per branch plus ``prefix_len`` spanning the shared committed
+# context.  Deeper re-branching topologies are not expressible as a
+# MaskSpec (sibling subtrees interleave) and are rejected.
+
+def chain_parents(n: int) -> Tuple[int, ...]:
+    """Parent vector of a depth-``n`` speculation chain (node i's parent
+    is i−1; the root's parent is −1 = the committed context)."""
+    return tuple(range(-1, n - 1))
+
+
+def tree_ancestor_mask(parents: Tuple[int, ...]):
+    """(K, K) bool numpy matrix: ``m[i, j]`` iff node ``i`` may attend
+    node ``j`` — j is i itself or an ancestor of i.  The ground truth the
+    MaskSpec returned by :func:`tree_spec` must reproduce."""
+    import numpy as np
+    K = len(parents)
+    m = np.zeros((K, K), bool)
+    for i, p in enumerate(parents):
+        m[i, i] = True
+        while p >= 0:
+            m[i, p] = True
+            p = parents[p]
+    return m
+
+
+def _tree_branches(parents: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Branch start indices when ``parents`` is a star of contiguous
+    linear branches hanging off the root context (parent −1); raises for
+    any other topology."""
+    parents = tuple(int(p) for p in parents)
+    if not parents:
+        raise ValueError("empty speculation tree")
+    starts = []
+    for i, p in enumerate(parents):
+        if p == -1:
+            starts.append(i)
+        elif p != i - 1:
+            raise ValueError(
+                f"node {i} has parent {p}; only chains and stars of "
+                f"contiguous linear branches are MaskSpec-expressible")
+    if starts[0] != 0:
+        raise ValueError("node 0 must hang off the context (parent -1)")
+    return tuple(starts)
+
+
+def tree_spec(parents: Tuple[int, ...], *, prefix_len: int = 0,
+              window: int = 0) -> MaskSpec:
+    """The static MaskSpec of one speculative-verification chunk whose
+    draft tokens form the tree described by ``parents`` (``parents[i]`` is
+    node i's parent index, −1 = the committed context).
+
+    A chain degenerates to ``causal`` (the single-node tree is exactly a
+    vanilla decode step); a star of ``m > 1`` linear branches becomes
+    ``causal ∧ document`` with one document per branch — ``boundaries``
+    are the branch starts — plus ``prefix_len`` so every branch still
+    attends the shared committed context of that length.  ``window``
+    carries a sliding-window model's band through verification."""
+    starts = _tree_branches(parents)
+    if len(starts) == 1:                  # chain (incl. the single node)
+        return MaskSpec(causal=True, window=int(window))
+    # the committed context shares segment 0 with the first branch: its
+    # attendability by the other branches comes from the prefix
+    # relaxation, and causality already stops it attending forward
+    return MaskSpec(causal=True, window=int(window),
+                    prefix_len=int(prefix_len), document=True,
+                    boundaries=(0,) + tuple(int(prefix_len) + s
+                                            for s in starts[1:]))
 
 
 def doc_boundaries(T: int, n_docs: int) -> Tuple[int, ...]:

@@ -7,13 +7,19 @@ list of (arbitrarily located) block ids.  The new token's K/V is scattered
 into the request's current block *before* attention, so the kernels see one
 uniform layout:
 
-  q            (B, 1, Hq, Dq)       the decode-step queries
+  q            (B, Tq, Hq, Dq)      the decode-step queries — ``Tq = 1``
+                                    for vanilla decode; ``Tq = K+1`` for a
+                                    speculative verification chunk (the
+                                    queries are the *last Tq tokens* of the
+                                    context: row ``t`` sits at position
+                                    ``lengths[b] − Tq + t``)
   k_pool       (N, bs, Hkv, Dk)     one layer's key pool (N = pool blocks)
   v_pool       (N, bs, Hkv, Dv)     value pool (MLA: a narrow view of k)
   block_table  (B, nb) int32        request b's i-th block id (0 = the
                                     reserved null block for unused entries)
-  lengths      (B,) int32           attendable tokens incl. the new one;
-                                    request b's query sits at lengths[b]−1
+  lengths      (B,) int32           attendable tokens incl. the new ones;
+                                    request b's last query sits at
+                                    lengths[b]−1
 
 Masking reuses :class:`repro.core.mask.MaskSpec`, restricted to the two
 kinds a decode step can express — ``causal`` (whole context) and
@@ -56,8 +62,8 @@ LANES = 128
 
 
 def _check(q, k_pool, v_pool, block_table, lengths, mask: MaskSpec):
-    if q.shape[1] != 1:
-        raise ValueError(f"paged decode takes one query token, got "
+    if q.shape[1] < 1:
+        raise ValueError(f"paged decode takes >= 1 query tokens, got "
                          f"Tq={q.shape[1]}")
     if mask.kinds - {"causal", "sliding_window"}:
         raise ValueError(
@@ -75,13 +81,16 @@ def _check(q, k_pool, v_pool, block_table, lengths, mask: MaskSpec):
                          f"Hkv={k_pool.shape[2]}")
 
 
-def _allow_tokens(mask: MaskSpec, kpos, lengths):
-    """(B, T) attendability of virtual context position ``kpos`` (T,) for
-    per-request ``lengths`` (B,)."""
-    lb = lengths[:, None]
-    ok = kpos[None, :] < lb
+def _allow_tokens(mask: MaskSpec, kpos, lengths, Tq: int = 1):
+    """(B, Tq, T) attendability of virtual context position ``kpos`` (T,)
+    for per-request ``lengths`` (B,): query row ``t`` sits at context
+    position ``lengths[b] − Tq + t`` and attends causally (optionally
+    windowed) from there."""
+    qpos = (lengths[:, None] - Tq
+            + jnp.arange(Tq, dtype=jnp.int32)[None, :])       # (B, Tq)
+    ok = kpos[None, None, :] <= qpos[:, :, None]
     if mask.window and mask.window > 0:
-        ok = ok & (kpos[None, :] > lb - 1 - mask.window)
+        ok = ok & (kpos[None, None, :] > qpos[:, :, None] - mask.window)
     return ok
 
 
@@ -90,10 +99,10 @@ def _allow_tokens(mask: MaskSpec, kpos, lengths):
 def paged_attn_ref(q, k_pool, v_pool, block_table, lengths, *, mask=None,
                    scale=None):
     """Oracle: gather the whole table, materialize the scores. Returns
-    o (B, 1, Hq, Dv)."""
+    o (B, Tq, Hq, Dv)."""
     mask = mask if mask is not None else mk.causal()
     _check(q, k_pool, v_pool, block_table, lengths, mask)
-    B, _, Hq, Dq = q.shape
+    B, Tq, Hq, Dq = q.shape
     nb = block_table.shape[1]
     bs, Hkv = k_pool.shape[1], k_pool.shape[2]
     g = Hq // Hkv
@@ -105,8 +114,8 @@ def paged_attn_ref(q, k_pool, v_pool, block_table, lengths, *, mask=None,
         vg = jnp.repeat(vg, g, axis=2)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    kg.astype(jnp.float32)) * sc
-    ok = _allow_tokens(mask, jnp.arange(nb * bs), lengths)
-    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    ok = _allow_tokens(mask, jnp.arange(nb * bs), lengths, Tq)
+    s = jnp.where(ok[:, None, :, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     m_safe = jnp.maximum(m, NEG_INF / 2)
     p = jnp.where(m[..., None] <= NEG_INF / 2, 0.0,
@@ -127,7 +136,7 @@ def paged_attn_chunked(q, k_pool, v_pool, block_table, lengths, *,
     kernel's loop structure)."""
     mask = mask if mask is not None else mk.causal()
     _check(q, k_pool, v_pool, block_table, lengths, mask)
-    B, _, Hq, Dq = q.shape
+    B, Tq, Hq, Dq = q.shape
     nb = block_table.shape[1]
     bs, Hkv = k_pool.shape[1], k_pool.shape[2]
     Dv = v_pool.shape[-1]
@@ -146,8 +155,8 @@ def paged_attn_chunked(q, k_pool, v_pool, block_table, lengths, *,
             kj = jnp.repeat(kj, g, axis=2)
             vj = jnp.repeat(vj, g, axis=2)
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(jnp.float32)) * sc
-        ok = _allow_tokens(mask, off + jnp.arange(bs), lengths)
-        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        ok = _allow_tokens(mask, off + jnp.arange(bs), lengths, Tq)
+        s = jnp.where(ok[:, None, :, :], s, NEG_INF)
         m = jnp.max(s, axis=-1)
         m_safe = jnp.maximum(m, NEG_INF / 2)
         p = jnp.where(m[..., None] <= NEG_INF / 2, 0.0,
@@ -162,8 +171,8 @@ def paged_attn_chunked(q, k_pool, v_pool, block_table, lengths, *,
                           ).transpose(0, 2, 1)        # (B, 1, H)
         return merge_ref(o_acc, l_acc, o_j, lse_j), None
 
-    init = (jnp.zeros((B, 1, Hq, Dv), jnp.float32),
-            jnp.full((B, 1, Hq), NEG_INF, jnp.float32))
+    init = (jnp.zeros((B, Tq, Hq, Dv), jnp.float32),
+            jnp.full((B, Tq, Hq), NEG_INF, jnp.float32))
     (o, _), _ = lax.scan(body, init, (bt, offs))
     return o.astype(q.dtype)
 
@@ -171,9 +180,10 @@ def paged_attn_chunked(q, k_pool, v_pool, block_table, lengths, *,
 # ------------------------------------------------------------------ pallas
 
 def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, scale, mask: MaskSpec, bs, nb):
+                  acc_ref, m_ref, l_ref, *, scale, mask: MaskSpec, bs, nb,
+                  Tq):
     b, i = pl.program_id(0), pl.program_id(2)
-    g = q_ref.shape[2]
+    gT = q_ref.shape[2]                  # g · Tq rows: row r = gi·Tq + t
 
     @pl.when(i == 0)
     def _init():
@@ -181,15 +191,17 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                     # (g, Dq)
+    q = q_ref[0, 0].astype(jnp.float32)                     # (gT, Dq)
     k = k_ref[0, 0].astype(jnp.float32)                     # (bs, Dk)
     v = v_ref[0, 0].astype(jnp.float32)                     # (bs, Dv)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
     lb = len_ref[b]
-    kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (g, bs), 1)
-    ok = kpos < lb
+    kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (gT, bs), 1)
+    # row r's query position: lengths[b] − Tq + (r mod Tq)
+    qpos = lb - Tq + jax.lax.broadcasted_iota(jnp.int32, (gT, bs), 0) % Tq
+    ok = kpos <= qpos
     if mask.window and mask.window > 0:
-        ok = ok & (kpos > lb - 1 - mask.window)
+        ok = ok & (kpos > qpos - mask.window)
     s = jnp.where(ok, s, NEG_INF)
 
     m_prev = m_ref[:, 0]
@@ -218,45 +230,47 @@ def paged_attn_pallas(q, k_pool, v_pool, block_table, lengths, *, mask=None,
     gather never materializes outside VMEM."""
     mask = mask if mask is not None else mk.causal()
     _check(q, k_pool, v_pool, block_table, lengths, mask)
-    B, _, Hq, Dq = q.shape
+    B, Tq, Hq, Dq = q.shape
     nb = block_table.shape[1]
     bs, Hkv = k_pool.shape[1], k_pool.shape[2]
     Dv = v_pool.shape[-1]
     g = Hq // Hkv
     sc = scale if scale is not None else 1.0 / (Dq ** 0.5)
 
-    q_r = q[:, 0].reshape(B, Hkv, g, Dq)           # head h ↦ kv head h//g
+    # head h ↦ kv head h//g; query rows flatten (g, Tq) → row gi·Tq + t
+    q_r = q.transpose(0, 2, 1, 3).reshape(B, Hkv, g * Tq, Dq)
     k_r = jnp.swapaxes(k_pool, 1, 2)               # (N, Hkv, bs, Dk)
     v_r = jnp.swapaxes(v_pool, 1, 2)               # (N, Hkv, bs, Dv)
 
     kernel = functools.partial(_paged_kernel, scale=sc, mask=mask, bs=bs,
-                               nb=nb)
+                               nb=nb, Tq=Tq)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                     # block_table, lengths
         grid=(B, Hkv, nb),
         in_specs=[
-            pl.BlockSpec((1, 1, g, Dq), lambda b, h, i, bt, ln:
+            pl.BlockSpec((1, 1, g * Tq, Dq), lambda b, h, i, bt, ln:
                          (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, k_pool.shape[-1]),
                          lambda b, h, i, bt, ln: (bt[b, i], h, 0, 0)),
             pl.BlockSpec((1, 1, bs, Dv),
                          lambda b, h, i, bt, ln: (bt[b, i], h, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, Dv), lambda b, h, i, bt, ln:
+        out_specs=pl.BlockSpec((1, 1, g * Tq, Dv), lambda b, h, i, bt, ln:
                                (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, Dv), jnp.float32),
-            pltpu.VMEM((g, LANES), jnp.float32),
-            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g * Tq, Dv), jnp.float32),
+            pltpu.VMEM((g * Tq, LANES), jnp.float32),
+            pltpu.VMEM((g * Tq, LANES), jnp.float32),
         ],
     )
     o = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g * Tq, Dv), q.dtype),
         compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(block_table, jnp.int32), jnp.asarray(lengths, jnp.int32),
       q_r, k_r, v_r)
-    return o.reshape(B, 1, Hq, Dv)
+    return (o.reshape(B, Hkv, g, Tq, Dv).transpose(0, 3, 1, 2, 4)
+            .reshape(B, Tq, Hq, Dv))

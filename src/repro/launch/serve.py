@@ -4,7 +4,8 @@ prompts (default), or the legacy fixed-slot dense-cache engine
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
         --prompt-len 128 --gen 16 --batch 4 [--window 64] \
-        [--block-size 16 --n-blocks 128] [--fixed-slot]
+        [--block-size 16 --n-blocks 128] [--fixed-slot] \
+        [--spec-depth 4 [--self-spec | --draft-config smollm-360m]]
 """
 from __future__ import annotations
 
@@ -39,6 +40,14 @@ def main(argv=None):
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="paged pool size (0 = sized to the workload)")
+    ap.add_argument("--spec-depth", type=int, default=0,
+                    help="speculative draft depth (0 = vanilla decode)")
+    ap.add_argument("--self-spec", action="store_true",
+                    help="n-gram prompt-lookup self-speculation (no draft "
+                         "model)")
+    ap.add_argument("--draft-config", default=None,
+                    help="draft arch id for model-based speculation "
+                         "(default: configs/spec_pairs.py pairing)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -63,10 +72,35 @@ def main(argv=None):
         dt = time.time() - t0
         tag = "fixed-slot"
     else:
-        blocks_per_req = -(-(args.prompt_len + args.gen) // args.block_size)
+        spec = draft = None
+        if args.spec_depth > 0:
+            from repro.serve.speculative import ModelDraft, SpecConfig
+            if args.self_spec:
+                spec = SpecConfig(depth=args.spec_depth, mode="ngram")
+            else:
+                from repro.configs.spec_pairs import draft_arch_for
+                d_arch = args.draft_config or draft_arch_for(cfg.name)
+                if d_arch is None:
+                    raise SystemExit(
+                        f"no draft pairing for {cfg.name!r}; pass "
+                        f"--draft-config or --self-spec")
+                d_cfg = get_config(d_arch)
+                if args.smoke:
+                    d_cfg = smoke_config(d_cfg)
+                d_model = build_model(d_cfg, Runtime(mesh=mesh, par=par,
+                                                     impl="ref"))
+                d_params = d_model.init(jax.random.PRNGKey(7))
+                spec = SpecConfig(depth=args.spec_depth, mode="model",
+                                  draft_arch=d_cfg.name)
+                draft = ModelDraft(d_model, d_params,
+                                   block_size=args.block_size,
+                                   max_batch=args.batch)
+        blocks_per_req = -(-(args.prompt_len + args.gen
+                             + args.spec_depth) // args.block_size)
         n_blocks = args.n_blocks or args.batch * blocks_per_req + 2
         eng = Engine(model, params, max_batch=args.batch,
-                     block_size=args.block_size, n_blocks=n_blocks)
+                     block_size=args.block_size, n_blocks=n_blocks,
+                     spec=spec, draft=draft)
         t0 = time.time()
         toks = eng.generate(batch, args.gen, rng=jax.random.PRNGKey(1),
                             temperature=args.temperature)
@@ -84,6 +118,15 @@ def main(argv=None):
               f"quarantined={s['quarantined']} expired={s['expired']} "
               f"failed={s['failed']} watchdog_trips={s['watchdog_trips']} "
               f"audit_passes={s['audit_passes']}")
+        if args.spec_depth > 0:
+            mode = "ngram" if args.self_spec else "model"
+            print("speculative: "
+                  f"mode={mode} depth={args.spec_depth} "
+                  f"proposed={s['spec_proposed']} "
+                  f"accepted={s['spec_accepted']} "
+                  f"rejected={s['spec_rejected']} "
+                  f"rollbacks={s['spec_rollbacks']} "
+                  f"acceptance={s['spec_acceptance']:.2f}")
     print("sampled token ids (first request):",
           [int(t) for t in toks[0][:16]])
     return 0

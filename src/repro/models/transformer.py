@@ -700,6 +700,43 @@ class DecoderLM:
         logits = self._head(p, h)
         return logits, cache
 
+    def verify(self, p, cache, batch):
+        """Multi-token speculative verification over a *paged* cache:
+        batch = {"tokens": (B, T) int32, "pos": (B,), "n_write": (B,)}.
+
+        Token t of request b sits at context position ``pos_b + t`` — row 0
+        is the request's pending token, rows 1.. are draft proposals.  All
+        T rows write-then-attend in one pass (the chunked-prefill pattern
+        turned batched), but only the first ``n_write_b`` rows scatter into
+        real blocks; the rest null-redirect so rejected drafts leave no
+        trace that masking doesn't already hide.  With T = 1 and
+        ``n_write = 1`` this is the vanilla :meth:`decode` computation.
+        Returns (logits (B, T, V), cache)."""
+        cfg, rt = self.cfg, self.rt
+        if not _is_paged(cache):
+            raise ValueError("verify() requires a paged cache view")
+        if cfg.arch_type not in ("dense", "vlm", "moe"):
+            raise NotImplementedError(
+                f"verify(): arch_type={cfg.arch_type!r} has no paged "
+                f"decode path")
+        toks = jnp.asarray(batch["tokens"], jnp.int32)
+        B, T = toks.shape
+        pos = _norm_pos(batch["pos"], B)
+        n_write = jnp.asarray(batch["n_write"], jnp.int32)
+        h = p["embed"][toks].astype(self.dtype)       # (B,T,d)
+        cos = sin = None
+        if cfg.uses_attention:
+            dim = (cfg.attn.qk_rope_head_dim if cfg.attn.is_mla
+                   else cfg.attn.head_dim)
+            flat = (pos[:, None]
+                    + jnp.arange(T, dtype=jnp.int32)[None, :]).reshape(-1)
+            c, s = L.rope_tables(flat, dim, cfg.attn.rope_theta)
+            cos, sin = c.reshape(B, T, -1), s.reshape(B, T, -1)
+        h, cache = self._decode_attn_stack_paged(p, cache, h, cos, sin,
+                                                 pos, n_write=n_write)
+        logits = self._head(p, h)
+        return logits, cache
+
     def _decode_attn_stack(self, p, cache, h, cos, sin, pos):
         cfg, rt = self.cfg, self.rt
         a = cfg.attn
@@ -771,27 +808,40 @@ class DecoderLM:
                                          cache["v"]))
         return h, {"k": ck, "v": cv}
 
-    def _decode_attn_stack_paged(self, p, cache, h, cos, sin, pos):
-        """Decode through a paged cache view: per layer, the new token's
+    def _decode_attn_stack_paged(self, p, cache, h, cos, sin, pos,
+                                 n_write=None):
+        """Decode through a paged cache view: per layer, the new tokens'
         K/V (or MLA latent) is scattered into the request's current block
         (write-then-attend), then attention gathers the context through the
         block table (``paged_decode_attn``).  ``cache`` = {"k_pool",
         "v_pool"} or {"ckv_pool"} pools with leading layer dim +
-        "block_table" (B, nb); ``pos`` (B,) per-request context lengths."""
+        "block_table" (B, nb); ``pos`` (B,) per-request context lengths.
+
+        ``h`` carries T tokens (T = 1 for vanilla decode; T = K + 1 for a
+        speculative verify pass, where row t sits at context position
+        ``pos + t``).  ``n_write`` (B,) caps how many rows each request
+        scatters into real blocks (the rest null-redirect); None means the
+        single-token decode write path."""
         cfg, rt = self.cfg, self.rt
         a = cfg.attn
         is_mla = a is not None and a.is_mla
         bt = cache["block_table"]
-        lengths = pos + 1                          # incl. the written token
+        T = h.shape[1]
+        lengths = pos + T                # incl. all written/draft tokens
+        if n_write is None:              # vanilla decode: T = 1
+            write = lambda pool, new: _paged_write(pool, new, bt, pos)
+        else:
+            write = lambda pool, new: _paged_write_multi(pool, new, bt,
+                                                         pos, n_write)
 
         def one(lp, h, kp, vp):
             if is_mla:
-                h2, kp = self._decode_mla_paged(lp, h, kp, cos, sin, pos,
-                                                bt, lengths)
+                h2, kp = self._decode_mla_paged(lp, h, kp, cos, sin,
+                                                bt, lengths, write)
                 return h2, kp, vp
             q, k, v = L.attn_qkv(lp["attn"], h, cfg, cos, sin)
-            kp = _paged_write(kp, k, bt, pos)
-            vp = _paged_write(vp, v, bt, pos)
+            kp = write(kp, k)
+            vp = write(vp, v)
             o = paged_decode_attn(q, kp, vp, bt, lengths,
                                   mask=_decode_mask(a.window), impl=rt.impl)
             h2 = L.attn_out(lp["attn"], h, o, cfg)
@@ -803,12 +853,12 @@ class DecoderLM:
                 def bodyd(h, xs):
                     lp, cp = xs
                     h2, cp = self._decode_mla_paged(lp, h, cp, cos, sin,
-                                                    pos, bt, lengths)
+                                                    bt, lengths, write)
                     return L.mlp_apply(lp["mlp"], h2, cfg.norm_eps), cp
                 def bodym(h, xs):
                     lp, cp = xs
                     h2, cp = self._decode_mla_paged(lp, h, cp, cos, sin,
-                                                    pos, bt, lengths)
+                                                    bt, lengths, write)
                     h3 = M.moe_decode_apply(lp["moe"], h2, cfg,
                                             mesh=rt.mesh,
                                             seq_axis=rt.par.seq_axis,
@@ -910,14 +960,14 @@ class DecoderLM:
         h2 = self._mla_out(lp, h, o_lat, w_uv)
         return h2, ck, cv
 
-    def _decode_mla_paged(self, lp, h, cp, cos, sin, pos, bt, lengths):
+    def _decode_mla_paged(self, lp, h, cp, cos, sin, bt, lengths, write):
         """Paged absorbed-MLA decode: one latent pool (N, bs, c+dr); the
         value view is a narrow slice of the key view (Hkv = 1)."""
         cfg, rt = self.cfg, self.rt
         a = cfg.attn
         c = a.kv_lora_rank
         q_full, new, w_uv = self._mla_decode_parts(lp, h, cos, sin)
-        cp = _paged_write(cp, new, bt, pos)
+        cp = write(cp, new)
         kview = cp[:, :, None, :]                  # (N, bs, 1, c+dr)
         o_lat = paged_decode_attn(
             q_full, kview, kview[..., :c], bt, lengths,
@@ -981,6 +1031,22 @@ def _paged_write(pool, new, block_table, pos):
     bidx = jnp.take_along_axis(block_table, (pos // bs)[:, None],
                                axis=1)[:, 0]
     return pool.at[bidx, pos % bs].set(new[:, 0].astype(pool.dtype))
+
+
+def _paged_write_multi(pool, new, block_table, pos, n_write):
+    """Scatter ``new`` (B, T, ...) into one layer's block ``pool``: row t
+    holds context position ``pos_b + t``.  Rows with ``t >= n_write_b``
+    (draft slack beyond a request's write budget, or idle batch rows with
+    ``n_write = 0``) are redirected to the reserved null block 0 — never
+    gathered unmasked, so collisions there are harmless."""
+    bs, nb = pool.shape[1], block_table.shape[1]
+    T = new.shape[1]
+    idx = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]   # (B,T)
+    col = jnp.clip(idx // bs, 0, nb - 1)
+    bidx = jnp.take_along_axis(block_table, col, axis=1)
+    live = jnp.arange(T, dtype=jnp.int32)[None, :] < n_write[:, None]
+    bidx = jnp.where(live, bidx, 0)
+    return pool.at[bidx, idx % bs].set(new.astype(pool.dtype))
 
 
 def _paged_write_chunk(pool, new, block_table, start, end):

@@ -73,6 +73,7 @@ from repro.serve.cache import PagedKVCache
 from repro.serve.faults import FAULT_OWNER, FaultInjector
 from repro.serve.scheduler import (DECODE, PREFILL, Request, SamplingParams,
                                    Scheduler)
+from repro.serve.speculative import DraftSource, SpecConfig, make_draft
 
 # dense-cache keys whose seq axis (2) gets decode headroom padding.
 # ssm/hybrid are absent: their prefill builds no decode cache (seed
@@ -106,7 +107,9 @@ class Engine:
                  watchdog_window: int = 8,
                  watchdog_threshold: int = 3,
                  audit: bool = False,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 spec: Optional[SpecConfig] = None,
+                 draft: Optional[DraftSource] = None):
         cfg = model.cfg
         if cfg.arch_type not in ("dense", "moe"):
             raise ValueError(
@@ -129,12 +132,19 @@ class Engine:
             max_reqs=max_batch, max_blocks_per_req=max_blocks_per_req,
             mesh=mesh, seq_axis=model.rt.par.seq_axis,
             prefix_cache=prefix_cache)
+        # speculative decoding: the scheduler reserves the draft write
+        # span (lookahead), the engine swaps its one-token decode for the
+        # multi-token verify step (see serve/speculative.py)
+        self.spec = spec
+        self.draft = (draft if draft is not None
+                      else make_draft(spec) if spec is not None else None)
         self.sched = Scheduler(self.cache, max_batch,
                                prefill_chunk_tokens=prefill_chunk_tokens,
                                max_queue=max_queue,
                                admit_watermark=admit_watermark,
                                watchdog_window=watchdog_window,
-                               watchdog_threshold=watchdog_threshold)
+                               watchdog_threshold=watchdog_threshold,
+                               lookahead=spec.depth if spec else 0)
         self.max_batch = max_batch
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.requests: Dict[int, Request] = {}
@@ -151,6 +161,7 @@ class Engine:
         # in place instead of copying the whole pool every token
         self._chunk_jit = jax.jit(self._chunk_step_fn, donate_argnums=(1,))
         self._decode_jit = jax.jit(self._decode_step_fn, donate_argnums=(1,))
+        self._verify_jit = jax.jit(self._verify_step_fn, donate_argnums=(1,))
         self._base_keys: Dict[int, jax.Array] = {}
         # robustness state
         self.audit_mode = bool(audit)
@@ -162,7 +173,9 @@ class Engine:
         self._backoff_until = 0
         self._consec_drops = 0
         self.counters = dict(quarantined=0, retried=0, backoff_steps=0,
-                             audit_passes=0)
+                             audit_passes=0, spec_proposed=0,
+                             spec_accepted=0, spec_rejected=0,
+                             spec_rollbacks=0)
 
     def install_faults(self, injector: Optional[FaultInjector]) -> None:
         """(Re-)attach a fault schedule with its timeline starting at the
@@ -264,6 +277,27 @@ class Engine:
         ok = jnp.all(jnp.isfinite(lf), axis=-1)
         nxt = _sample(lf, temps, keys)
         return nxt, ok, {k: cache2[k] for k in pools}
+
+    def _verify_step_fn(self, params, pools, table, pos, toks, n_write,
+                        temps, base_keys, poison):
+        """Speculative verify: score T = 1 + depth rows per request in one
+        forward (row 0 = pending token, rows 1.. = draft proposals) and
+        sample the target token for EVERY row under its own per-position
+        key — the same ``fold_in(seed_key, position)`` keys the vanilla
+        decode step uses, so the accept/reject walk on the host commits
+        exactly the tokens the non-speculative engine would have."""
+        cache = {**pools, "block_table": table}
+        logits, cache2 = self.model.verify(
+            params, cache, {"tokens": toks, "pos": pos, "n_write": n_write})
+        lf = logits.astype(jnp.float32) + poison[:, None, None]
+        ok = jnp.all(jnp.isfinite(lf), axis=-1)             # (B, T)
+        offs = jnp.arange(toks.shape[1], dtype=jnp.int32)
+        keys = jax.vmap(lambda k, p: jax.vmap(
+            lambda t: jax.random.fold_in(k, p + 1 + t))(offs))(
+                base_keys, pos)                             # (B, T) keys
+        tgt = jax.vmap(_sample, in_axes=(1, None, 1), out_axes=1)(
+            lf, temps, keys)                                # (B, T)
+        return tgt, ok, {k: cache2[k] for k in pools}
 
     def _key_for(self, req: Request, position: int) -> jax.Array:
         """Sampling key of the token that will sit at context
@@ -371,6 +405,9 @@ class Engine:
 
         plan = self.sched.plan()
         events: Dict[int, List[int]] = {}
+        if self.draft is not None:
+            for r in plan.expired:
+                self.draft.release(r.rid)
 
         for req, start, n in plan.chunks:
             if req.state != PREFILL:       # preempted after planning
@@ -406,8 +443,12 @@ class Engine:
                     self.counters["retried"] += 1
                     if r.retries > self.max_retries:
                         self.sched.fail(r, "retries_exhausted")
+                        if self.draft is not None:
+                            self.draft.release(r.rid)
             else:
                 self.counters["backoff_steps"] += 1
+        elif live and self.spec is not None:
+            n_tokens = self._spec_step(live, nan_events, events)
         elif live:
             B = self.max_batch
             tok = np.zeros((B, 1), np.int32)
@@ -458,6 +499,81 @@ class Engine:
             self.cache.audit(self.sched.running)
             self.counters["audit_passes"] += 1
         return events
+
+    def _spec_step(self, live, nan_events, events) -> int:
+        """One speculative decode step over the live rows: draft, verify,
+        accept/reject walk.  Shapes are fixed at T = 1 + depth (short
+        proposal lists are padded; ``n_write`` null-redirects the padding
+        rows' KV writes and the walk never reads their samples), so the
+        verify jit compiles once."""
+        B, T = self.max_batch, 1 + self.spec.depth
+        toks = np.zeros((B, T), np.int32)
+        pos = np.zeros((B,), np.int32)
+        n_write = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        bkeys = [jax.random.PRNGKey(0)] * B
+        poison = np.zeros((B,), np.float32)
+        for e in nan_events:
+            victim = self.injector.pick(
+                e, sorted(live, key=lambda r: r.rid))
+            poison[victim.slot] = np.nan
+            self.injector.fired(self.step_idx, e.kind, f"rid={victim.rid}")
+        tbl = np.zeros_like(self.cache.table)
+        props: Dict[int, List[int]] = {}
+        for r in live:
+            k = self.sched.spec_budget(r)
+            pr = [int(t) for t in self.draft.propose(r, k)][:max(k, 0)]
+            props[r.rid] = pr
+            toks[r.slot, 0] = r.pending
+            toks[r.slot, 1:1 + len(pr)] = pr
+            pos[r.slot] = r.cached
+            n_write[r.slot] = 1 + len(pr)
+            temps[r.slot] = r.params.temperature
+            bkeys[r.slot] = self._base_keys[r.rid]
+            tbl[r.slot] = self.cache.table[r.slot]
+        tgt, ok, pools = self._verify_jit(
+            self.params, self.cache.pools, jnp.asarray(tbl),
+            jnp.asarray(pos), jnp.asarray(toks), jnp.asarray(n_write),
+            jnp.asarray(temps), jnp.stack(bkeys), jnp.asarray(poison))
+        self.cache.pools = pools
+        tgt, ok = np.asarray(tgt), np.asarray(ok)
+        self._consec_drops = 0
+        n_tokens = 0
+        for r in live:
+            pr = props[r.rid]
+            if not ok[r.slot, :1 + len(pr)].all():
+                # NaN/Inf anywhere in the rows this walk could consume:
+                # quarantine the whole row set, as vanilla decode would
+                self._quarantine(r, "nan_logits")
+                self.draft.release(r.rid)
+                continue
+            r.retries = 0
+            n_acc = 0
+            for i in range(len(pr) + 1):
+                # the target's own sample for position cached + 1 + i —
+                # identical to what i sequential decode steps would emit
+                t_i = int(tgt[r.slot, i])
+                r.cached += 1
+                self._emit(r, t_i, events)
+                n_tokens += 1
+                acc = i < len(pr) and pr[i] == t_i
+                if acc:
+                    n_acc += 1
+                if r.state != DECODE or not acc:
+                    break
+            # rejected rows need no undo: cached simply didn't advance
+            # over them, their KV sits masked above the valid length in
+            # blocks this request exclusively owns
+            self.counters["spec_proposed"] += len(pr)
+            self.counters["spec_accepted"] += n_acc
+            self.counters["spec_rejected"] += len(pr) - n_acc
+            if len(pr) > n_acc:
+                self.counters["spec_rollbacks"] += 1
+            if r.done:
+                self.draft.release(r.rid)
+            else:
+                self.draft.observe(r, n_acc, len(pr))
+        return n_tokens
 
     def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
         """Drive ``step`` until every submitted request reaches a terminal
@@ -526,6 +642,8 @@ class Engine:
             "watchdog_trips": sc["watchdog_trips"],
             "serial_admission": self.sched.serial_admission,
             **self.counters,
+            "spec_acceptance": (self.counters["spec_accepted"]
+                                / max(self.counters["spec_proposed"], 1)),
         }
         if self.injector is not None:
             out["faults"] = dict(self.injector.counts)

@@ -157,7 +157,8 @@ class Scheduler:
                  max_queue: Optional[int] = None,
                  admit_watermark: float = 0.0,
                  watchdog_window: int = 8,
-                 watchdog_threshold: int = 3):
+                 watchdog_threshold: int = 3,
+                 lookahead: int = 0):
         self.cache = cache
         self.max_batch = max_batch or cache.max_reqs
         if self.max_batch > cache.max_reqs:
@@ -168,7 +169,13 @@ class Scheduler:
         if not 0.0 <= admit_watermark <= 1.0:
             raise ValueError("admit_watermark is a free-block fraction "
                              "in [0, 1]")
+        if lookahead < 0:
+            raise ValueError("lookahead must be >= 0")
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        # speculative-decoding write span: each decode step may write up
+        # to ``lookahead`` draft rows beyond the pending token, so block
+        # growth / COW forks / admission reservations all cover them
+        self.lookahead = int(lookahead)
         self.window = int((cache.cfg.attn.window or 0)
                           if cache.cfg.attn else 0)
         # admission control: bounded queue + block-headroom watermark —
@@ -343,6 +350,19 @@ class Scheduler:
                 self.serial_admission = False
                 self._history.clear()
 
+    # --------------------------------------------------------- speculation
+    def spec_budget(self, req: Request) -> int:
+        """Draft tokens ``req`` may verify this step: capped by the
+        configured ``lookahead``, the remaining token budget (a draft
+        beyond the last committable token is wasted verify work), and the
+        per-request block capacity (every draft row's KV write at
+        ``cached + 1 + i`` must be tableable)."""
+        if not self.lookahead:
+            return 0
+        rem = req.params.max_new_tokens - len(req.emitted)
+        cap = self.cache.max_blocks_per_req * self.cache.block_size
+        return max(0, min(self.lookahead, rem - 1, cap - 1 - req.cached))
+
     # --------------------------------------------------------------- plan
     def plan(self) -> StepPlan:
         """One scheduling round: expire, reclaim, grow/preempt, admit,
@@ -379,11 +399,17 @@ class Scheduler:
             req = self.running.get(slot)
             if req is None:
                 continue                         # preempted below this step
-            if req.cached >= req.n_prefill \
-                    and self.cache.needs_block(slot, req.cached):
-                self._with_preempt(
-                    req, lambda: self.cache.extend(slot, req.rid),
-                    preempted)
+            if req.cached < req.n_prefill:
+                continue
+            # the step's write span is the pending token plus any
+            # speculative draft rows — growth must cover all of it
+            top = req.cached + self.spec_budget(req)
+            while self.running.get(slot) is req \
+                    and self.cache.needs_block(slot, top):
+                if not self._with_preempt(
+                        req, lambda: self.cache.extend(slot, req.rid),
+                        preempted):
+                    break
 
         # 3. admission (FIFO, head-of-line blocking); prefix-cache hits
         # start the request part-prefilled.  Watchdog-degraded mode admits
@@ -397,11 +423,17 @@ class Scheduler:
             if slot is None:
                 break
             toks = head.prefill_tokens
+            # +1: the first decode write lands at position n_prefill, so
+            # the slot must own the block covering it up front; +lk: the
+            # speculative write span too.  lk's remaining-budget cap keeps
+            # the total < prompt + max_new_tokens, so submit's fits()
+            # check still guarantees a solo request can always admit
+            lk = min(self.lookahead,
+                     max(head.params.max_new_tokens
+                         - len(head.emitted) - 1, 0))
             try:
-                # +1: the first decode write lands at position n_prefill,
-                # so the slot must own the block covering it up front
-                n_hit = self.cache.assign(slot, head.rid, len(toks) + 1,
-                                          tokens=toks)
+                n_hit = self.cache.assign(slot, head.rid,
+                                          len(toks) + 1 + lk, tokens=toks)
             except PoolExhausted:
                 break
             self.waiting.popleft()
@@ -425,7 +457,11 @@ class Scheduler:
             if req.cached < n_pref:              # mid-prefill: one chunk
                 req.state = PREFILL
                 end = self._chunk_end(req)
-                w1 = end + 1 if end == n_pref else end
+                # a chunk that finishes prefill enters decode in the same
+                # step, so its write span includes the decode write (and
+                # the speculative rows — admission reserved their blocks)
+                w1 = end + 1 + self.spec_budget(req) if end == n_pref \
+                    else end
                 if not self._with_preempt(
                         req, lambda: self.cache.ensure_writable(
                             slot, req.rid, req.cached, w1), preempted):
@@ -435,10 +471,10 @@ class Scheduler:
                     decode.append(req)           # in the same step
             else:                                # decode-phase
                 req.state = DECODE
+                w1 = req.cached + 1 + self.spec_budget(req)
                 if self._with_preempt(
                         req, lambda: self.cache.ensure_writable(
-                            slot, req.rid, req.cached, req.cached + 1),
-                        preempted):
+                            slot, req.rid, req.cached, w1), preempted):
                     decode.append(req)
 
         return StepPlan(admitted=admitted, decode=decode,

@@ -1,0 +1,268 @@
+"""Speculative decoding: draft sources + the acceptance rule.
+
+The engine's speculative step (``Engine(spec=SpecConfig(...))``) replaces
+the one-token decode with a *verify* pass: a draft source proposes up to
+``depth`` next tokens for each decode-ready request, the target model
+scores the pending token plus all proposals in ONE multi-token forward
+over the paged cache (``model.verify`` — the chunked-prefill
+write-then-attend pattern turned batched), and an accept/reject walk
+commits the longest prefix of proposals the target itself would have
+sampled, plus one target-sampled token (the "bonus" token when every
+proposal is accepted, the correction otherwise).
+
+**Determinism contract.**  The engine samples the token for context
+position ``p`` with key ``fold_in(PRNGKey(seed), p)`` — a pure function
+of (seed, position, logits at p).  The verify pass computes exactly those
+per-position samples for all rows at once; a proposal is *accepted* iff it
+equals the target's own sample at its position.  This is Leviathan-style
+residual acceptance specialised to deterministic per-position sampling:
+the residual distribution after a reject is the point mass at the
+target's sample, so the emitted stream is token-identical to the
+non-speculative engine **no matter what the draft proposes** — drafts
+only change how many tokens commit per step, never which tokens.
+Rejected rows roll back by simply not advancing ``Request.cached``: their
+KV sits above the valid length in COW-forked, exclusively-owned blocks
+(``Scheduler.spec_budget`` reserved them), masked until overwritten — no
+allocator state to unwind, no block leaked.
+
+Draft sources:
+
+  * :class:`NGramDraft` — self-speculation via prompt-lookup [arXiv:
+    2304.04487-style]: find the longest trailing n-gram of the request's
+    context earlier in that same context and propose the tokens that
+    followed it.  No second model, no state — a pure function of the
+    context, hence trivially batch- and preemption-invariant.
+  * :class:`ModelDraft` — a paired smaller model from the config zoo
+    (e.g. ``smollm-360m`` drafting for ``llama-7b``; see
+    configs/spec_pairs.py) with its *own* paged cache and block tables,
+    caught up incrementally and stepped greedily ``depth`` tokens ahead.
+    Draft-pool exhaustion degrades to proposing nothing — the draft can
+    never preempt or stall the target.
+  * :class:`NullDraft` — proposes nothing; with ``depth=0`` the verify
+    pass is a single-node tree that collapses bitwise to vanilla decode
+    (the degenerate-tree equivalence test).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.cache import PagedKVCache, PoolExhausted
+
+_MODES = ("none", "ngram", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs.
+
+    ``depth``: max draft tokens verified per step (the tree depth; 0
+    disables drafting but keeps the verify path — useful for the
+    degenerate-equivalence test).  ``mode``: ``"ngram"`` (self-
+    speculation), ``"model"`` (paired draft model — pass the engine a
+    :class:`ModelDraft`), or ``"none"`` (NullDraft).  ``ngram``: longest
+    n-gram length the prompt-lookup matcher tries."""
+    depth: int = 4
+    mode: str = "ngram"
+    ngram: int = 3
+    draft_arch: Optional[str] = None   # bookkeeping: which zoo config
+
+    def __post_init__(self):
+        if self.depth < 0:
+            raise ValueError("depth must be >= 0")
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}")
+        if self.ngram < 1:
+            raise ValueError("ngram must be >= 1")
+
+
+class DraftSource:
+    """Interface the engine drives each speculative step."""
+
+    def propose(self, req, k: int) -> List[int]:
+        """Up to ``k`` draft tokens continuing ``req.context``.  Must be a
+        deterministic function of the request's own state — never of
+        batch composition — or target-stream invariance still holds but
+        tokens/step becomes run-dependent."""
+        raise NotImplementedError
+
+    def observe(self, req, n_acc: int, proposed: int) -> None:
+        """Commit hook: ``n_acc`` of ``proposed`` drafts were accepted
+        (the target also committed one more sampled token)."""
+
+    def release(self, rid: int) -> None:
+        """The request reached a terminal state — drop any draft state."""
+
+
+class NullDraft(DraftSource):
+    def propose(self, req, k: int) -> List[int]:
+        return []
+
+
+class NGramDraft(DraftSource):
+    """Prompt-lookup self-speculation: propose the continuation of the
+    most recent earlier occurrence of the context's longest trailing
+    n-gram.  Stateless — proposals depend only on ``req.context``."""
+
+    def __init__(self, ngram: int = 3):
+        if ngram < 1:
+            raise ValueError("ngram must be >= 1")
+        self.ngram = int(ngram)
+
+    def propose(self, req, k: int) -> List[int]:
+        if k <= 0:
+            return []
+        ctx = np.asarray(req.context)
+        L = len(ctx)
+        for n in range(min(self.ngram, L - 1), 0, -1):
+            tail = ctx[L - n:]
+            # rightmost earlier occurrence → the freshest continuation
+            for s in range(L - n - 1, -1, -1):
+                if np.array_equal(ctx[s:s + n], tail):
+                    cont = ctx[s + n:s + n + k]
+                    if len(cont):
+                        return [int(t) for t in cont]
+                    break          # match flush against the tail: no cont
+        return []
+
+
+class ModelDraft(DraftSource):
+    """Paired-draft-model source: its own paged cache + block tables,
+    caught up to each request's context with ``prefill_chunk`` and rolled
+    ``k`` tokens ahead with greedy ``decode`` steps (B=1 per request —
+    proposals are a pure function of the request's context).
+
+    Bookkeeping mirrors the target's rollback-free design: ``_dlen[rid]``
+    counts draft-cache positions that hold the *committed* context's KV;
+    rejected draft KV above it is overwritten by later writes and masked
+    until then.  Any pool exhaustion degrades to proposing nothing for
+    that request (its draft state is dropped) — the draft never preempts
+    the target."""
+
+    def __init__(self, model, params, *, block_size: int = 16,
+                 n_blocks: int = 128, max_batch: int = 8):
+        cfg = model.cfg
+        if cfg.arch_type not in ("dense", "vlm", "moe"):
+            raise ValueError(f"draft model must have a paged decode path "
+                             f"(got arch_type={cfg.arch_type!r})")
+        self.model = model
+        self.params = params
+        self.cache = PagedKVCache.create(
+            cfg, block_size=block_size, n_blocks=n_blocks,
+            max_reqs=max_batch, prefix_cache=False)
+        self.max_batch = int(max_batch)
+        self._slots: Dict[int, int] = {}           # rid -> draft slot
+        self._dlen: Dict[int, int] = {}            # rid -> cached positions
+        self._chunk = jax.jit(self._chunk_fn, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------- jitted steps
+    def _chunk_fn(self, params, pools, bt, start, n_valid, tokens):
+        out = self.model.prefill_chunk(
+            params, {**pools, "block_table": bt},
+            {"tokens": tokens, "start": start, "n_valid": n_valid})
+        return {k: out[k] for k in pools}
+
+    def _decode_fn(self, params, pools, bt, pos, tok):
+        logits, cache2 = self.model.decode(
+            params, {**pools, "block_table": bt},
+            {"token": tok, "pos": pos})
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, {k: cache2[k] for k in pools}
+
+    # --------------------------------------------------------- lifecycle
+    def _drop(self, rid: int) -> None:
+        slot = self._slots.pop(rid, None)
+        self._dlen.pop(rid, None)
+        if slot is not None:
+            self.cache.release(slot, rid)
+
+    def release(self, rid: int) -> None:
+        self._drop(rid)
+
+    def _ensure_slot(self, req, k: int) -> Optional[int]:
+        rid = req.rid
+        if rid in self._slots:
+            return self._slots[rid]
+        used = set(self._slots.values())
+        slot = next((s for s in range(self.max_batch) if s not in used),
+                    None)
+        if slot is None:
+            return None
+        total = len(req.prompt) + req.params.max_new_tokens + k + 1
+        try:
+            self.cache.assign(slot, rid, total)
+        except PoolExhausted:
+            return None
+        self._slots[rid] = slot
+        self._dlen[rid] = 0
+        return slot
+
+    # ----------------------------------------------------------- propose
+    _PAD = 32                                     # chunk shape bucket
+
+    def propose(self, req, k: int) -> List[int]:
+        if k <= 0:
+            return []
+        slot = self._ensure_slot(req, k)
+        if slot is None:
+            return []
+        rid = req.rid
+        ctx = np.asarray(req.context)
+        L = len(ctx)
+        bt = jnp.asarray(self.cache.table[slot:slot + 1])
+        try:
+            # catch up: prefill context[dlen : L-1] (pending token's KV is
+            # written by the first decode step, as in the target engine)
+            start = self._dlen[rid]
+            while start < L - 1:
+                n = min(L - 1 - start, self._PAD)
+                toks = np.zeros((self._PAD,), np.int32)
+                toks[:n] = ctx[start:start + n]
+                self.cache.pools = self._chunk(
+                    self.params, self.cache.pools, bt, jnp.int32(start),
+                    jnp.int32(n), jnp.asarray(toks)[None])
+                start += n
+            # roll k greedy steps ahead
+            out: List[int] = []
+            tok = int(ctx[-1])
+            for i in range(k):
+                nxt, self.cache.pools = self._decode(
+                    self.params, self.cache.pools, bt,
+                    jnp.full((1,), L - 1 + i, jnp.int32),
+                    jnp.full((1, 1), tok, jnp.int32))
+                tok = int(nxt[0])
+                out.append(tok)
+            # positions [0, L) now hold committed-context KV (the decode
+            # roll wrote the pending token at L-1); draft KV above L is
+            # provisional — observe() extends validity over accepted drafts
+            self._dlen[rid] = L
+            return out
+        except PoolExhausted:
+            self._drop(rid)
+            return []
+
+    def observe(self, req, n_acc: int, proposed: int) -> None:
+        rid = req.rid
+        if proposed == 0 or rid not in self._slots:
+            return            # no roll happened: draft cache is unchanged
+        # accepted drafts ARE the committed tokens, so their draft-cache
+        # KV (written during propose's roll) is valid context KV now; the
+        # one extra target-sampled token is the new pending token, whose
+        # KV the next roll writes — hence exactly len(context) - 1
+        self._dlen[rid] = len(req.context) - 1
+
+
+def make_draft(spec: SpecConfig) -> DraftSource:
+    """Engine-side factory for the stateless modes; ``"model"`` drafts
+    need params, so the caller constructs :class:`ModelDraft` itself."""
+    if spec.mode == "ngram":
+        return NGramDraft(spec.ngram)
+    if spec.mode == "none":
+        return NullDraft()
+    raise ValueError('mode="model" needs an explicit ModelDraft '
+                     '(draft params are caller-owned)')

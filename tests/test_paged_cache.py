@@ -172,8 +172,8 @@ def test_paged_decode_rejects_bad_masks_and_shapes():
         paged_decode_attn(q, kp, vp, bt, ln, mask=mk.document())
     with pytest.raises(ValueError, match="offset-free"):
         paged_decode_attn(q, kp, vp, bt, ln, mask=mk.causal(rel_offset=3))
-    with pytest.raises(ValueError, match="one query token"):
-        paged_decode_attn(jnp.zeros((1, 2, 4, 8)), kp, vp, bt, ln)
+    with pytest.raises(ValueError, match="query token"):
+        paged_decode_attn(jnp.zeros((1, 0, 4, 8)), kp, vp, bt, ln)
 
 
 # ==========================================================================

@@ -2,7 +2,9 @@
 equivalence, per-request sampling determinism, stop-token early exit, and
 the batch-invariance property suite (staggered arrivals, mixed prompt
 lengths, pool-pressure preemption ⇒ every request's greedy stream equals
-its solo run), plus scheduler/allocator bookkeeping invariants.
+its solo run — with speculation on, every stream plus its acceptance
+history must match the solo NON-speculative run), plus
+scheduler/allocator bookkeeping invariants.
 """
 import jax
 import jax.numpy as jnp
@@ -201,6 +203,52 @@ def test_batch_invariance_across_chunk_size_and_cache_state(seed, chunk,
     for i, spec in enumerate(specs):
         solo = _solo_stream(model, params, spec["prompt"], n=spec["n"],
                             max_batch=3)
+        np.testing.assert_array_equal(out[rids[i]], solo, err_msg=str(i))
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000), depth=st.sampled_from([1, 2, 3]))
+def test_spec_batch_invariance_under_staggered_arrivals(seed, depth):
+    """Speculative streams are batch- and preemption-invariant: random
+    staggered arrivals (mixed lengths, budgets, temperatures) into a
+    speculating engine with a pool small enough to preempt — every
+    stream equals its solo NON-speculative run, the per-request
+    acceptance history is internally consistent, and the allocator
+    conserves through every rejected-branch rollback."""
+    cfg, model, params, batch_d = _setup("smollm-360m", prompt_len=32,
+                                         batch=4)
+    from repro.serve.speculative import SpecConfig
+    prompts = _prompts(batch_d)
+    rng = np.random.default_rng(seed)
+    specs = [dict(prompt=prompts[i % len(prompts)]
+                  [:int(rng.choice([9, 17, 25, 32]))],
+                  n=int(rng.integers(3, 8)),
+                  temp=float(rng.choice([0.0, 0.8])),
+                  arrive=int(rng.integers(0, 4)))
+             for i in range(int(rng.integers(3, 6)))]
+    # pool sized to hold ~2 requests incl. lookahead: forces queueing
+    # and/or preemption through the speculative path
+    eng = Engine(model, params, max_batch=4, block_size=8, n_blocks=16,
+                 spec=SpecConfig(depth=depth, mode="ngram"))
+    rids = {}
+    step = 0
+    for i in sorted(range(len(specs)),
+                    key=lambda i: (specs[i]["arrive"], i)):
+        while step < specs[i]["arrive"]:
+            eng.step()
+            step += 1
+        rids[i] = eng.submit(specs[i]["prompt"],
+                             max_new_tokens=specs[i]["n"],
+                             temperature=specs[i]["temp"], seed=i)
+    out = eng.run()
+    eng.cache.allocator.check_conservation()
+    assert eng.cache.allocator.n_free + eng.cache.n_cache_blocks \
+        == eng.cache.allocator.n_usable
+    s = eng.stats()
+    assert s["spec_accepted"] + s["spec_rejected"] == s["spec_proposed"]
+    for i, spec in enumerate(specs):
+        solo = _solo_stream(model, params, spec["prompt"], n=spec["n"],
+                            temperature=spec["temp"], seed=i)
         np.testing.assert_array_equal(out[rids[i]], solo, err_msg=str(i))
 
 
