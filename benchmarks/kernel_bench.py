@@ -23,8 +23,6 @@ import argparse
 import dataclasses
 import json
 import os
-import statistics
-import time
 
 import jax
 import jax.numpy as jnp
@@ -59,20 +57,9 @@ def _regimes(T):
     }
 
 
-def _timeit_pair(fn_a, fn_b, iters):
-    """Median µs of two variants, iterations interleaved A/B so slow drift
-    in background load hits both equally (host CPU timing is noisy)."""
-    fn_a()                                 # warmup / compile
-    fn_b()
-    ta, tb = [], []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        fn_a()
-        ta.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        fn_b()
-        tb.append(time.perf_counter() - t0)
-    return statistics.median(ta) * 1e6, statistics.median(tb) * 1e6
+# interleaved-median A/B clock — shared with the offline tile sweeps
+# (repro.tune.sweep) so the table and the tracked bench use one ruler
+from repro.tune.timing import timeit_pair as _timeit_pair  # noqa: E402
 
 
 def _mk(B, T, H, D, dtype=jnp.float32, seed=0):
@@ -180,6 +167,39 @@ def run_bench(*, T, B, H, D, bq, bk, iters, backends):
     return cases
 
 
+def tuned_tile_rows():
+    """Tuning-table A/B (tracked): for every kernel row the active table
+    holds for this platform, resolve tile shapes through the consumer
+    chain (``registry.block_tuning_kw`` with call context and no explicit
+    kwargs) and record whether the table-backed resolution returns the
+    measured winner.  Pure lookup, no timing — deterministic across CI
+    hosts."""
+    from repro.kernels.registry import block_tuning_kw
+    from repro.tune.table import active_table
+    tab = active_table()
+    if tab is None:
+        return dict(table=None, all_match=None, rows=[])
+    plat = jax.default_backend()
+    rows = []
+    for r in tab.data.get("kernel", []):
+        if r["platform"] != plat:
+            continue
+        kw = block_tuning_kw(None, None, backend=r["backend"],
+                             platform=plat, mask_kind=r["mask_kind"],
+                             head_dim=r["head_dim"], seq=r["seq"],
+                             op=r["op"])
+        got = (kw.get("block_q"), kw.get("block_kv"))
+        rows.append(dict(
+            backend=r["backend"], mask_kind=r["mask_kind"], seq=r["seq"],
+            head_dim=r["head_dim"], op=r["op"],
+            measured_best=[r["block_q"], r["block_kv"]],
+            resolved=list(got),
+            match=got == (r["block_q"], r["block_kv"]),
+            sweep=r.get("sweep")))
+    return dict(table=os.path.basename(tab.path or ""),
+                all_match=all(x["match"] for x in rows), rows=rows)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -201,10 +221,10 @@ def main(argv=None):
     # headline numbers tracked across PRs: the grid-step work ratios of the
     # local causal chunk (the step every schedule executes on every device)
     # and the packed-document chunk (must beat plain causal — the packed
-    # batch acceptance criterion). The wall figure is only meaningful at
-    # the full shapes — smoke tiles are small enough that per-tile branch
-    # overhead drowns the signal, so the smoke summary rests on the
-    # deterministic step ratios alone.
+    # batch acceptance criterion), plus the pruned-vs-dense wall median
+    # ratio of the local causal chunk. The wall figure is computed from
+    # the same medians at every shape (smoke values carry more noise than
+    # the full shapes, but a measured ratio beats the former null).
     local_fwd = next(c for c in cases
                      if c["name"] == "local_causal/fwd/pallas-interpret")
     doc_fwd = next(c for c in cases if c["name"] ==
@@ -214,24 +234,28 @@ def main(argv=None):
     summary = dict(
         local_causal_step_ratio=local_fwd["grid"]["work_ratio"],
         document_step_ratio=doc_fwd["grid"]["work_ratio"],
-        local_causal_wall_speedup=(None if args.smoke
-                                   else local_fwd["wall_us"]["speedup"]),
+        local_causal_wall_speedup=round(
+            local_fwd["wall_us"]["dense"] / local_fwd["wall_us"]["pruned"],
+            3),
     )
     out = dict(version=2, generated_by="benchmarks/kernel_bench.py",
                smoke=bool(args.smoke),
                host=dict(platform=jax.default_backend(), jax=jax.__version__),
-               shape=shape, iters=iters, summary=summary, cases=cases)
+               shape=shape, iters=iters, summary=summary,
+               tuning=tuned_tile_rows(), cases=cases)
     path = os.path.abspath(args.out)
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
         f.write("\n")
     print(f"wrote {path}")
-    wall = summary["local_causal_wall_speedup"]
+    tuning = out["tuning"]
     print(f"summary: local causal chunk executes "
           f"{summary['local_causal_step_ratio']}x fewer grid steps; packed "
-          f"document chunk {summary['document_step_ratio']}x"
-          + (f", wall x{wall}" if wall else " (smoke: wall tracked per-case"
-             " only; too noisy at smoke shapes for a headline)"))
+          f"document chunk {summary['document_step_ratio']}x; "
+          f"wall x{summary['local_causal_wall_speedup']}"
+          + (f"; tuned tiles {'all match' if tuning['all_match'] else 'MISMATCH'}"
+             f" ({len(tuning['rows'])} table rows)" if tuning["table"]
+             else "; no tuning table active"))
 
 
 if __name__ == "__main__":

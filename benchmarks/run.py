@@ -273,6 +273,78 @@ for sched in ("auto","ring","balanced","zigzag","ulysses","rsa"):
                 "wall us, CPU host mesh")
 
 
+# --------------------------------------------------------------- autotune
+
+def bench_autotune_ab():
+    """Tuning-table A/B (tracked): derived rows only — no timing — so the
+    tracked file is deterministic across CI hosts.  For every schedule row
+    in the active table, resolve ``schedule="auto"`` through the consumer
+    chain (table hit → calibrated coeffs → roofline) and record whether it
+    returns the measured winner; then replay the calibration fit stored in
+    the table (per-regime roofline pick vs calibrated pick vs measured
+    best, Spearman of each cost model against wall time)."""
+    from repro.core.schedule import choose_schedule, plan_capable
+    from repro.tune.calibrate import mask_for_kind
+    from repro.tune.table import active_table
+    tab = active_table()
+    if tab is None:
+        row("autotune/table", 0, "none active (run tools/autotune.py sweep)")
+        return
+    row("autotune/table", 0, os.path.basename(tab.path or "<in-memory>"))
+    n_match = n_rows = 0
+    for r in tab.schedule_rows():
+        seq, P = r["seq"], r["P"]
+        m = mask_for_kind(r["mask_kind"], T=seq, window=r.get("window"))
+        Hq = r.get("Hq", 8)
+        Hkv = r.get("Hkv") or Hq
+        pick = choose_schedule(m, P, Tl=seq // P, B=r.get("B", 1),
+                               Hq=Hq, Hkv=Hkv, Dqk=r.get("Dqk", 64),
+                               bpe=r.get("bpe", 4),
+                               dynamic_seg=bool(r.get("dynamic_seg")),
+                               include_bwd=False)
+        # auto's candidate set excludes zigzag (needs the caller's layout
+        # permutation) — judge the pick against the fastest *capable*
+        # schedule, and report the global winner alongside
+        names = [n for n in ("balanced", "ring") if plan_capable(n, m)]
+        if Hq % P == 0 and Hkv % P == 0:
+            names.append("ulysses")
+        best_cap = tab.best_schedule(mask_kind=r["mask_kind"], P=P, seq=seq,
+                                     candidates=names)
+        ok = pick == best_cap
+        n_rows += 1
+        n_match += ok
+        row(f"autotune/auto_{r['mask_kind']}_P{P}_seq{seq}", 0,
+            f"auto={pick} best_capable={best_cap} global_best={r['best']} "
+            f"match={'yes' if ok else 'NO'}")
+    row("autotune/auto_match", 0, f"{n_match}/{n_rows}")
+    fit = tab.data.get("calibration", {}).get("fit")
+    if not fit:
+        row("autotune/calibration", 0, "absent")
+        return
+    for reg in fit.get("regimes", []):
+        row(f"autotune/costmodel_{reg['mask_kind']}_P{reg['P']}"
+            f"_seq{reg['seq']}", 0,
+            f"measured_best={reg['measured_best']} "
+            f"calibrated_pick={reg['calibrated_pick']} "
+            f"roofline_pick={reg['roofline_pick']}")
+    row("autotune/spearman_calibrated", 0, f"{fit['spearman']:.4f}")
+    row("autotune/spearman_roofline", 0,
+        f"{fit['spearman_roofline']:.4f}")
+    row("autotune/best_match_calibrated", 0, fit["best_match"])
+    row("autotune/best_match_roofline", 0, fit["best_match_roofline"])
+    from benchmarks.kernel_bench import tuned_tile_rows
+    tiles = tuned_tile_rows()
+    for t in tiles["rows"]:
+        row(f"autotune/tiles_{t['backend']}_{t['mask_kind']}_seq{t['seq']}"
+            f"_{t['op']}", 0,
+            f"resolved={t['resolved'][0]}x{t['resolved'][1]} "
+            f"measured_best={t['measured_best'][0]}x{t['measured_best'][1]} "
+            f"match={'yes' if t['match'] else 'NO'}")
+    if tiles["rows"]:
+        row("autotune/tiles_all_match", 0,
+            "yes" if tiles["all_match"] else "NO")
+
+
 # ------------------------------------------------------------- appendix D
 
 def bench_appendixD_comm_volume():
@@ -347,13 +419,14 @@ BENCHES = {
     "appD": bench_appendixD_comm_volume,
     "plans": bench_schedules_plans,
     "schedules": bench_schedules_wall,
+    "autotune": bench_autotune_ab,
     "roofline": bench_roofline_table,
 }
 
 # the subset tracked in BENCH_schedules.json (CI smoke + in-repo history):
 # deterministic derived rows + static plan/step-count/cost rows + the
-# schedule-level wall rows
-TRACKED = ("fig4", "appD", "table2", "plans", "schedules")
+# schedule-level wall rows + the tuning-table A/B resolution rows
+TRACKED = ("fig4", "appD", "table2", "plans", "schedules", "autotune")
 
 
 def main() -> None:

@@ -56,13 +56,20 @@ def _resolve_mask(mask, causal, rel_offset, window) -> MaskSpec:
                           rel_offset=int(rel_offset or 0))
 
 
-def _tuning_kw(be, block_q, block_kv):
+def _tuning_kw(be, block_q, block_kv, *, mask=None, q=None, op="fwd"):
     """block_q/block_kv hints are forwarded only to backends that declare
     ``tunable_blocks`` (Pallas tile shapes, chunked-lax scan chunk); other
-    backends silently ignore the hints rather than erroring."""
+    backends silently ignore the hints rather than erroring.  When the
+    caller passes no hints, the call context (backend, mask kind, shape)
+    lets ``block_tuning_kw`` consult the env overrides and the active
+    tuning table (repro.tune) before the kernels' built-in defaults."""
     if not be.tunable_blocks:
         return {}
-    return registry.block_tuning_kw(block_q, block_kv)
+    return registry.block_tuning_kw(
+        block_q, block_kv, backend=be.name,
+        mask_kind=mask.kind if mask is not None else None,
+        head_dim=int(q.shape[-1]) if q is not None else None,
+        seq=int(q.shape[1]) if q is not None else None, op=op)
 
 
 def _offset_kw(mask, q_offset, kv_offset):
@@ -95,7 +102,7 @@ def chunk_attn(q, k, v, *, mask: MaskSpec | None = None, causal=None,
                           dynamic_offsets=dyn)
     return be.fwd(q, k, v, mask=mask, scale=scale, q_segments=q_segments,
                   kv_segments=kv_segments, **okw,
-                  **_tuning_kw(be, block_q, block_kv))
+                  **_tuning_kw(be, block_q, block_kv, mask=mask, q=q))
 
 
 def chunk_attn_bwd(q, k, v, o, lse, do, *, mask: MaskSpec | None = None,
@@ -113,7 +120,8 @@ def chunk_attn_bwd(q, k, v, o, lse, do, *, mask: MaskSpec | None = None,
                           dynamic_offsets=dyn)
     return be.bwd(q, k, v, o, lse, do, mask=mask, scale=scale, delta=delta,
                   q_segments=q_segments, kv_segments=kv_segments, **okw,
-                  **_tuning_kw(be, block_q, block_kv))
+                  **_tuning_kw(be, block_q, block_kv, mask=mask, q=q,
+                               op="bwd"))
 
 
 def paged_decode_attn(q, k_pool, v_pool, block_table, lengths, *,

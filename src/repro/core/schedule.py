@@ -936,33 +936,62 @@ def choose_schedule(mask: MaskSpec, P: int, *, Tl: int, B: int = 1,
                     dynamic_seg: bool = False,
                     include_bwd: bool = True) -> str:
     """``schedule="auto"``: pick the cheapest capable schedule for this
-    (mask, P, shapes) by the static cost model.  Candidates are the plan
-    schedules (zigzag excluded — it requires the caller to pre-permute
-    the global layout, so it stays an explicit opt-in) plus the ulysses
-    baseline when the head counts divide P.  Deterministic: ties break
-    toward balanced > ring > ulysses."""
+    (mask, P, shapes).  Candidates are the plan schedules (zigzag
+    excluded — it requires the caller to pre-permute the global layout,
+    so it stays an explicit opt-in) plus the ulysses baseline when the
+    head counts divide P.
+
+    Ranking consults the active tuning table (repro.tune) first: a
+    measured row at the nearest (mask kind, P, seq) bucket decides
+    outright; otherwise the table's calibrated cost-model coefficients
+    rank the candidates; only with no table at all does the uncalibrated
+    analytic roofline decide.  Deterministic: ties break toward
+    balanced > ring > ulysses."""
     Hkv = Hq if Hkv is None else Hkv
     if P <= 1:
         return "ring"
-    scored = []
-    order = {"balanced": 0, "ring": 1, "ulysses": 2}
-    for name in ("balanced", "ring"):
-        if not plan_capable(name, mask):
-            continue
-        cost = plan_cost(build_plan(name, mask, P, Tl), B=B, Hq=Hq,
-                         Hkv=Hkv, Dqk=Dqk, Dv=Dv, bpe=bpe,
-                         dynamic_seg=dynamic_seg)
-        t = cost.time_estimate(include_bwd)["step_s_lower_bound"]
-        scored.append((t, order[name], name))
+    names = [n for n in ("balanced", "ring") if plan_capable(n, mask)]
     if Hq % P == 0 and Hkv % P == 0:
-        cost = ulysses_cost(mask, P, Tl=Tl, B=B, Hq=Hq, Hkv=Hkv,
-                            Dqk=Dqk, Dv=Dv, bpe=bpe)
-        t = cost.time_estimate(include_bwd)["step_s_lower_bound"]
-        scored.append((t, order["ulysses"], "ulysses"))
-    if not scored:
+        names.append("ulysses")
+    if not names:
         raise ValueError(
             f"schedule='auto': no capable schedule for mask {mask.kind!r} "
             f"with P={P}, heads=({Hq}, {Hkv}) — prefix_lm and non-causal "
             f"sliding windows need absolute positions (ulysses, which "
             f"needs head counts divisible by P) or a single-shard axis")
+    if len(names) == 1:
+        return names[0]
+
+    from repro.tune.table import active_table
+    tab = active_table()
+    if tab is not None:
+        hit = tab.best_schedule(mask_kind=mask.kind, P=P, seq=P * Tl,
+                                candidates=names)
+        if hit is not None:
+            return hit
+    coeffs = tab.coeffs() if tab is not None else None
+
+    scored = []
+    order = {"balanced": 0, "ring": 1, "ulysses": 2}
+    for name in names:
+        if coeffs is not None:
+            from repro.tune.calibrate import (predict_s,
+                                              schedule_features)
+            feats = schedule_features(
+                name, mask_kind=mask.kind, P=P, seq=P * Tl, B=B, Hq=Hq,
+                Hkv=Hkv, Dqk=Dqk, bpe=bpe, window=mask.window or None,
+                dynamic_seg=dynamic_seg, include_bwd=include_bwd)
+            if feats is None:
+                continue
+            t = predict_s(feats, coeffs)
+        elif name == "ulysses":
+            cost = ulysses_cost(mask, P, Tl=Tl, B=B, Hq=Hq, Hkv=Hkv,
+                                Dqk=Dqk, Dv=Dv, bpe=bpe)
+            t = cost.time_estimate(include_bwd)["step_s_lower_bound"]
+        else:
+            cost = plan_cost(build_plan(name, mask, P, Tl), B=B, Hq=Hq,
+                             Hkv=Hkv, Dqk=Dqk, Dv=Dv, bpe=bpe,
+                             dynamic_seg=dynamic_seg)
+            t = cost.time_estimate(include_bwd)["step_s_lower_bound"]
+        scored.append((t, order[name], name))
     return min(scored)[2]

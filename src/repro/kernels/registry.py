@@ -247,9 +247,31 @@ def _chunked_bwd(q, k, v, o, lse, do, **kw):
     return chunked_bwd(q, k, v, o, lse, do, **kw)
 
 
-def block_tuning_kw(block_q, block_kv):
+def block_tuning_kw(block_q, block_kv, *, backend=None, platform=None,
+                    mask_kind=None, head_dim=None, seq=None, op="fwd"):
     """None-filtered {block_q, block_kv} kwargs for tunable backends (shared
-    by chunk_attn's hint forwarding and the pallas closures below)."""
+    by chunk_attn's hint forwarding and the pallas closures below).
+
+    When the caller passes *neither* block, the tuning chain kicks in:
+    ``REPRO_TUNE_BLOCK_Q``/``REPRO_TUNE_BLOCK_KV`` env overrides first,
+    then the active tuning table's nearest-bucket winner for the call
+    context (requires ``backend`` + shape context — the bare two-arg form
+    used inside backend closures never re-consults the table).  Explicit
+    kwargs always win wholesale; with no env, no table, and no kwargs the
+    kernels keep their built-in defaults."""
+    if block_q is None and block_kv is None:
+        from repro.tune import table as _tt
+        block_q = _tt.env_int("REPRO_TUNE_BLOCK_Q")
+        block_kv = _tt.env_int("REPRO_TUNE_BLOCK_KV")
+        if block_q is None and block_kv is None and backend is not None:
+            tab = _tt.active_table()
+            if tab is not None:
+                hit = tab.best_blocks(
+                    backend=backend, platform=platform or current_platform(),
+                    mask_kind=mask_kind or "causal",
+                    head_dim=head_dim or 64, seq=seq or 0, op=op)
+                if hit is not None:
+                    block_q, block_kv = hit
     kw = {}
     if block_q is not None:
         kw["block_q"] = block_q

@@ -37,7 +37,8 @@ def main(argv=None):
     ap.add_argument("--seq-shards", type=int, default=1)
     ap.add_argument("--fixed-slot", action="store_true",
                     help="legacy dense-cache engine instead of paged")
-    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged block size (0 = tuning-table default)")
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="paged pool size (0 = sized to the workload)")
     ap.add_argument("--spec-depth", type=int, default=0,
@@ -63,6 +64,11 @@ def main(argv=None):
     model = build_model(cfg, Runtime(mesh=mesh, par=par, impl="ref"))
     params = model.init(jax.random.PRNGKey(0))
     batch = SyntheticTokens(cfg, shape, par, mesh).batch(0)
+
+    if not args.block_size:
+        from repro.serve.cache import PagedKVCache
+        args.block_size = PagedKVCache.default_block_size(
+            cfg.attn, mesh, par.seq_axis)
 
     if args.fixed_slot:
         eng = FixedSlotEngine(model, params)

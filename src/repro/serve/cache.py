@@ -337,7 +337,7 @@ class PagedKVCache:
 
     # ------------------------------------------------------------ creation
     @classmethod
-    def create(cls, cfg: ModelConfig, *, block_size: int = 16,
+    def create(cls, cfg: ModelConfig, *, block_size: Optional[int] = None,
                n_blocks: int = 64, max_reqs: int = 8,
                max_blocks_per_req: Optional[int] = None,
                mesh=None, seq_axis: str = "model",
@@ -346,6 +346,8 @@ class PagedKVCache:
         if a is None:
             raise ValueError(f"paged KV cache needs an attention config "
                              f"(arch {cfg.arch_type!r} has none)")
+        if block_size is None:
+            block_size = cls.default_block_size(a, mesh, seq_axis)
         if max_blocks_per_req is None:
             max_blocks_per_req = n_blocks - 1
         dt = jnp.dtype(cfg.dtype)
@@ -376,6 +378,28 @@ class PagedKVCache:
                    table=np.zeros((max_reqs, max_blocks_per_req), np.int32),
                    n_assigned=np.zeros((max_reqs,), np.int32),
                    prefix=prefix)
+
+    @staticmethod
+    def default_block_size(a, mesh=None, seq_axis: str = "model") -> int:
+        """Default pool granularity when the caller passes none:
+        ``REPRO_TUNE_BLOCK_SIZE`` env > the active tuning table's winner
+        for this (kv layout, pool sharding) > the historical 16."""
+        from repro.tune import table as _tt
+        bs = _tt.env_int("REPRO_TUNE_BLOCK_SIZE")
+        if bs is not None:
+            return bs
+        tab = _tt.active_table()
+        if tab is not None:
+            size = 1
+            if mesh is not None:
+                size = dict(zip(mesh.axis_names,
+                                mesh.devices.shape)).get(seq_axis, 1)
+            hit = tab.best_block_size(
+                layout="mla" if a.is_mla else "mha",
+                sharding="none" if size <= 1 else "pool")
+            if hit is not None:
+                return hit
+        return 16
 
     @staticmethod
     def _pool_pspec(shape: Tuple[int, ...], mesh, seq_axis: str):

@@ -73,7 +73,8 @@ from repro.serve.cache import PagedKVCache
 from repro.serve.faults import FAULT_OWNER, FaultInjector
 from repro.serve.scheduler import (DECODE, PREFILL, Request, SamplingParams,
                                    Scheduler)
-from repro.serve.speculative import DraftSource, SpecConfig, make_draft
+from repro.serve.speculative import (AdaptiveDepth, DraftSource, SpecConfig,
+                                     make_draft)
 
 # dense-cache keys whose seq axis (2) gets decode headroom padding.
 # ssm/hybrid are absent: their prefill builds no decode cache (seed
@@ -95,7 +96,7 @@ class Engine:
     """Paged continuous-batching serving engine (see module docstring)."""
 
     def __init__(self, model, params, *, max_batch: int = 8,
-                 block_size: int = 16, n_blocks: int = 128,
+                 block_size: Optional[int] = None, n_blocks: int = 128,
                  max_blocks_per_req: Optional[int] = None,
                  use_mesh_sharding: bool = True,
                  prefill_chunk_tokens: int = 32,
@@ -138,6 +139,11 @@ class Engine:
         self.spec = spec
         self.draft = (draft if draft is not None
                       else make_draft(spec) if spec is not None else None)
+        self._adepth = (AdaptiveDepth(spec)
+                        if spec is not None and spec.adaptive else None)
+        # {effective draft budget: spec-step row count} — how deep the
+        # controller actually lets each request draft
+        self.spec_depth_hist: Dict[int, int] = {}
         self.sched = Scheduler(self.cache, max_batch,
                                prefill_chunk_tokens=prefill_chunk_tokens,
                                max_queue=max_queue,
@@ -155,7 +161,7 @@ class Engine:
         # prompt/requeue lengths.  Chunk logits are never computed (the
         # last context token enters via decode), and padded rows write to
         # the null block, so tail padding is free
-        self._prefill_bucket = math.lcm(block_size,
+        self._prefill_bucket = math.lcm(self.cache.block_size,
                                         max(self.model.rt.seq_size, 1))
         # the block pools are donated: every step's scatters update them
         # in place instead of copying the whole pool every token
@@ -386,6 +392,15 @@ class Engine:
         self.sched.fail(req, reason)
         self.counters["quarantined"] += 1
 
+    def _release_draft(self, rid: int) -> None:
+        """Terminal-state hook: drop draft-model state AND the adaptive
+        depth controller's acceptance history for this request (rids are
+        never reused, but the dicts must not grow unboundedly)."""
+        if self.draft is not None:
+            self.draft.release(rid)
+        if self._adepth is not None:
+            self._adepth.release(rid)
+
     # ---------------------------------------------------------- the loop
     def _emit(self, req: Request, token: int, events) -> None:
         req.emitted.append(int(token))
@@ -405,9 +420,8 @@ class Engine:
 
         plan = self.sched.plan()
         events: Dict[int, List[int]] = {}
-        if self.draft is not None:
-            for r in plan.expired:
-                self.draft.release(r.rid)
+        for r in plan.expired:
+            self._release_draft(r.rid)
 
         for req, start, n in plan.chunks:
             if req.state != PREFILL:       # preempted after planning
@@ -443,8 +457,7 @@ class Engine:
                     self.counters["retried"] += 1
                     if r.retries > self.max_retries:
                         self.sched.fail(r, "retries_exhausted")
-                        if self.draft is not None:
-                            self.draft.release(r.rid)
+                        self._release_draft(r.rid)
             else:
                 self.counters["backoff_steps"] += 1
         elif live and self.spec is not None:
@@ -522,6 +535,10 @@ class Engine:
         props: Dict[int, List[int]] = {}
         for r in live:
             k = self.sched.spec_budget(r)
+            if self._adepth is not None:
+                k = min(k, self._adepth.depth_for(r.rid))
+            self.spec_depth_hist[max(k, 0)] = \
+                self.spec_depth_hist.get(max(k, 0), 0) + 1
             pr = [int(t) for t in self.draft.propose(r, k)][:max(k, 0)]
             props[r.rid] = pr
             toks[r.slot, 0] = r.pending
@@ -545,7 +562,7 @@ class Engine:
                 # NaN/Inf anywhere in the rows this walk could consume:
                 # quarantine the whole row set, as vanilla decode would
                 self._quarantine(r, "nan_logits")
-                self.draft.release(r.rid)
+                self._release_draft(r.rid)
                 continue
             r.retries = 0
             n_acc = 0
@@ -569,8 +586,10 @@ class Engine:
             self.counters["spec_rejected"] += len(pr) - n_acc
             if len(pr) > n_acc:
                 self.counters["spec_rollbacks"] += 1
+            if self._adepth is not None:
+                self._adepth.observe(r.rid, n_acc, len(pr))
             if r.done:
-                self.draft.release(r.rid)
+                self._release_draft(r.rid)
             else:
                 self.draft.observe(r, n_acc, len(pr))
         return n_tokens
@@ -644,6 +663,7 @@ class Engine:
             **self.counters,
             "spec_acceptance": (self.counters["spec_accepted"]
                                 / max(self.counters["spec_proposed"], 1)),
+            "spec_depth_hist": dict(sorted(self.spec_depth_hist.items())),
         }
         if self.injector is not None:
             out["faults"] = dict(self.injector.counts)

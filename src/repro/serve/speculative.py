@@ -45,6 +45,7 @@ Draft sources:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 import jax
@@ -65,11 +66,25 @@ class SpecConfig:
     degenerate-equivalence test).  ``mode``: ``"ngram"`` (self-
     speculation), ``"model"`` (paired draft model — pass the engine a
     :class:`ModelDraft`), or ``"none"`` (NullDraft).  ``ngram``: longest
-    n-gram length the prompt-lookup matcher tries."""
+    n-gram length the prompt-lookup matcher tries.
+
+    ``adaptive`` turns on the acceptance-aware depth controller
+    (:class:`AdaptiveDepth`): each request's draft budget shrinks from
+    ``depth`` toward ``min_depth`` as its own recent acceptance rate
+    (sliding window of ``adapt_window`` verify steps) drops — drafting
+    deep into a context the draft keeps getting wrong just burns verify
+    FLOPs.  ``adapt_floor`` is the minimum expected acceptance
+    probability a draft position must have to be worth proposing.  The
+    verify jit shape stays ``1 + depth`` (the cap) — adaptivity only
+    shortens proposal lists, never changes compiled shapes."""
     depth: int = 4
     mode: str = "ngram"
     ngram: int = 3
     draft_arch: Optional[str] = None   # bookkeeping: which zoo config
+    adaptive: bool = False
+    adapt_window: int = 8
+    adapt_floor: float = 0.25
+    min_depth: int = 1
 
     def __post_init__(self):
         if self.depth < 0:
@@ -78,6 +93,63 @@ class SpecConfig:
             raise ValueError(f"mode must be one of {_MODES}")
         if self.ngram < 1:
             raise ValueError("ngram must be >= 1")
+        if self.adapt_window < 1:
+            raise ValueError("adapt_window must be >= 1")
+        if not 0.0 < self.adapt_floor < 1.0:
+            raise ValueError("adapt_floor must be in (0, 1)")
+        if not 0 <= self.min_depth <= max(self.depth, 1):
+            raise ValueError("min_depth must be in [0, depth]")
+
+
+class AdaptiveDepth:
+    """Acceptance-aware per-request draft budget.
+
+    Keeps, per request id, a sliding window of its last
+    ``adapt_window`` verify outcomes ``(n_accepted, n_proposed)`` and
+    turns the windowed acceptance rate ``a`` into a depth: under the
+    standard independence approximation the i-th draft position commits
+    with probability ``a^i``, so positions past
+    ``d* = floor(log(adapt_floor) / log(a))`` are more likely wasted
+    than useful.  The result is clamped to ``[min_depth, depth]`` and a
+    request with no history yet gets the full cap (optimistic start —
+    the ceiling-acceptance regimes behave exactly as non-adaptive).
+
+    Determinism: the depth is a pure function of the request's OWN
+    acceptance history — never batch composition — so adaptivity
+    preserves the engine's batch/preemption-invariant token streams
+    (which tokens commit is decided by the verify walk regardless)."""
+
+    def __init__(self, spec: "SpecConfig"):
+        from collections import deque
+        self.cap = spec.depth
+        self.min_depth = min(spec.min_depth, spec.depth)
+        self.window = spec.adapt_window
+        self.floor = spec.adapt_floor
+        self._deque = deque
+        self._hist: Dict[int, object] = {}
+
+    def depth_for(self, rid: int) -> int:
+        h = self._hist.get(rid)
+        if not h:
+            return self.cap
+        prop = sum(p for _, p in h)
+        acc = sum(a for a, _ in h)
+        if prop <= 0 or acc >= prop:
+            return self.cap
+        if acc <= 0:
+            return self.min_depth
+        rate = acc / prop
+        d = int(math.log(self.floor) / math.log(rate))
+        return max(self.min_depth, min(self.cap, d))
+
+    def observe(self, rid: int, n_acc: int, proposed: int) -> None:
+        if proposed <= 0:
+            return                      # nothing proposed — no signal
+        self._hist.setdefault(
+            rid, self._deque(maxlen=self.window)).append((n_acc, proposed))
+
+    def release(self, rid: int) -> None:
+        self._hist.pop(rid, None)
 
 
 class DraftSource:

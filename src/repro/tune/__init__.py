@@ -1,0 +1,38 @@
+"""Measurement-backed autotuner (ROADMAP: "Measurement-backed autotuning").
+
+The repo exposes three families of performance knobs that were, until this
+subsystem, driven purely by an uncalibrated analytic roofline:
+
+  * kernel tile shapes — ``block_q``/``block_kv`` hints accepted by every
+    ``tunable_blocks`` backend (PR 2);
+  * the distributed-attention schedule — ``DistAttnSpec(schedule="auto")``
+    ranked candidates by the static :func:`repro.core.schedule.plan_cost`
+    comm/compute model (PR 4);
+  * the paged-KV-cache ``block_size`` (PR 5).
+
+``repro.tune`` closes the loop with *measurements*:
+
+  * :mod:`repro.tune.sweep` — offline sweep harness (kernel tiles,
+    schedule wall times on a host mesh, paged-decode block sizes) driven
+    by ``tools/autotune.py``;
+  * :mod:`repro.tune.table` — the versioned, host-keyed JSON tuning
+    table the sweeps persist winners into, with schema validation,
+    nearest-bucket lookup, and env overrides.  Consumers
+    (``kernels/registry.block_tuning_kw``, ``choose_schedule``,
+    ``PagedKVCache.create``) consult :func:`active_table` when the caller
+    passes no explicit value;
+  * :mod:`repro.tune.calibrate` — least-squares calibration of the
+    schedule cost model's hop-latency / bandwidth / flop coefficients
+    against the measured rows (fit residuals and rank correlation are
+    recorded in the table).
+
+A default CPU-measured table ships under ``repro/tune/tables/`` and is
+auto-loaded on CPU hosts; ``REPRO_TUNE=off`` disables all lookups and
+``REPRO_TUNE_TABLE=<path>`` points at a different table (see README
+§Autotuning).
+"""
+from repro.tune.table import (SCHEMA_VERSION, TableError, TuningTable,
+                              active_table, set_table)
+
+__all__ = ["SCHEMA_VERSION", "TableError", "TuningTable", "active_table",
+           "set_table"]

@@ -1,0 +1,234 @@
+"""Least-squares calibration of the schedule cost model.
+
+``plan_cost()`` predicts per-schedule cost as two analytic terms (kernel
+FLOPs, hop-weighted collective bytes) divided by datasheet peak numbers —
+a *roofline*, good for on-paper comparisons but uncalibrated against any
+real host.  On the CPU test mesh it visibly misranks: ulysses has fewer
+comm bytes and comparable FLOPs to balanced at seq 2k × 8 devices, yet
+measures ~3.7x slower because one giant ``Tg×Tg`` attention call blows
+the cache hierarchy while the ring family streams ``c×c`` chunks.
+
+Calibration fits a 4-feature linear model per measured schedule row
+
+    wall_s ≈ base_s + s_per_flop·flops + s_per_byte·comm_bytes
+             + s_per_hop·hops + s_per_elem·score_elems
+
+with nonnegative coefficients (plain ``numpy.linalg.lstsq`` followed by
+clamp-negative-and-refit — scipy's ``nnls`` is not a dependency).  The
+``score_elems`` feature is the per-kernel-call score-matrix working set
+(``B·Hq·c²`` for ring-family plans, ``B·(Hq/P)·Tg²`` for ulysses,
+``B·Hq·Tl·Tg`` for the rsa baseline): it is what separates "few big
+calls" from "many small calls" regimes that flops/bytes alone cannot.
+
+The fit (coefficients + residual/rank-correlation diagnostics, including
+the *uncalibrated* roofline's Spearman for the A/B) is persisted into the
+table's ``calibration`` section; ``choose_schedule`` uses the
+coefficients to rank candidates whenever the active table carries them
+but has no directly-measured row for the requested regime.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FEATURES = ("flops", "comm_bytes", "hops", "score_elems")
+COEFF_OF = {"flops": "s_per_flop", "comm_bytes": "s_per_byte",
+            "hops": "s_per_hop", "score_elems": "s_per_elem"}
+
+
+def mask_for_kind(kind: str, *, T: int, window: Optional[int] = None):
+    """Representative MaskSpec for a sweep-row mask kind (feature
+    reconstruction only — document boundaries don't change plan_cost)."""
+    from repro.core import mask as mk
+    if kind == "causal":
+        return mk.causal()
+    if kind == "full":
+        return mk.full()
+    if kind == "sliding_window":
+        return mk.sliding_window(window or max(T // 8, 1))
+    if kind == "document":
+        return mk.document()
+    if kind == "prefix_lm":
+        return mk.prefix_lm(max(T // 4, 1))
+    raise ValueError(f"unknown mask kind {kind!r}")
+
+
+def schedule_features(schedule: str, *, mask_kind: str, P: int, seq: int,
+                      B: int = 1, Hq: int = 8, Hkv: Optional[int] = None,
+                      Dqk: int = 64, Dv: Optional[int] = None,
+                      bpe: int = 4, window: Optional[int] = None,
+                      dynamic_seg: bool = False,
+                      include_bwd: bool = False) -> Optional[Dict[str, float]]:
+    """Feature vector for one (schedule, regime) point; ``seq`` is the
+    *global* sequence length (matches the sweep/bench rows).  None when
+    the schedule cannot serve the mask (no plan, heads don't divide)."""
+    from repro.core import schedule as sp
+    Hkv = Hq if Hkv is None else Hkv
+    Dv = Dqk if Dv is None else Dv
+    Tl = max(seq // P, 1)
+    Tg = Tl * P
+    m = mask_for_kind(mask_kind, T=seq, window=window)
+    if schedule == "ulysses":
+        if Hq % P or Hkv % P:
+            return None
+        cost = sp.ulysses_cost(m, P, Tl=Tl, B=B, Hq=Hq, Hkv=Hkv,
+                               Dqk=Dqk, Dv=Dv, bpe=bpe)
+        elems = B * (Hq / P) * float(Tg) * Tg
+    elif schedule == "rsa":
+        # all-gather KV baseline: local Tl×Tg attention over all heads
+        # (pairs averaged over ranks — device p sees q offset p·Tl)
+        if m.window:
+            return None
+        pairs = sp._band_pairs(m, Tg, Tg) / P if m.causal \
+            else float(Tl) * Tg
+        fl = 2.0 * B * Hq * pairs * (Dqk + Dv)
+        cb = (P - 1) * B * Tl * Hkv * (Dqk + Dv) * bpe
+        if include_bwd:
+            fl += 2.0 * B * Hq * pairs * (3 * Dqk + 2 * Dv)
+            cb *= 3.0
+        return dict(flops=fl, comm_bytes=float(cb), hops=1.0,
+                    score_elems=B * Hq * float(Tl) * Tg)
+    else:
+        if not sp.plan_capable(schedule, m):
+            return None
+        plan = sp.build_plan(schedule, m, P, Tl)
+        cost = sp.plan_cost(plan, B=B, Hq=Hq, Hkv=Hkv, Dqk=Dqk, Dv=Dv,
+                            bpe=bpe, dynamic_seg=dynamic_seg)
+        c = plan.chunk_len
+        elems = B * Hq * float(c) * c
+    fl = cost.flops_fwd + (cost.flops_bwd if include_bwd else 0.0)
+    cb = cost.comm_bytes_fwd + (cost.comm_bytes_bwd if include_bwd else 0.0)
+    return dict(flops=fl, comm_bytes=cb, hops=float(cost.exec_steps),
+                score_elems=elems)
+
+
+def predict_s(feats: Dict[str, float], coeffs: Dict[str, float]) -> float:
+    """Calibrated wall-time prediction in seconds."""
+    s = coeffs.get("base_s", 0.0)
+    for f in FEATURES:
+        s += coeffs.get(COEFF_OF[f], 0.0) * feats[f]
+    return s
+
+
+def fit_nonneg(X: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Nonnegative least squares by iterated clamp-and-refit: solve the
+    unconstrained problem, zero any negative coefficient, refit over the
+    survivors until all remaining coefficients are >= 0.  Not exactly
+    Lawson-Hanson, but convergent and dependency-free."""
+    n = X.shape[1]
+    active = list(range(n))
+    w = np.zeros(n)
+    for _ in range(n + 1):
+        if not active:
+            break
+        sol, *_ = np.linalg.lstsq(X[:, active], y, rcond=None)
+        neg = [a for a, s in zip(active, sol) if s < 0]
+        if not neg:
+            for a, s in zip(active, sol):
+                w[a] = s
+            break
+        active = [a for a in active if a not in neg]
+    return w
+
+
+def spearman(a: Sequence[float], b: Sequence[float]) -> float:
+    """Spearman rank correlation with average ranks on ties (no scipy)."""
+    def ranks(v):
+        v = np.asarray(v, dtype=float)
+        order = np.argsort(v, kind="mergesort")
+        r = np.empty(len(v))
+        i = 0
+        while i < len(v):
+            j = i
+            while j + 1 < len(v) and v[order[j + 1]] == v[order[i]]:
+                j += 1
+            r[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+            i = j + 1
+        return r
+    ra, rb = ranks(a), ranks(b)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = math.sqrt(float((ra ** 2).sum() * (rb ** 2).sum()))
+    return float((ra * rb).sum() / denom) if denom else 0.0
+
+
+def _row_points(rows: List[dict]
+                ) -> List[Tuple[dict, str, Dict[str, float], float]]:
+    """(row, schedule, features, wall_s) for every measured (regime,
+    schedule) pair whose features are computable.  Rows whose schedule
+    has no feature model (e.g. a plan-incapable mask) are skipped — they
+    can't inform the fit."""
+    pts = []
+    for row in rows:
+        for sched, us in sorted(row["wall_us"].items()):
+            if not isinstance(us, (int, float)):
+                continue
+            feats = schedule_features(
+                sched, mask_kind=row["mask_kind"], P=int(row["P"]),
+                seq=int(row["seq"]), B=int(row.get("B", 1)),
+                Hq=int(row.get("Hq", 8)), Hkv=row.get("Hkv"),
+                Dqk=int(row.get("Dqk", 64)), bpe=int(row.get("bpe", 4)),
+                window=row.get("window"),
+                dynamic_seg=bool(row.get("dynamic_seg", False)))
+            if feats is not None:
+                pts.append((row, sched, feats, float(us) * 1e-6))
+    return pts
+
+
+def roofline_s(feats: Dict[str, float]) -> float:
+    """What the uncalibrated model would predict (for the A/B fit stats)."""
+    from repro.analysis.roofline import schedule_cost_terms
+    return schedule_cost_terms(flops=feats["flops"],
+                               comm_bytes=feats["comm_bytes"]
+                               )["step_s_lower_bound"]
+
+
+def calibrate(rows: List[dict]) -> dict:
+    """Fit coefficients to the measured schedule rows and compute the
+    diagnostics: relative RMS residual, pooled Spearman of calibrated
+    predictions vs measured walls, same for the uncalibrated roofline,
+    and per-regime best-schedule agreement for both models.  Returns the
+    table's ``calibration`` section."""
+    pts = _row_points(rows)
+    if len(pts) < len(FEATURES) + 1:
+        raise ValueError(f"need at least {len(FEATURES) + 1} measured "
+                         f"points to calibrate, got {len(pts)}")
+    X = np.array([[f[k] for k in FEATURES] + [1.0] for _, _, f, _ in pts])
+    y = np.array([w for _, _, _, w in pts])
+    scale = X.max(axis=0)
+    scale[scale == 0] = 1.0
+    w = fit_nonneg(X / scale, y) / scale
+    coeffs = {COEFF_OF[k]: float(w[i]) for i, k in enumerate(FEATURES)}
+    coeffs["base_s"] = float(w[len(FEATURES)])
+
+    pred = np.array([predict_s(f, coeffs) for _, _, f, _ in pts])
+    roof = np.array([roofline_s(f) for _, _, f, _ in pts])
+    rel_rms = float(np.sqrt(np.mean(((pred - y) / y) ** 2)))
+    sp_cal = spearman(pred, y)
+    sp_roof = spearman(roof, y)
+
+    # per-regime: does argmin(prediction) hit the measured-best schedule?
+    regimes = {}
+    for (row, sched, f, wall), p, r in zip(pts, pred, roof):
+        key = (row["mask_kind"], int(row["P"]), int(row["seq"]))
+        regimes.setdefault(key, {})[sched] = (wall, float(p), float(r))
+    agree = []
+    for (mk_, P, seq), by_sched in sorted(regimes.items()):
+        agree.append(dict(
+            mask_kind=mk_, P=P, seq=seq,
+            measured_best=min(by_sched, key=lambda s: by_sched[s][0]),
+            calibrated_pick=min(by_sched, key=lambda s: by_sched[s][1]),
+            roofline_pick=min(by_sched, key=lambda s: by_sched[s][2])))
+    n_cal = sum(a["calibrated_pick"] == a["measured_best"] for a in agree)
+    n_roof = sum(a["roofline_pick"] == a["measured_best"] for a in agree)
+
+    return dict(
+        coeffs=coeffs,
+        fit=dict(n_points=len(pts), rel_rms=round(rel_rms, 4),
+                 spearman=round(sp_cal, 4),
+                 spearman_roofline=round(sp_roof, 4),
+                 best_match=f"{n_cal}/{len(agree)}",
+                 best_match_roofline=f"{n_roof}/{len(agree)}",
+                 regimes=agree))

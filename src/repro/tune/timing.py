@@ -1,0 +1,59 @@
+"""Shared wall-clock timing helpers for sweeps and benches.
+
+Host-CPU timing is noisy (background load, turbo drift), so everything
+here reports **medians** and the A/B comparator interleaves its two
+variants iteration-by-iteration so slow drift hits both equally.  Moved
+here from ``benchmarks/kernel_bench.py`` so the offline sweeps
+(:mod:`repro.tune.sweep`) and the tracked benches share one clock.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Sequence, Tuple
+
+
+def timeit_us(fn: Callable[[], object], iters: int = 5) -> float:
+    """Median wall µs of ``fn`` over ``iters`` runs after one warmup
+    call (which also absorbs jit compilation — callers must block on
+    the result inside ``fn``, e.g. ``block_until_ready``)."""
+    fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+def timeit_pair(fn_a: Callable[[], object], fn_b: Callable[[], object],
+                iters: int) -> Tuple[float, float]:
+    """Median µs of two variants, iterations interleaved A/B so slow drift
+    in background load hits both equally (host CPU timing is noisy)."""
+    fn_a()                                 # warmup / compile
+    fn_b()
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return statistics.median(ta) * 1e6, statistics.median(tb) * 1e6
+
+
+def timeit_round_robin(fns: Sequence[Callable[[], object]],
+                       iters: int) -> list:
+    """N-way generalisation of :func:`timeit_pair`: one pass warms every
+    candidate, then each timing iteration visits all of them in order.
+    Used by the tile/block-size sweeps where 4-10 variants compete."""
+    for fn in fns:
+        fn()
+    samples = [[] for _ in fns]
+    for _ in range(iters):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            samples[i].append(time.perf_counter() - t0)
+    return [statistics.median(s) * 1e6 for s in samples]
