@@ -273,6 +273,106 @@ for sched in ("auto","ring","balanced","zigzag","ulysses","rsa"):
                 "wall us, CPU host mesh")
 
 
+def bench_schedules_plans2d():
+    """Tracked 2D (seq×head) factored-plan rows (BENCH_schedules.json):
+    for the GQA regime the 1D schedules serve poorly (Hq=8, Hkv=2 — the
+    bespoke ulysses is infeasible), the factorized chooser's pick per
+    mask regime, the analytic cost of every (r, u) factorization, and the
+    measured acceptance walls: the chosen r>1∧u>1 factorization vs the
+    pure-ring (r=8) and head-parallel (r=1, u=8) extremes on 8 host
+    devices."""
+    from repro.core import mask as mkm
+    from repro.core import schedule as spm
+
+    B, N, P, Hq, Hkv, D = 1, 2048, 8, 8, 2, 64
+    Tl = N // P
+    bnd = mkm.doc_boundaries(N, 8)
+    regimes = [
+        ("causal", mkm.causal(), False),
+        ("windowed", mkm.sliding_window(N // 8), False),
+        ("document", mkm.document(boundaries=bnd), False),
+    ]
+    picks = {}
+    for rname, m, dyn in regimes:
+        name, r, u = spm.choose_schedule(m, P, Tl=Tl, B=B, Hq=Hq,
+                                         Hkv=Hkv, Dqk=D, Dv=D, bpe=4,
+                                         dynamic_seg=dyn, factorize=True)
+        picks[rname] = (m, name, r, u)
+        row(f"plans2d/auto_{rname}_gqa8x2", 0, f"resolved={name}@r{r}u{u}")
+        for rr, uu in spm.factorizations(P):
+            for sched in ("ring", "balanced"):
+                if uu == 1:
+                    if not spm.plan_capable(sched, m):
+                        continue
+                    cost = spm.plan_cost(
+                        spm.build_plan(sched, m, P, Tl), B=B, Hq=Hq,
+                        Hkv=Hkv, Dqk=D, Dv=D, bpe=4, dynamic_seg=dyn)
+                else:
+                    if not spm.plan2d_capable(sched, m, r=rr, u=uu,
+                                              Hq=Hq, Hkv=Hkv):
+                        continue
+                    cost = spm.plan2d_cost(
+                        spm.build_plan2d(sched, m, rr, uu, Tl, Hq=Hq,
+                                         Hkv=Hkv), B=B, Dqk=D, Dv=D,
+                        bpe=4, dynamic_seg=dyn)
+                t = cost.time_estimate()
+                row(f"plans2d/cost_{sched}_r{rr}u{uu}_{rname}", 0,
+                    f"pred_total_s={t['step_s_lower_bound']:.3e} "
+                    f"pred_bound={t['bound']}")
+
+    # measured acceptance walls: regimes whose pick is a genuine 2D
+    # factorization (r > 1 and u > 1) race against both 1D extremes.
+    # fwd + grads — the horizon the chooser ranked on (include_bwd=True)
+    for rname, (m, name, r, u) in picks.items():
+        if r == 1 or u == 1:
+            continue
+        code = f"""
+import time, statistics, jax, jax.numpy as jnp
+from repro.core import mask as mk
+from repro.core.dist_attention import DistAttnSpec, Mesh2DSpec, dist_flash_attn
+B,N,Hq,Hkv,D = {B},{N},{Hq},{Hkv},{D}
+ks = jax.random.split(jax.random.PRNGKey(0),3)
+q = jax.random.normal(ks[0],(B,N,Hq,D),jnp.float32)
+k = jax.random.normal(ks[1],(B,N,Hkv,D),jnp.float32)
+v = jax.random.normal(ks[2],(B,N,Hkv,D),jnp.float32)
+m = mk.{m!r}
+def timeit(f,*a):
+    jax.block_until_ready(f(*a)); ts=[]
+    for _ in range(5):
+        t0=time.perf_counter(); jax.block_until_ready(f(*a))
+        ts.append(time.perf_counter()-t0)
+    return statistics.median(ts)*1e6
+for label, sched, r, u in (("chosen",{name!r},{r},{u}),
+                           ("pure_ring","ring",8,1),
+                           ("head_parallel","ring",1,8)):
+    if u == 1:
+        mesh = jax.make_mesh((1,8), ("data","model"))
+        spec = DistAttnSpec(axis="model", axis_size=8, schedule=sched, mask=m)
+    else:
+        mesh = jax.make_mesh((1,r,u), ("data","seq","head"))
+        spec = DistAttnSpec(axis="seq", axis_size=8, schedule=sched,
+                            mask=m, mesh2d=Mesh2DSpec(r=r,u=u))
+    def loss(a,b,c,mesh=mesh,spec=spec):
+        o,_ = dist_flash_attn(a,b,c,mesh,spec,batch_axes=None)
+        return jnp.sum(o*o)
+    f = jax.jit(jax.value_and_grad(loss, argnums=(0,1,2)))
+    print(f"RESULT {{label}} {{timeit(f,q,k,v):.0f}}")
+"""
+        walls = {}
+        for line in _subproc(code).splitlines():
+            if line.startswith("RESULT"):
+                _, label, us = line.split()
+                walls[label] = float(us)
+                row(f"plans2d/attn_step_{label}_{rname}_gqa8x2_seq2k_8dev",
+                    f"{float(us):.0f}", "fwd+bwd wall us, CPU host mesh")
+        if len(walls) == 3:
+            row(f"plans2d/accept_{rname}", 0,
+                f"chosen={name}@r{r}u{u} "
+                f"beats_ring={'yes' if walls['chosen'] < walls['pure_ring'] else 'NO'} "
+                f"beats_head_parallel="
+                f"{'yes' if walls['chosen'] < walls['head_parallel'] else 'NO'}")
+
+
 # --------------------------------------------------------------- autotune
 
 def bench_autotune_ab():
@@ -418,6 +518,7 @@ BENCHES = {
     "table2": bench_table2_max_seqlen,
     "appD": bench_appendixD_comm_volume,
     "plans": bench_schedules_plans,
+    "plans2d": bench_schedules_plans2d,
     "schedules": bench_schedules_wall,
     "autotune": bench_autotune_ab,
     "roofline": bench_roofline_table,
@@ -426,7 +527,8 @@ BENCHES = {
 # the subset tracked in BENCH_schedules.json (CI smoke + in-repo history):
 # deterministic derived rows + static plan/step-count/cost rows + the
 # schedule-level wall rows + the tuning-table A/B resolution rows
-TRACKED = ("fig4", "appD", "table2", "plans", "schedules", "autotune")
+TRACKED = ("fig4", "appD", "table2", "plans", "plans2d", "schedules",
+           "autotune")
 
 
 def main() -> None:

@@ -123,6 +123,21 @@ def model_flops(cfg, shape, *, chips: int) -> float:
     return total / chips
 
 
+def a2a_bytes(nbytes: float, k: int) -> float:
+    """Per-device link bytes of a tiled all-to-all over a k-device axis:
+    each device keeps 1/k of its payload local and ships the rest —
+    factor (k − 1)/k.  Used by core/schedule.plan2d_cost for the head-
+    scatter traffic of 2D (seq×head) factorizations."""
+    return nbytes * (k - 1) / max(k, 1)
+
+
+def allgather_bytes(nbytes: float, k: int) -> float:
+    """Per-device link bytes of a tiled all-gather over a k-device axis
+    (ring algorithm): every device receives the other k − 1 shards —
+    factor (k − 1).  ``nbytes`` is one device's shard."""
+    return nbytes * (k - 1)
+
+
 def schedule_cost_terms(*, flops, comm_bytes):
     """Two-term time model for a static schedule-plan cost
     (core/schedule.PlanCost): kernel FLOPs against peak compute, hop-

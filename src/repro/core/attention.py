@@ -40,20 +40,16 @@ def set_default_impl(impl: str) -> None:
 
 
 def _resolve_mask(mask, causal, rel_offset, window) -> MaskSpec:
-    """``mask=`` wins; the legacy kwarg triple is a deprecated shim."""
-    if mask is not None:
-        if causal is not None or rel_offset is not None or window is not None:
-            raise ValueError(
-                "pass either mask= or the legacy causal/rel_offset/window "
-                "kwargs, not both")
-        return mask
-    if causal is not None or window is not None or rel_offset is not None:
-        mk.warn_legacy_once(
-            "chunk_attn(causal=, rel_offset=, window=)",
+    """Only ``mask=`` remains: the legacy kwarg triple was removed after
+    five PRs as warning shims with zero in-repo callers — passing any of
+    them raises with the migration hint.  ``mask=None`` keeps its
+    long-standing meaning (full attention, :func:`mk.full`)."""
+    if causal is not None or rel_offset is not None or window is not None:
+        raise TypeError(
+            "chunk_attn(causal=, rel_offset=, window=) was removed; pass "
             "mask=repro.core.mask.{full,causal,sliding_window,prefix_lm,"
             "document}(...)")
-    return mk.from_legacy(causal=bool(causal), window=int(window or 0),
-                          rel_offset=int(rel_offset or 0))
+    return mk.full() if mask is None else mask
 
 
 def _tuning_kw(be, block_q, block_kv, *, mask=None, q=None, op="fwd"):

@@ -225,10 +225,20 @@ class ParallelConfig:
     # for each attention site's MaskSpec, P, and shapes.
     schedule: str = "balanced"
     remat: str = "remat_aware"                    # remat_aware | hf | none
+    # factored 2D (seq × head) attention: when a mesh exposes a head
+    # sub-axis (launch/mesh.make_seq2d_mesh), activations shard the
+    # sequence over the (seq_axis, head_axis) *pair* — head minor — and
+    # attention runs the 2D ring×ulysses plans (core/schedule.Plan2D)
+    head_axis: Optional[str] = None
 
     @property
     def seq_axes(self) -> Tuple[str, ...]:
-        return tuple(self.extra_seq_axes) + (self.seq_axis,)
+        """All axes the sequence dim is sharded over, minor-most last —
+        the 2D head sub-axis is head-minor by layout."""
+        axes = tuple(self.extra_seq_axes) + (self.seq_axis,)
+        if self.head_axis is not None:
+            axes += (self.head_axis,)
+        return axes
 
 
 @dataclass(frozen=True)

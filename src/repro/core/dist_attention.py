@@ -97,6 +97,33 @@ from repro.kernels.ref import NEG_INF
 
 SCHEDULES = ("auto", "balanced", "ring", "rsa", "ulysses", "zigzag")
 
+_MASK_HINT = ("mask=repro.core.mask.{full,causal,sliding_window,prefix_lm,"
+              "document}(...)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Mesh2DSpec:
+    """Factored 2D (sequence × head) mesh axis pair for one distributed-
+    attention call: the ``axis_size = r·u`` sequence-parallel workers form
+    an (``seq_axis`` = r) × (``head_axis`` = u) grid.  The global sequence
+    is sharded over the *pair* (seq major, head minor); the executor
+    head-scatters q/k/v over ``head_axis`` (ulysses-style, GQA-aware) and
+    runs a ring-family SchedulePlan over ``seq_axis`` — BurstAttention's
+    inter-node ring / intra-node head split as a plan wrapper (see
+    core/schedule.Plan2D)."""
+    r: int
+    u: int
+    seq_axis: str = "seq"
+    head_axis: str = "head"
+
+    def __post_init__(self):
+        if self.r < 1 or self.u < 1:
+            raise ValueError(f"Mesh2DSpec needs r, u >= 1 "
+                             f"(got r={self.r}, u={self.u})")
+        if self.seq_axis == self.head_axis:
+            raise ValueError("Mesh2DSpec seq_axis and head_axis must be "
+                             "distinct mesh axes")
+
 
 @dataclasses.dataclass(frozen=True)
 class DistAttnSpec:
@@ -107,14 +134,27 @@ class DistAttnSpec:
     schedule).  ``auto`` defers the choice to trace time, where the
     shapes are known and the plans' cost model ranks the candidates.
     ``mask`` is the MaskSpec of the *whole* (unsharded) attention; the
-    plan builders derive per-step specs from it. The pre-MaskSpec
-    ``causal``/``window`` constructor kwargs remain as deprecated shims.
+    plan builders derive per-step specs from it.
+
+    ``mesh2d`` factors the ``axis_size`` workers into a (seq = r,
+    head = u) grid (:class:`Mesh2DSpec`): the ring-family schedules then
+    run on the ``seq`` sub-axis after a head scatter on the ``head``
+    sub-axis, and ``axis``/``seq_axes`` is ignored in favor of the pair.
+    At ``r == 1`` the inner plan is one local full-sequence kernel, so
+    *any* mask kind is servable — including prefix_lm backward, which no
+    1D multi-shard schedule can express.
+
+    The pre-MaskSpec ``causal=``/``window=`` constructor kwargs are
+    **removed** — passing them raises ``TypeError`` with the migration
+    hint (they survived five PRs as deprecation shims with zero in-repo
+    callers).
     """
     axis: str = "model"            # sequence-parallel mesh axis
-    axis_size: int = 1             # P
+    axis_size: int = 1             # P (= r·u with mesh2d)
     schedule: str = "balanced"     # see SCHEDULES
     mask: Optional[MaskSpec] = None
-    # deprecated shims, mapped onto ``mask`` (default: causal, full window)
+    # removed legacy kwargs — kept as init-only slots so passing them by
+    # name raises our TypeError with the migration hint
     causal: dataclasses.InitVar[Optional[bool]] = None
     window: dataclasses.InitVar[Optional[int]] = None
     scale: Optional[float] = None
@@ -125,29 +165,39 @@ class DistAttnSpec:
     # (Pallas block shapes / chunked-lax scan chunk). None = backend default.
     block_q: Optional[int] = None
     block_kv: Optional[int] = None
+    mesh2d: Optional[Mesh2DSpec] = None
 
     def __post_init__(self, causal, window):
+        if causal is not None or window is not None:
+            raise TypeError(
+                "DistAttnSpec(causal=, window=) was removed; pass "
+                + _MASK_HINT)
         if self.schedule not in SCHEDULES:
             raise ValueError(
                 f"unknown schedule {self.schedule!r}; valid: {SCHEDULES}")
         if self.mask is None:
-            if causal is not None or window is not None:
-                mk.warn_legacy_once(
-                    "DistAttnSpec(causal=, window=)",
-                    "mask=repro.core.mask.{causal,sliding_window,full,"
-                    "document}(...)")
-            # the spec-level legacy default is causal (unlike chunk_attn's)
-            m = mk.from_legacy(causal=True if causal is None else causal,
-                               window=window or 0)
-            object.__setattr__(self, "mask", m)
-        elif causal is not None or window is not None:
-            raise ValueError("pass either mask= or the legacy causal/window "
-                             "kwargs, not both")
+            # the spec-level default mask is causal (unlike chunk_attn's)
+            object.__setattr__(self, "mask", mk.causal())
         m = self.mask
         if m.q_offset or m.kv_offset:
             raise ValueError("DistAttnSpec.mask must be offset-free — the "
                              "schedules derive per-step offsets")
-        if self.axis_size > 1:
+        ring_P = self.axis_size
+        if self.mesh2d is not None:
+            md = self.mesh2d
+            if md.r * md.u != self.axis_size:
+                raise ValueError(
+                    f"mesh2d r·u = {md.r * md.u} must equal "
+                    f"axis_size = {self.axis_size}")
+            if self.schedule not in ("auto",) + sp.PLAN_SCHEDULES:
+                raise ValueError(
+                    f"2D (seq×head) attention runs ring-family plans only "
+                    f"(got {self.schedule!r}); the ulysses/rsa baselines "
+                    f"have their own 1D topology")
+            # capability follows the *seq* sub-axis: at r == 1 the inner
+            # plan is one local full-sequence kernel — any mask kind goes
+            ring_P = md.r
+        if ring_P > 1:
             if self.schedule in ("balanced", "zigzag") and \
                     not (m.causal and not m.prefix_len):
                 raise ValueError(
@@ -159,14 +209,24 @@ class DistAttnSpec:
                 raise ValueError(
                     "prefix_lm needs absolute kv positions, which the "
                     "ring schedule's per-shard chunks don't have; use "
-                    "ulysses/rsa or a single-shard axis")
+                    "ulysses/rsa, a 2D mesh with r == 1, or a "
+                    "single-shard axis")
             if m.window and self.schedule == "rsa":
                 raise ValueError("rsa baseline has no sliding-window path")
             if m.window and not m.causal and self.schedule == "ring":
                 raise ValueError(
                     "a non-causal sliding window needs future-direction "
                     "band steps the ring's strictly-past step masks can't "
-                    "express; use ulysses or a single-shard axis")
+                    "express; use ulysses, a 2D mesh with r == 1, or a "
+                    "single-shard axis")
+
+    @property
+    def seq_entry(self):
+        """The PartitionSpec sequence entry: the 2D axis pair (seq major,
+        head minor) when factored, else the single ``axis``."""
+        if self.mesh2d is not None:
+            return (self.mesh2d.seq_axis, self.mesh2d.head_axis)
+        return self.axis
 
 
 def _tune(spec: DistAttnSpec) -> dict:
@@ -182,16 +242,26 @@ def _seg_kw(mask: MaskSpec, q_seg, kv_seg) -> dict:
     return dict(q_segments=q_seg, kv_segments=kv_seg)
 
 
-def resolve_schedule(spec: DistAttnSpec, q, k, v, seg=None) -> str:
-    """Concrete schedule for this call: ``auto`` ranks the capable
-    candidates by the static plan cost model (identical inputs in fwd and
-    bwd ⇒ identical choice)."""
+def resolve_schedule(spec: DistAttnSpec, q, k, v, seg=None, *,
+                     for_bwd: bool = False) -> str:
+    """Concrete schedule for this call.  ``auto`` ranks the capable
+    candidates by the static plan cost model; ``for_bwd`` tells the
+    capability filter whether the choice must also serve the distributed
+    backward (the forward-only baselines are then excluded — the filter
+    mirrors the runtime raise conditions exactly, so a resolved name
+    never raises at execution time).  On a 2D mesh the factorization is
+    fixed by the spec and only the inner seq-axis schedule is chosen."""
     if spec.schedule != "auto":
         return spec.schedule
-    return sp.choose_schedule(
-        spec.mask, spec.axis_size, Tl=q.shape[1], B=q.shape[0],
-        Hq=q.shape[2], Hkv=k.shape[2], Dqk=q.shape[3], Dv=v.shape[3],
-        bpe=q.dtype.itemsize, dynamic_seg=seg is not None)
+    kw = dict(B=q.shape[0], Hq=q.shape[2], Hkv=k.shape[2], Dqk=q.shape[3],
+              Dv=v.shape[3], bpe=q.dtype.itemsize,
+              dynamic_seg=seg is not None, include_bwd=for_bwd)
+    if spec.mesh2d is not None:
+        return sp.choose_inner_schedule(spec.mask, spec.mesh2d.r,
+                                        spec.mesh2d.u, Tl_dev=q.shape[1],
+                                        **kw)
+    return sp.choose_schedule(spec.mask, spec.axis_size, Tl=q.shape[1],
+                              **kw)
 
 
 # --------------------------------------------------------------------------
@@ -268,12 +338,30 @@ def _fwd_rsa(spec, q, k, v, seg=None):
 # Public API: explicit fwd/bwd + custom-VJP wrapper, shard_mapped
 # --------------------------------------------------------------------------
 
+def _plan2d(spec, sched, q, k):
+    md = spec.mesh2d
+    # at r == 1 every ring-family schedule degenerates to the same local
+    # full-sequence kernel — canonicalize so build stays capability-exact
+    sched = "ring" if md.r == 1 else sched
+    return sp.build_plan2d(sched, spec.mask, md.r, md.u, q.shape[1],
+                           Hq=q.shape[2], Hkv=k.shape[2])
+
+
 def _fwd_local(spec, q, k, v, seg=None):
     if spec.axis_size == 1:
         m = spec.mask
         return chunk_attn(q, k, v, mask=m, **_seg_kw(m, seg, seg),
                           **_tune(spec))
     sched = resolve_schedule(spec, q, k, v, seg)
+    if spec.mesh2d is not None:
+        md = spec.mesh2d
+        if md.u == 1:       # degenerate factorization: plain 1D seq plan
+            plan = sp.build_plan(sched, spec.mask, md.r, q.shape[1])
+            return sp.execute_fwd(plan, q, k, v, seg, axis=md.seq_axis,
+                                  tune=_tune(spec))
+        return sp.execute2d_fwd(_plan2d(spec, sched, q, k), q, k, v, seg,
+                                seq_axis=md.seq_axis,
+                                head_axis=md.head_axis, tune=_tune(spec))
     if sched == "rsa":
         return _fwd_rsa(spec, q, k, v, seg)
     if sched == "ulysses":
@@ -288,7 +376,16 @@ def _bwd_local(spec, q, k, v, o, s, do, seg=None):
         m = spec.mask
         return chunk_attn_bwd(q, k, v, o, s, do, mask=m,
                               **_seg_kw(m, seg, seg), **_tune(spec))
-    sched = resolve_schedule(spec, q, k, v, seg)
+    sched = resolve_schedule(spec, q, k, v, seg, for_bwd=True)
+    if spec.mesh2d is not None:
+        md = spec.mesh2d
+        if md.u == 1:
+            plan = sp.build_plan(sched, spec.mask, md.r, q.shape[1])
+            return sp.execute_bwd(plan, q, k, v, o, s, do, seg,
+                                  axis=md.seq_axis, tune=_tune(spec))
+        return sp.execute2d_bwd(_plan2d(spec, sched, q, k), q, k, v, o, s,
+                                do, seg, seq_axis=md.seq_axis,
+                                head_axis=md.head_axis, tune=_tune(spec))
     if sched in ("rsa", "ulysses"):
         # the baselines reuse the exact ring backward — which cannot
         # express absolute coordinates (prefix masks) in its per-shard
@@ -309,11 +406,13 @@ def _bwd_local(spec, q, k, v, o, s, do, seg=None):
                           tune=_tune(spec))
 
 
-def _specs(batch_axes, seq_axis):
+def _specs(batch_axes, seq):
+    """``seq`` is the sequence-dim PartitionSpec entry: one axis name or
+    the 2D (seq, head) axis pair."""
     b = tuple(batch_axes) if batch_axes else None
-    qkv = P(b, seq_axis, None, None)
-    lse = P(b, seq_axis, None)
-    seg = P(b, seq_axis)
+    qkv = P(b, seq, None, None)
+    lse = P(b, seq, None)
+    seg = P(b, seq)
     return qkv, lse, seg
 
 
@@ -322,7 +421,7 @@ def dist_attn_fwd(q, k, v, *, mesh, spec: DistAttnSpec,
     """Distributed forward → (o, lse). Global-array in/out (GSPMD land).
     ``segments`` is a (B, T) int32 document-ID array sharded like the
     activations (document masks only)."""
-    qkv_s, lse_s, seg_s = _specs(batch_axes, spec.axis)
+    qkv_s, lse_s, seg_s = _specs(batch_axes, spec.seq_entry)
     in_specs, args = [qkv_s] * 3, [q, k, v]
     if segments is not None:
         in_specs.append(seg_s)
@@ -336,7 +435,7 @@ def dist_attn_fwd(q, k, v, *, mesh, spec: DistAttnSpec,
 def dist_attn_bwd(q, k, v, o, lse, do, *, mesh, spec: DistAttnSpec,
                   batch_axes=("data",), segments=None):
     """Distributed backward from saved (o, lse) → (dq, dk, dv)."""
-    qkv_s, lse_s, seg_s = _specs(batch_axes, spec.axis)
+    qkv_s, lse_s, seg_s = _specs(batch_axes, spec.seq_entry)
     in_specs = [qkv_s, qkv_s, qkv_s, qkv_s, lse_s, qkv_s]
     args = [q, k, v, o, lse, do]
     if segments is not None:
@@ -499,8 +598,8 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
     ``mask`` is a :class:`~repro.core.mask.MaskSpec` of kind ``causal``
     (attend the whole cache — the default) or ``sliding_window``; the new
     token always sits at the end of the context, so those are the only
-    kinds decode can express.  The pre-MaskSpec ``window=`` kwarg remains
-    as a deprecated shim (one DeprecationWarning per process).
+    kinds decode can express.  The pre-MaskSpec ``window=`` kwarg is
+    removed — passing it raises ``TypeError`` with the migration hint.
 
     ``pos`` (B,) int32 — per-request valid-context lengths (continuous
     batching admits requests at different times, so each batch row has its
@@ -510,15 +609,12 @@ def dist_decode_attn(q, k_cache, v_cache, k_new, v_new, *, mesh,
     with a one-shot DeprecationWarning (it silently mis-masks mixed-length
     batches).
     """
+    if window is not None:
+        raise TypeError(
+            "dist_decode_attn(window=) was removed; pass "
+            "mask=repro.core.mask.{causal,sliding_window}(...)")
     if mask is None:
-        if window is not None:
-            mk.warn_legacy_once(
-                "dist_decode_attn(window=)",
-                "mask=repro.core.mask.{causal,sliding_window}(...)")
-        mask = mk.from_legacy(causal=True, window=window or 0)
-    elif window is not None:
-        raise ValueError("pass either mask= or the legacy window= kwarg, "
-                         "not both")
+        mask = mk.causal()
     if mask.kinds - {"causal", "sliding_window"}:
         raise ValueError(
             f"dist_decode_attn serves causal/sliding_window masks only "

@@ -930,11 +930,279 @@ def plan_capable(schedule: str, mask: MaskSpec) -> bool:
     return schedule == "ring"
 
 
+def ulysses_capable(mask: MaskSpec, P: int, Hq: int, Hkv: int, *,
+                    include_bwd: bool = True) -> bool:
+    """Can the bespoke ulysses baseline serve this call *without raising at
+    execution time*?  Forward needs both head counts divisible by P
+    (``_fwd_ulysses`` raises otherwise); a backward additionally rules out
+    prefix_lm and non-causal sliding windows, because the baselines reuse
+    the ring backward, whose per-shard chunks cannot see absolute
+    positions / future-direction bands (``_bwd_local`` raises).  The
+    trace-time filter must mirror those runtime checks exactly —
+    ``schedule="auto"`` may never resolve to a name that then raises."""
+    if Hq % P or Hkv % P:
+        return False
+    if include_bwd and mask.prefix_len:
+        return False
+    if include_bwd and mask.window and not mask.causal:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# 2D sequence×head (ring×ulysses) factored plans
+# ---------------------------------------------------------------------------
+#
+# BurstAttention-style mesh factorization: the P sequence-parallel workers
+# are split into a (seq = r) × (head = u) grid, P = r·u.  The global
+# sequence is sharded over the *pair* of axes (seq major, head minor), so a
+# tiled all-to-all over the head sub-axis — DeepSpeed-Ulysses' head scatter
+# — leaves each device with a contiguous T/r sequence shard and Hq/u query
+# heads; any ring-family SchedulePlan then runs unchanged on the seq
+# sub-axis (windowed/document step pruning intact), and the results travel
+# back through the inverse all-to-all.  GQA-aware: query heads always
+# scatter; KV heads scatter when ``Hkv % u == 0`` and are otherwise
+# all-gathered over the head sub-axis with a per-device head *selection*
+# (each device keeps exactly the KV heads its query heads map to, so the
+# inner plan is locally MHA).
+
+PLAN2D_SCHEDULES = PLAN_SCHEDULES
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan2D:
+    """A factored 2D schedule: head scatter over ``u`` devices wrapping the
+    ``inner`` ring-family plan over ``r`` devices (``inner.P == r``,
+    ``inner.Tl == u · Tl_dev``).  ``Hq``/``Hkv`` are the *global* head
+    counts — the head routing is static."""
+    inner: SchedulePlan
+    r: int
+    u: int
+    Hq: int
+    Hkv: int
+    kv_mode: str                   # "scatter" | "replicate"
+
+    @property
+    def name(self) -> str:
+        return f"{self.inner.name}@r{self.r}u{self.u}"
+
+    @property
+    def P(self) -> int:
+        return self.r * self.u
+
+    def cost(self, **kw) -> "PlanCost":
+        return plan2d_cost(self, **kw)
+
+
+def plan2d_capable(schedule: str, mask: MaskSpec, *, r: int, u: int,
+                   Hq: int, Hkv: int) -> bool:
+    """Can the (schedule, r, u) factorization serve this mask × head
+    shape?  Query heads must split evenly over the head sub-axis and the
+    GQA group structure must be uniform; the inner schedule follows the 1D
+    plan capability rules — except at r == 1, where the 'ring' degenerates
+    to one local full-sequence kernel after the head scatter, which can
+    express *any* mask kind (absolute positions exist), prefix_lm and
+    non-causal windows included."""
+    if schedule not in PLAN2D_SCHEDULES:
+        return False
+    if Hq % u or Hq % Hkv:
+        return False
+    if r == 1:
+        return schedule == "ring"
+    return plan_capable(schedule, mask)
+
+
+def build_plan2d(schedule: str, mask: MaskSpec, r: int, u: int,
+                 Tl_dev: int, *, Hq: int, Hkv: int) -> Plan2D:
+    """Build the 2D plan for one factorization: the inner seq-axis plan at
+    P = r over the post-scatter shard length u·Tl_dev, plus the static KV
+    head-routing mode.  Pure python over static ints — trace time."""
+    if not plan2d_capable(schedule, mask, r=r, u=u, Hq=Hq, Hkv=Hkv):
+        raise ValueError(
+            f"2D factorization (schedule={schedule!r}, r={r}, u={u}) "
+            f"cannot serve mask {mask.kind!r} with heads ({Hq}, {Hkv}) — "
+            f"query heads must divide u and the inner schedule must be "
+            f"plan-capable for the mask (any mask goes at r == 1)")
+    inner = build_plan(schedule, mask, r, u * Tl_dev)
+    kv_mode = "scatter" if Hkv % u == 0 else "replicate"
+    return Plan2D(inner=inner, r=r, u=u, Hq=Hq, Hkv=Hkv, kv_mode=kv_mode)
+
+
+def plan2d_head_map(p2: Plan2D, j: int):
+    """Static head routing of head-device ``j`` (python ints — the test
+    simulator's view): ``(q_ids, kv_ids)`` global head indices of the
+    local slots after the scatter.  In scatter mode the KV slots are the
+    device's a2a share; in replicate mode they are the selection
+    ``(global q head) // g`` — locally MHA (one KV slot per query slot)."""
+    Hql = p2.Hq // p2.u
+    q_ids = np.arange(j * Hql, (j + 1) * Hql)
+    if p2.kv_mode == "scatter":
+        Hkvl = p2.Hkv // p2.u
+        kv_ids = np.arange(j * Hkvl, (j + 1) * Hkvl)
+    else:
+        kv_ids = (j * Hql + np.arange(Hql)) // (p2.Hq // p2.Hkv)
+    return q_ids, kv_ids
+
+
+def _a2a_heads(x, axis):
+    """Scatter heads, gather sequence (forward direction of the head
+    all-to-all): (B, Tc, H, …) → (B, u·Tc, H/u, …).  Peer-order concat
+    over the head sub-axis reassembles a contiguous sequence row because
+    the global sequence is sharded (seq major, head minor)."""
+    return lax.all_to_all(x, axis, split_axis=2, concat_axis=1, tiled=True)
+
+
+def _a2a_seq(x, axis):
+    """Inverse direction: split sequence, gather heads."""
+    return lax.all_to_all(x, axis, split_axis=1, concat_axis=2, tiled=True)
+
+
+def _scatter_heads(p2: Plan2D, q, k, v, seg, head_axis):
+    """Head-scatter the per-device shards into the inner plan's layout.
+    Returns (qh, kh, vh, segh, kv_ids); ``kv_ids`` is the traced global-KV
+    selection (replicate mode only) the backward scatters gradients back
+    through."""
+    qh = _a2a_heads(q, head_axis)
+    kv_ids = None
+    if p2.kv_mode == "scatter":
+        kh, vh = _a2a_heads(k, head_axis), _a2a_heads(v, head_axis)
+    else:
+        j = lax.axis_index(head_axis)
+        Hql = p2.Hq // p2.u
+        g = p2.Hq // p2.Hkv
+        kv_ids = (j * Hql + jnp.arange(Hql)) // g
+        kg = lax.all_gather(k, head_axis, axis=1, tiled=True)
+        vg = lax.all_gather(v, head_axis, axis=1, tiled=True)
+        kh = jnp.take(kg, kv_ids, axis=2)
+        vh = jnp.take(vg, kv_ids, axis=2)
+    segh = None if seg is None \
+        else lax.all_gather(seg, head_axis, axis=1, tiled=True)
+    return qh, kh, vh, segh, kv_ids
+
+
+def execute2d_fwd(p2: Plan2D, q, k, v, seg=None, *, seq_axis, head_axis,
+                  tune):
+    """Run a 2D plan forward: head scatter over ``head_axis``, the inner
+    SchedulePlan over ``seq_axis``, inverse scatter home.  Local
+    (per-shard) code for shard_map over the (seq, head) axis pair; returns
+    (o, lse) in the caller's (seq-major, head-minor) sharding."""
+    qh, kh, vh, segh, _ = _scatter_heads(p2, q, k, v, seg, head_axis)
+    o_h, s_h = execute_fwd(p2.inner, qh, kh, vh, segh, axis=seq_axis,
+                           tune=tune)
+    return _a2a_seq(o_h, head_axis), _a2a_seq(s_h, head_axis)
+
+
+def execute2d_bwd(p2: Plan2D, q, k, v, o, lse, do, seg=None, *, seq_axis,
+                  head_axis, tune):
+    """Run a 2D plan backward from saved (o, lse): forward-direction
+    scatters for the operands, the inner plan backward on the seq
+    sub-axis, then gradients home — all-to-all for dq (and dk/dv in
+    scatter mode); in replicate mode the selected-head KV gradients
+    scatter-add into the full head dim, psum over the head sub-axis, and
+    each device keeps its own token chunk."""
+    qh, kh, vh, segh, kv_ids = _scatter_heads(p2, q, k, v, seg, head_axis)
+    oh, doh = _a2a_heads(o, head_axis), _a2a_heads(do, head_axis)
+    lseh = _a2a_heads(lse, head_axis)
+    dqh, dkh, dvh = execute_bwd(p2.inner, qh, kh, vh, oh, lseh, doh, segh,
+                                axis=seq_axis, tune=tune)
+    dq = _a2a_seq(dqh, head_axis)
+    if p2.kv_mode == "scatter":
+        return dq, _a2a_seq(dkh, head_axis), _a2a_seq(dvh, head_axis)
+    B, Tc = k.shape[0], k.shape[1]
+    j = lax.axis_index(head_axis)
+
+    def home(dx, x):
+        full = jnp.zeros((B, Tc * p2.u, p2.Hkv) + x.shape[3:], jnp.float32)
+        full = full.at[:, :, kv_ids].add(dx.astype(jnp.float32))
+        full = lax.psum(full, head_axis)
+        return lax.dynamic_slice_in_dim(full, j * Tc, Tc,
+                                        axis=1).astype(x.dtype)
+
+    return dq, home(dkh, k), home(dvh, v)
+
+
+def plan2d_cost(p2: Plan2D, *, B: int = 1, Dqk: int = 64,
+                Dv: Optional[int] = None, bpe: int = 2,
+                dynamic_seg: bool = False) -> PlanCost:
+    """Static per-device cost of a 2D plan: the inner plan's cost at the
+    factored shapes (Hq/u heads over T/r tokens) plus the head-axis
+    collective traffic (all-to-all factor (u−1)/u, all-gather factor u−1 —
+    analysis/roofline constants)."""
+    from repro.analysis.roofline import a2a_bytes, allgather_bytes
+    Dv = Dqk if Dv is None else Dv
+    u = p2.u
+    Hql = p2.Hq // u
+    Hkv_in = Hql if p2.kv_mode == "replicate" else p2.Hkv // u
+    inner = plan_cost(p2.inner, B=B, Hq=Hql, Hkv=Hkv_in, Dqk=Dqk, Dv=Dv,
+                      bpe=bpe, dynamic_seg=dynamic_seg)
+    Tc = p2.inner.Tl // u                       # per-device tokens
+    q_b = B * Tc * p2.Hq * Dqk * bpe
+    o_b = B * Tc * p2.Hq * Dv * bpe
+    lse_b = B * Tc * p2.Hq * 4
+    kv_b = B * Tc * p2.Hkv * (Dqk + Dv) * bpe
+    seg_b = B * Tc * 4 if dynamic_seg else 0.0
+    if p2.kv_mode == "scatter":
+        kv_in = a2a_bytes(kv_b, u)
+        kv_grad_home = a2a_bytes(kv_b, u)
+    else:
+        kv_in = allgather_bytes(kv_b, u)
+        # ring-allreduce of the full-row f32 KV grads over the head axis
+        kv_grad_home = 2.0 * a2a_bytes(
+            B * (Tc * u) * p2.Hkv * (Dqk + Dv) * 4, u)
+    c_fwd = inner.comm_bytes_fwd + a2a_bytes(q_b + o_b + lse_b, u) \
+        + kv_in + allgather_bytes(seg_b, u)
+    c_bwd = inner.comm_bytes_bwd \
+        + a2a_bytes(2 * q_b + 2 * o_b + lse_b, u) \
+        + kv_in + kv_grad_home + allgather_bytes(seg_b, u)
+    return PlanCost(schedule=p2.name, exec_steps=inner.exec_steps,
+                    total_steps=inner.total_steps,
+                    kernel_calls=inner.kernel_calls,
+                    flops_fwd=inner.flops_fwd, flops_bwd=inner.flops_bwd,
+                    comm_bytes_fwd=c_fwd, comm_bytes_bwd=c_bwd)
+
+
+def factorizations(P: int):
+    """All (r, u) with r·u == P — the 2D search space of
+    ``choose_schedule(..., factorize=True)``."""
+    return [(r, P // r) for r in range(1, P + 1) if P % r == 0]
+
+
+def choose_inner_schedule(mask: MaskSpec, r: int, u: int, *, Tl_dev: int,
+                          B: int = 1, Hq: int = 8,
+                          Hkv: Optional[int] = None, Dqk: int = 64,
+                          Dv: Optional[int] = None, bpe: int = 2,
+                          dynamic_seg: bool = False,
+                          include_bwd: bool = True) -> str:
+    """``schedule="auto"`` for a FIXED (r, u) factorization (the mesh is
+    already built, so only the inner seq-axis schedule is free): cheapest
+    capable ring-family plan by the analytic 2D cost.  zigzag is excluded
+    — its global-layout permutation stays a caller contract."""
+    Hkv = Hq if Hkv is None else Hkv
+    if r == 1:
+        return "ring"
+    scored = []
+    for i, name in enumerate(("balanced", "ring")):
+        if not plan2d_capable(name, mask, r=r, u=u, Hq=Hq, Hkv=Hkv):
+            continue
+        p2 = build_plan2d(name, mask, r, u, Tl_dev, Hq=Hq, Hkv=Hkv)
+        t = plan2d_cost(p2, B=B, Dqk=Dqk, Dv=Dv, bpe=bpe,
+                        dynamic_seg=dynamic_seg) \
+            .time_estimate(include_bwd)["step_s_lower_bound"]
+        scored.append((t, i, name))
+    if not scored:
+        raise ValueError(
+            f"schedule='auto': no capable inner schedule for mask "
+            f"{mask.kind!r} on a 2D (r={r}, u={u}) mesh with heads "
+            f"({Hq}, {Hkv}) — prefix_lm and non-causal sliding windows "
+            f"need r == 1 (head-only scatter) or a single-shard axis")
+    return min(scored)[2]
+
+
 def choose_schedule(mask: MaskSpec, P: int, *, Tl: int, B: int = 1,
                     Hq: int = 8, Hkv: Optional[int] = None, Dqk: int = 64,
                     Dv: Optional[int] = None, bpe: int = 2,
-                    dynamic_seg: bool = False,
-                    include_bwd: bool = True) -> str:
+                    dynamic_seg: bool = False, include_bwd: bool = True,
+                    factorize: bool = False):
     """``schedule="auto"``: pick the cheapest capable schedule for this
     (mask, P, shapes).  Candidates are the plan schedules (zigzag
     excluded — it requires the caller to pre-permute the global layout,
@@ -946,12 +1214,28 @@ def choose_schedule(mask: MaskSpec, P: int, *, Tl: int, B: int = 1,
     outright; otherwise the table's calibrated cost-model coefficients
     rank the candidates; only with no table at all does the uncalibrated
     analytic roofline decide.  Deterministic: ties break toward
-    balanced > ring > ulysses."""
+    balanced > ring > ulysses.
+
+    ``include_bwd`` is both the cost-ranking horizon *and* a capability
+    constraint: with it set, candidates that would raise in the
+    distributed backward (ulysses under prefix_lm / non-causal windows —
+    the baselines reuse the ring backward) are filtered out here, at
+    trace time, so the resolved name never raises at execution time.
+
+    ``factorize=True`` widens the search to the 2D (seq=r, head=u)
+    factorization space and returns a ``(name, r, u)`` triple instead of
+    a name — ranked purely by the analytic cost model (the tuning table's
+    measured rows are 1D walls and would be incommensurable)."""
     Hkv = Hq if Hkv is None else Hkv
+    if factorize:
+        return _choose_factorized(mask, P, Tl=Tl, B=B, Hq=Hq, Hkv=Hkv,
+                                  Dqk=Dqk, Dv=Dv, bpe=bpe,
+                                  dynamic_seg=dynamic_seg,
+                                  include_bwd=include_bwd)
     if P <= 1:
         return "ring"
     names = [n for n in ("balanced", "ring") if plan_capable(n, mask)]
-    if Hq % P == 0 and Hkv % P == 0:
+    if ulysses_capable(mask, P, Hq, Hkv, include_bwd=include_bwd):
         names.append("ulysses")
     if not names:
         raise ValueError(
@@ -995,3 +1279,47 @@ def choose_schedule(mask: MaskSpec, P: int, *, Tl: int, B: int = 1,
             t = cost.time_estimate(include_bwd)["step_s_lower_bound"]
         scored.append((t, order[name], name))
     return min(scored)[2]
+
+
+def _choose_factorized(mask: MaskSpec, P: int, *, Tl: int, B: int,
+                       Hq: int, Hkv: int, Dqk: int, Dv: Optional[int],
+                       bpe: int, dynamic_seg: bool, include_bwd: bool):
+    """The 2D branch of ``choose_schedule``: rank every capable
+    (schedule, r, u) with r·u == P by the analytic cost model and return
+    the cheapest triple.  (r = P, u = 1) entries are today's 1D plans;
+    (r = 1, u = P) is pure head parallelism through the plan path — the
+    ulysses-equivalent, GQA-capable via KV replication, and backward-
+    capable for *any* mask kind because the post-scatter kernel sees the
+    whole sequence.  zigzag is excluded (caller-permutation contract);
+    ties break toward smaller u (fewer head-axis collectives), then
+    balanced > ring."""
+    if P <= 1:
+        return ("ring", 1, 1)
+    order = {"balanced": 0, "ring": 1}
+    scored = []
+    for r, u in factorizations(P):
+        for name in ("balanced", "ring"):
+            if u == 1:
+                if not plan_capable(name, mask):
+                    continue
+                cost = plan_cost(build_plan(name, mask, P, Tl), B=B,
+                                 Hq=Hq, Hkv=Hkv, Dqk=Dqk, Dv=Dv, bpe=bpe,
+                                 dynamic_seg=dynamic_seg)
+            else:
+                if name == "balanced" and r == 1:
+                    continue          # degenerate — identical to ring
+                if not plan2d_capable(name, mask, r=r, u=u, Hq=Hq,
+                                      Hkv=Hkv):
+                    continue
+                p2 = build_plan2d(name, mask, r, u, Tl, Hq=Hq, Hkv=Hkv)
+                cost = plan2d_cost(p2, B=B, Dqk=Dqk, Dv=Dv, bpe=bpe,
+                                   dynamic_seg=dynamic_seg)
+            t = cost.time_estimate(include_bwd)["step_s_lower_bound"]
+            scored.append((t, u, order[name], (name, r, u)))
+    if not scored:
+        raise ValueError(
+            f"schedule='auto': no capable (schedule, r, u) factorization "
+            f"of P={P} for mask {mask.kind!r} with heads ({Hq}, {Hkv}) — "
+            f"head-parallel factorizations need Hq % u == 0 and a uniform "
+            f"GQA group structure")
+    return min(scored)[3]

@@ -22,3 +22,13 @@ def make_local_mesh(seq: int = 1, data: int | None = None):
     if data is None:
         data = n // seq
     return jax.make_mesh((data, seq), ("data", "model"))
+
+
+def make_seq2d_mesh(r: int, u: int, data: int = 1):
+    """Factored sequence×head mesh for the 2D (ring×ulysses) attention
+    plans: ``r·u`` sequence-parallel workers as a (``seq`` = r,
+    ``head`` = u) grid, head minor so the head-axis all-to-all stays
+    intra-group (intra-node on real hardware — BurstAttention's split).
+    Activations shard the sequence over the ("seq", "head") axis *pair*;
+    ``parallel.sharding.make_parallel_config`` picks the axes up by name."""
+    return jax.make_mesh((data, r, u), ("data", "seq", "head"))

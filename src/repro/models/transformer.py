@@ -29,9 +29,9 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import mask as mk
 from repro.core.config import ModelConfig, ParallelConfig
-from repro.core.dist_attention import (DistAttnSpec, dist_attn_bwd,
-                                       dist_attn_fwd, dist_decode_attn,
-                                       dist_flash_attn)
+from repro.core.dist_attention import (DistAttnSpec, Mesh2DSpec,
+                                       dist_attn_bwd, dist_attn_fwd,
+                                       dist_decode_attn, dist_flash_attn)
 from repro.core.mask import MaskSpec
 from repro.core.remat import remat_aware
 from repro.core.attention import chunk_attn, paged_decode_attn
@@ -65,7 +65,17 @@ class Runtime:
 
     @property
     def seq_size(self) -> int:
-        return mesh_axis_size(self.mesh, self.par.seq_axis)
+        """Total sequence-parallel workers P — the (seq × head) product
+        on a factored 2D mesh."""
+        return mesh_axis_size(self.mesh, self.par.seq_axis) \
+            * self.head_size
+
+    @property
+    def head_size(self) -> int:
+        """Size u of the head sub-axis (1 without a 2D mesh)."""
+        if self.par.head_axis is None:
+            return 1
+        return mesh_axis_size(self.mesh, self.par.head_axis)
 
 
 def _zigzag_ok(cfg: ModelConfig) -> bool:
@@ -84,7 +94,18 @@ def _attn_spec(cfg: ModelConfig, rt: Runtime, *, causal=True, window=None,
     if sched == "zigzag" and not _zigzag_ok(cfg):
         sched = "balanced"                      # graceful fallback
     mask = MaskSpec(causal=causal, window=int(w or 0), document=document)
-    if sched != "auto":                          # auto defers to the plans
+    mesh2d = None
+    if rt.head_size > 1:
+        # factored 2D mesh: ring-family plans on the seq sub-axis after
+        # the head scatter; baselines don't exist on the axis pair
+        mesh2d = Mesh2DSpec(
+            r=rt.seq_size // rt.head_size, u=rt.head_size,
+            seq_axis=rt.par.seq_axis, head_axis=rt.par.head_axis)
+        if sched not in ("auto", "ring", "balanced", "zigzag"):
+            sched = "balanced" if (causal and mesh2d.r > 1) else "ring"
+        if mesh2d.r > 1 and not causal and sched != "ring":
+            sched = "ring"                       # bidirectional encoders
+    elif sched != "auto":                        # auto defers to the plans
         if not causal and sched not in ("ulysses", "rsa"):
             # bidirectional encoders; a non-causal *window* has future-
             # direction bands only absolute-position schedules can see
@@ -93,7 +114,7 @@ def _attn_spec(cfg: ModelConfig, rt: Runtime, *, causal=True, window=None,
             sched = "balanced"                   # windowed plans truncate
     return DistAttnSpec(
         axis=rt.par.seq_axis, axis_size=rt.seq_size, schedule=sched,
-        mask=mask, scale=scale, impl=rt.impl)
+        mask=mask, scale=scale, impl=rt.impl, mesh2d=mesh2d)
 
 
 def _decode_mask(window) -> MaskSpec:

@@ -52,9 +52,15 @@ def make_parallel_config(mesh: Mesh, shape: ShapeSpec,
         elif shape.kind == "decode" and a == "data":
             extra_seq.append(a)
     fsdp = tuple(a for a in ("pod", "data") if a in names)
-    return ParallelConfig(batch_axes=tuple(batch_axes), seq_axis="model",
+    # a 2D (seq × head) mesh (launch.mesh.make_seq2d_mesh) names its
+    # sequence sub-axis "seq" and exposes "head" for the ulysses-style
+    # head scatter; legacy meshes keep the single "model" axis
+    seq_axis = "seq" if "seq" in names else "model"
+    head_axis = "head" if "head" in names else None
+    return ParallelConfig(batch_axes=tuple(batch_axes), seq_axis=seq_axis,
                           extra_seq_axes=tuple(extra_seq), fsdp_axes=fsdp,
-                          schedule=schedule, remat=remat)
+                          schedule=schedule, remat=remat,
+                          head_axis=head_axis)
 
 
 def _largest_divisible_dim(shape, skip, n):

@@ -213,16 +213,17 @@ def test_resolve_matches_on_mask_kinds():
         registry._REGISTRY.pop("no-docs-test", None)
 
 
-def test_legacy_shim_warns_and_matches():
-    """The deprecated kwarg triple still works through chunk_attn (one
-    DeprecationWarning per process) and produces the same MaskSpec path."""
+def test_legacy_kwargs_removed():
+    """The pre-MaskSpec kwarg triple is gone from chunk_attn: passing any
+    of causal/rel_offset/window — alone or alongside mask= — raises
+    ``TypeError`` with the migration hint, and ``mask=None`` keeps its
+    full-attention default."""
     q, k, v, _ = _mk(seed=8)
-    mk._DEPRECATION_WARNED.clear()
-    with pytest.warns(DeprecationWarning):
-        o_l, _ = chunk_attn(q, k, v, causal=True, rel_offset=96, window=40,
-                            impl="ref")
-    o_m, _ = chunk_attn(q, k, v, mask=mk.sliding_window(40, rel_offset=96),
-                        impl="ref")
-    np.testing.assert_allclose(np.asarray(o_l), np.asarray(o_m))
-    with pytest.raises(ValueError, match="not both"):
-        chunk_attn(q, k, v, mask=mk.causal(), causal=True)
+    for kw in (dict(causal=True), dict(window=40), dict(rel_offset=96),
+               dict(causal=True, rel_offset=96, window=40),
+               dict(mask=mk.causal(), causal=True)):
+        with pytest.raises(TypeError, match="was removed.*mask="):
+            chunk_attn(q, k, v, impl="ref", **kw)
+    o_none, _ = chunk_attn(q, k, v, impl="ref")
+    o_full, _ = chunk_attn(q, k, v, mask=mk.full(), impl="ref")
+    np.testing.assert_allclose(np.asarray(o_none), np.asarray(o_full))

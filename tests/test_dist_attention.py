@@ -116,6 +116,7 @@ for sched, window in [("balanced",0), ("ring",40)]:
 def test_decode_attention(subproc):
     out = subproc("""
 import jax, jax.numpy as jnp
+from repro.core import mask as mk
 from repro.core.dist_attention import dist_decode_attn
 from repro.kernels.ref import chunk_attn_ref
 mesh = jax.make_mesh((2,4), ("data","model"))
@@ -131,7 +132,7 @@ for axes, bspec in [(("model",),("data",)), (("data","model"),None)]:
     assert float(jnp.abs(o-o_ref).max()) < 2e-5, axes
     print("OK decode", axes)
 ow_ref,_ = chunk_attn_ref(qd,kf,vf,causal=False,q_offset=N,window=100)
-ow = jax.jit(lambda *a: dist_decode_attn(*a,mesh=mesh,seq_axes=("model",),batch_axes=("data",),window=100))(qd,k,v,k1,v1)
+ow = jax.jit(lambda *a: dist_decode_attn(*a,mesh=mesh,seq_axes=("model",),batch_axes=("data",),mask=mk.sliding_window(100)))(qd,k,v,k1,v1)
 assert float(jnp.abs(ow-ow_ref).max()) < 2e-5
 print("OK decode window")
 """)
@@ -280,15 +281,15 @@ print("OK latent ring", d)
 
 # ------------------------------------------------------- MaskSpec era tests
 
-def test_spec_validation_and_legacy_shim():
+def test_spec_validation_and_removed_kwargs():
     """Satellite: schedule typos raise at spec construction (no silent ring
-    fallthrough), schedule-capability mismatches raise, and the deprecated
-    causal/window kwargs still map onto a MaskSpec (with a warning).
-    Plan-IR era: balanced/zigzag accept sliding windows (plans truncate)
-    and the ring family accepts static document boundaries (executors
-    derive per-shard segment IDs) — those constructions must NOT raise."""
-    import warnings
-
+    fallthrough), schedule-capability mismatches raise, and the removed
+    pre-MaskSpec causal/window kwargs raise ``TypeError`` with the
+    migration hint (they were deprecation shims for five PRs with zero
+    in-repo callers).  Plan-IR era: balanced/zigzag accept sliding windows
+    (plans truncate) and the ring family accepts static document
+    boundaries (executors derive per-shard segment IDs) — those
+    constructions must NOT raise."""
     import pytest as pt
 
     from repro.core import mask as mk
@@ -312,8 +313,6 @@ def test_spec_validation_and_legacy_shim():
     with pt.raises(ValueError, match="future-direction"):
         da.DistAttnSpec(axis_size=8, schedule="ring",
                         mask=mk.sliding_window(64, causal=False))
-    with pt.raises(ValueError, match="not both"):
-        da.DistAttnSpec(schedule="ring", mask=mk.causal(), causal=True)
     # plan-era capability widenings: these construct fine now
     da.DistAttnSpec(axis_size=8, schedule="balanced",
                     mask=mk.sliding_window(64))
@@ -333,28 +332,27 @@ def test_spec_validation_and_legacy_shim():
     spec_r = da.DistAttnSpec(axis_size=8, schedule="rsa", mask=mk.document())
     with pt.raises(ValueError, match="segments"):
         da._fwd_local(spec_r, None, None, None, None)
-    mk._DEPRECATION_WARNED.clear()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        spec = da.DistAttnSpec(axis_size=8, schedule="ring", causal=True,
-                               window=40)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert spec.mask == mk.sliding_window(40)
-    # default stays causal/full — and balanced accepts it
+    # the removed legacy kwargs are hard errors now — alone or mixed
+    with pt.raises(TypeError, match="was removed"):
+        da.DistAttnSpec(schedule="ring", mask=mk.causal(), causal=True)
+    with pt.raises(TypeError, match="mask=repro.core.mask"):
+        da.DistAttnSpec(axis_size=8, schedule="ring", causal=True,
+                        window=40)
+    with pt.raises(TypeError, match="was removed"):
+        da.DistAttnSpec(window=40)
+    # the mask=None default stays causal — and balanced accepts it
     assert da.DistAttnSpec(axis_size=8).mask == mk.causal()
-    # the decode entry point's window= kwarg is a deprecated shim too
-    mk._DEPRECATION_WARNED.clear()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        import jax
-        mesh = jax.make_mesh((1, 1), ("data", "model"))
-        import jax.numpy as jnp
-        z4 = jnp.zeros((1, 1, 2, 8))
-        zc = jnp.zeros((1, 4, 2, 8))
+    # the decode entry point's window= kwarg is removed too
+    import jax
+    import jax.numpy as jnp
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    z4 = jnp.zeros((1, 1, 2, 8))
+    zc = jnp.zeros((1, 4, 2, 8))
+    with pt.raises(TypeError, match=r"dist_decode_attn\(window=\) was "
+                                    r"removed"):
         da.dist_decode_attn(z4, zc, zc, z4, z4, mesh=mesh,
                             seq_axes=("model",), batch_axes=None, window=2)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    with pt.raises(ValueError, match="not both"):
+    with pt.raises(TypeError, match="was removed"):
         da.dist_decode_attn(z4, zc, zc, z4, z4, mesh=mesh,
                             seq_axes=("model",), batch_axes=None,
                             mask=mk.causal(), window=2)
@@ -362,6 +360,21 @@ def test_spec_validation_and_legacy_shim():
         da.dist_decode_attn(z4, zc, zc, z4, z4, mesh=mesh,
                             seq_axes=("model",), batch_axes=None,
                             mask=mk.document())
+    # 2D (seq×head) factorization validation
+    with pt.raises(ValueError, match="must equal"):
+        da.DistAttnSpec(axis_size=8, mesh2d=da.Mesh2DSpec(r=2, u=2))
+    with pt.raises(ValueError, match="ring-family plans only"):
+        da.DistAttnSpec(axis_size=8, schedule="ulysses", mask=mk.causal(),
+                        mesh2d=da.Mesh2DSpec(r=4, u=2))
+    with pt.raises(ValueError, match="distinct"):
+        da.Mesh2DSpec(r=2, u=4, seq_axis="x", head_axis="x")
+    # prefix_lm: rejected on a multi-shard seq sub-axis, served at r == 1
+    # (head-only scatter — the local kernel sees absolute positions)
+    with pt.raises(ValueError, match="prefix_lm"):
+        da.DistAttnSpec(axis_size=8, schedule="ring", mask=mk.prefix_lm(8),
+                        mesh2d=da.Mesh2DSpec(r=4, u=2))
+    da.DistAttnSpec(axis_size=8, schedule="ring", mask=mk.prefix_lm(8),
+                    mesh2d=da.Mesh2DSpec(r=1, u=8))
 
 
 def test_document_mask_all_schedules(subproc):
@@ -444,7 +457,7 @@ for axes, bspec in [(("model",),("data",)), (("data","model"),None)]:
         # window keeps keys with position > N - window
         o_ref,_ = chunk_attn_ref(qd, kf, vf, mask=mk.MaskSpec(window=window, q_offset=N))
         o = jax.jit(lambda *a: dist_decode_attn(*a, mesh=mesh, seq_axes=axes,
-                    batch_axes=bspec, window=window))(qd,k,v,k1,v1)
+                    batch_axes=bspec, mask=mk.sliding_window(window)))(qd,k,v,k1,v1)
         err = float(jnp.abs(o-o_ref).max())
         assert err < 2e-5, (axes, window, err)
     print("OK windowed decode", axes)

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro import compat
+from repro.core import mask as mk
 from repro.core.attention import chunk_attn, chunk_attn_bwd
 from repro.core.remat import apply_policy, remat_aware
 
@@ -22,10 +23,10 @@ def _layer_fns():
         return q, k, v
 
     def attn_fwd(qkv):
-        return chunk_attn(*qkv, causal=True)
+        return chunk_attn(*qkv, mask=mk.causal())
 
     def attn_bwd(qkv, o, lse, do):
-        return chunk_attn_bwd(*qkv, o, lse, do, causal=True)
+        return chunk_attn_bwd(*qkv, o, lse, do, mask=mk.causal())
 
     def post(p, x, o):
         h = x[0] if isinstance(x, tuple) else x
